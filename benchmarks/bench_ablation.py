@@ -1,0 +1,33 @@
+"""Paper Tab. IV: ablation — PICASSO vs w/o Packing, w/o Interleaving,
+w/o Caching on the paper's production-style models (W&D / CAN / MMoE),
+CPU-scaled."""
+from repro.configs.paper_models import can, mmoe, widedeep
+from repro.train.train_step import TrainConfig
+
+from benchmarks.common import bench_train_ips, emit
+
+GB = 128
+
+
+def run():
+    models = {"wd": widedeep(scale=0.05), "can": can(scale=0.01),
+              "mmoe": mmoe(scale=0.05)}
+    for name, cfg in models.items():
+        rows = {
+            "picasso": bench_train_ips(cfg, GB, TrainConfig()),
+            "no_packing": bench_train_ips(cfg, GB, TrainConfig(),
+                                          enable_packing=False),
+            "no_interleaving": bench_train_ips(
+                cfg, GB, TrainConfig(use_interleave=False, pipeline_micro=False),
+                n_interleave=1),
+            "no_caching": bench_train_ips(cfg, GB, TrainConfig(use_cache=False),
+                                          enable_cache=False),
+        }
+        base = rows["picasso"]["ips"]
+        for variant, r in rows.items():
+            emit(f"ablation/{name}/{variant}", r["us_per_call"],
+                 f"ips={r['ips']:.0f};rel={r['ips']/base:.2f};hits={r['hits']}")
+
+
+if __name__ == "__main__":
+    run()

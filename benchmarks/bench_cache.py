@@ -1,0 +1,31 @@
+"""Paper Tab. VI: HybridHash hit ratio and IPS vs hot-storage size."""
+import jax
+
+from repro.configs.paper_models import widedeep
+from repro.train.train_step import TrainConfig
+
+from benchmarks.common import bench_train_ips, emit
+
+GB = 128
+
+
+def run():
+    cfg = widedeep(scale=0.05)
+    base_ips = None
+    for hot_bytes in (0, 1 << 12, 1 << 14, 1 << 16, 1 << 18):
+        if hot_bytes == 0:
+            r = bench_train_ips(cfg, GB, TrainConfig(use_cache=False),
+                                enable_cache=False, iters=8)
+        else:
+            r = bench_train_ips(cfg, GB, TrainConfig(), hot_bytes=hot_bytes,
+                                flush_iters=4, warmup_iters=2, iters=8)
+        ids_per_batch = GB * sum(f.max_len for f in cfg.fields)
+        hit_ratio = r["hits"] / ids_per_batch
+        if base_ips is None:
+            base_ips = r["ips"]
+        emit(f"cache/hot={hot_bytes}", r["us_per_call"],
+             f"ips={r['ips']:.0f};rel={r['ips']/base_ips:+.2f};hit={hit_ratio:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Paper Tab. VIII: IPS vs number of feature fields (synthetic duplication).
+
+The paper duplicates Product-2's fields k times and checks whether IPS decays
+slower than the arithmetic-progression (AP) prediction IPS_1/k thanks to
+packing. We duplicate the W&D field set."""
+import dataclasses
+
+from repro.configs.base import FeatureField
+from repro.configs.paper_models import widedeep
+from repro.train.train_step import TrainConfig
+
+from benchmarks.common import bench_train_ips, emit
+
+GB = 64
+
+
+def dup_fields(cfg, k):
+    fields = []
+    for j in range(k):
+        for f in cfg.fields:
+            fields.append(dataclasses.replace(f, name=f"{f.name}_x{j}"))
+    return dataclasses.replace(cfg, fields=tuple(fields), name=f"{cfg.name}x{k}")
+
+
+def run():
+    cfg = widedeep(scale=0.02)
+    ips1 = None
+    for k in (1, 2, 4, 8):
+        r = bench_train_ips(dup_fields(cfg, k), GB, TrainConfig())
+        if ips1 is None:
+            ips1 = r["ips"]
+        ap = ips1 / k
+        emit(f"fields/x{k}", r["us_per_call"],
+             f"ips={r['ips']:.0f};ap={ap:.0f};vs_ap={(r['ips']-ap)/ap:+.1%}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,25 @@
+"""Paper Fig. 14: throughput vs number of K-interleaving groups, and vs
+number of D-interleaving micro-batches."""
+from repro.configs.paper_models import can, mmoe
+from repro.train.train_step import TrainConfig
+
+from benchmarks.common import bench_train_ips, emit
+
+GB = 128
+
+
+def run():
+    models = {"can": can(scale=0.01), "mmoe": mmoe(scale=0.05)}
+    for name, cfg in models.items():
+        for n_ilv in (1, 2, 4):
+            r = bench_train_ips(cfg, GB, TrainConfig(), n_interleave=n_ilv)
+            emit(f"interleave/{name}/k_groups={n_ilv}", r["us_per_call"],
+                 f"ips={r['ips']:.0f}")
+        for n_micro in (1, 2, 4):
+            r = bench_train_ips(cfg, GB, TrainConfig(), n_micro=n_micro)
+            emit(f"interleave/{name}/micro={n_micro}", r["us_per_call"],
+                 f"ips={r['ips']:.0f}")
+
+
+if __name__ == "__main__":
+    run()

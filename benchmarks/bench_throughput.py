@@ -1,0 +1,34 @@
+"""Paper Tab. III / Fig. 10: training throughput of the benchmark models
+(DLRM / DeepFM / DIN / DCN-v2) under PICASSO vs the PS baseline strategy.
+CPU-scaled smoke configs; the *ratio* is the reproduced quantity."""
+from repro.configs import get_config
+from repro.configs.paper_models import din, dlrm
+from repro.train.train_step import TrainConfig
+
+from benchmarks.common import bench_train_ips, emit
+
+GB = 128
+
+
+def models():
+    return {
+        "dlrm": dlrm(criteo=False, scale=0.01),
+        "deepfm": get_config("deepfm", smoke=True),
+        "dcn-v2": get_config("dcn-v2", smoke=True),
+        "din": din(scale=0.01),
+    }
+
+
+def run():
+    for name, cfg in models().items():
+        pic = bench_train_ips(cfg, GB, TrainConfig(strategy="picasso"))
+        ps = bench_train_ips(cfg, GB, TrainConfig(strategy="ps", use_cache=False),
+                             enable_cache=False)
+        speedup = ps["us_per_call"] / pic["us_per_call"]
+        emit(f"throughput/{name}/picasso", pic["us_per_call"], f"ips={pic['ips']:.0f}")
+        emit(f"throughput/{name}/ps", ps["us_per_call"], f"ips={ps['ips']:.0f}")
+        emit(f"throughput/{name}/speedup", 0.0, f"x{speedup:.2f}")
+
+
+if __name__ == "__main__":
+    run()

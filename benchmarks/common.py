@@ -1,0 +1,77 @@
+"""Shared benchmark harness utilities (CPU-scaled paper-table analogues)."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import WDLConfig
+from repro.core.packing import make_plan
+from repro.data.synthetic import make_batch
+from repro.dist.sharding import batch_specs, to_named
+from repro.launch.mesh import make_mesh
+from repro.models.wdl import WDLModel
+from repro.train.train_step import TrainConfig, init_state, make_train_step
+
+AXES = ("data", "model")
+
+
+def mesh1():
+    return make_mesh((1, 1), AXES)
+
+
+def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall time per call in microseconds."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def train_setup(cfg: WDLConfig, gb: int, mesh=None, tcfg: Optional[TrainConfig] = None,
+                seed: int = 0, **plan_kw):
+    mesh = mesh or mesh1()
+    world = int(mesh.devices.size)
+    plan_kw.setdefault("hot_bytes", 1 << 16)
+    plan_kw.setdefault("flush_iters", 10)
+    plan_kw.setdefault("warmup_iters", 5)
+    plan = make_plan(cfg, world=world, per_device_batch=gb // world, **plan_kw)
+    model = WDLModel(cfg, plan)
+    state = init_state(model, plan, jax.random.PRNGKey(seed), mesh=mesh, axes=AXES)
+    step, _ = make_train_step(model, plan, mesh, AXES, gb, tcfg or TrainConfig())
+    batch = make_batch(cfg, gb, np.random.default_rng(seed))
+    batch = jax.device_put(batch, to_named(mesh, batch_specs(batch, AXES)))
+
+    def stepper(state):
+        s, m = step(state, batch)
+        return s, m
+
+    return stepper, state, plan, model
+
+
+def bench_train_ips(cfg: WDLConfig, gb: int, tcfg: Optional[TrainConfig] = None,
+                    iters: int = 5, **plan_kw) -> Dict[str, float]:
+    stepper, state, plan, _ = train_setup(cfg, gb, tcfg=tcfg, **plan_kw)
+    state, m = stepper(state)  # compile + warm
+    state, m = stepper(state)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        state, m = stepper(state)
+        jax.block_until_ready(m["loss"])
+        ts.append(time.perf_counter() - t0)
+    us = float(np.median(ts) * 1e6)
+    return {"us_per_call": us, "ips": gb / (us / 1e6),
+            "hits": int(m["cache_hits"]), "overflow": int(m["overflow"])}
+
+
+def emit(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.1f},{derived}", flush=True)

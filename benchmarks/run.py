@@ -1,0 +1,47 @@
+"""Benchmark driver — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. CPU-scaled configs: the *ratios*
+(PICASSO vs baseline, ablation deltas, cache hit curves) are the reproduced
+quantities; absolute TPU numbers come from the dry-run roofline
+(EXPERIMENTS.md §Roofline), not from this container.
+"""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma list: throughput,ablation,packing,interleave,cache,fields,scaling")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_ablation, bench_cache, bench_fields,
+                            bench_interleave, bench_packing, bench_scaling,
+                            bench_throughput)
+
+    suites = {
+        "throughput": bench_throughput.run,   # paper Tab. III / Fig. 10
+        "ablation": bench_ablation.run,       # paper Tab. IV
+        "packing": bench_packing.run,         # paper Tab. V
+        "interleave": bench_interleave.run,   # paper Fig. 14
+        "cache": bench_cache.run,             # paper Tab. VI
+        "fields": bench_fields.run,           # paper Tab. VIII
+        "scaling": bench_scaling.run,         # paper Fig. 15
+    }
+    only = [s for s in args.only.split(",") if s] or list(suites)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in only:
+        try:
+            suites[name]()
+        except Exception as e:  # noqa: BLE001
+            failed.append(name)
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

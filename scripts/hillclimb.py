@@ -1,0 +1,69 @@
+"""§Perf hillclimb driver: run tagged dry-run variants of the three chosen
+cells and log hypothesis -> change -> before/after into results/perf/.
+
+Usage: PYTHONPATH=src python scripts/hillclimb.py [cellname ...]
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_XLA_FLAGS")
+                           or "--xla_force_host_platform_device_count=256")
+
+import json
+import sys
+from pathlib import Path
+
+from repro.launch.dryrun import run_cell
+from repro.launch.mesh import make_production_mesh
+from repro.train.train_step import TrainConfig
+
+OUT = Path("results/perf")
+
+# variant name -> (arch, shape, cell_kw, plan_kw)
+# v0 baselines are the sweep records in results/dryrun (paper-faithful defaults).
+VARIANTS = {
+    # ---- cell 1: deepfm x train_batch (paper-representative) --------------
+    "deepfm_v1_stale_cache": (
+        "deepfm", "train_batch",
+        {"tcfg": TrainConfig(cache_update="stale", flush_in_step=False)}, {}),
+    "deepfm_v2_stale_bf16psum": (
+        "deepfm", "train_batch",
+        {"tcfg": TrainConfig(cache_update="stale", flush_in_step=False,
+                             grad_compression="bf16")}, {}),
+    "deepfm_v3_cap_slack1": (
+        "deepfm", "train_batch",
+        {"tcfg": TrainConfig(cache_update="stale", flush_in_step=False,
+                             grad_compression="bf16")},
+        {"hot_bytes": 1 << 26, "capacity_slack": 1.25}),
+    # ---- cell 2: mistral-nemo-12b x train_4k (most collective-bound:
+    #      contraction-dim FSDP sharding -> activation-sized partial-sum
+    #      all-reduces, 1.5TB/step/device) ---------------------------------
+    "nemo_v1_zero1": ("mistral-nemo-12b", "train_4k",
+                      {"lm_kw": {"shard_mode": "zero1"}}, None),
+    "nemo_v2_zero1_chunk1k": ("mistral-nemo-12b", "train_4k",
+                              {"lm_kw": {"shard_mode": "zero1",
+                                         "attn_chunk": 1024}}, None),
+    # ---- cell 3: mixtral-8x22b x train_4k (worst roofline fraction:
+    #      GSPMD replicates the MoE dispatch buffers -> TB-scale all-reduce) -
+    "mixtral_v1_moe_shard": ("mixtral-8x22b", "train_4k",
+                             {"lm_kw": {"moe_shard": True}}, None),
+    "mixtral_v2_moeshard_zero1": (
+        "mixtral-8x22b", "train_4k",
+        {"lm_kw": {"moe_shard": True, "shard_mode": "zero1"}}, None),
+}
+
+
+def main():
+    names = sys.argv[1:] or list(VARIANTS)
+    mesh = make_production_mesh(multi_pod=False)
+    for name in names:
+        arch, shape, cell_kw, plan_kw = VARIANTS[name]
+        rec = run_cell(arch, shape, False, OUT, mesh=mesh, tag=f"__{name}",
+                       plan_kw=plan_kw, cell_kw=cell_kw)
+        ok = "OK " if rec.get("ok") else "FAIL"
+        print(f"[{ok}] {name}: bound={rec.get('bound')} "
+              f"c={rec.get('compute_s', 0):.3e} m={rec.get('memory_s', 0):.3e} "
+              f"x={rec.get('collective_s', 0):.3e} step={rec.get('step_s', 0):.3e} "
+              f"{rec.get('error', '')[:200]}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

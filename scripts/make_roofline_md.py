@@ -1,0 +1,75 @@
+"""Render EXPERIMENTS.md tables from results/dryrun/*.json."""
+import glob
+import json
+import sys
+from collections import defaultdict
+
+
+def fmt(x, digits=2):
+    if x is None:
+        return "-"
+    if x == 0:
+        return "0"
+    return f"{x:.{digits}e}"
+
+
+def load(dirname="results/dryrun"):
+    recs = []
+    for f in sorted(glob.glob(f"{dirname}/*.json")):
+        r = json.load(open(f))
+        if not r.get("tag"):
+            recs.append(r)
+    return recs
+
+
+def roofline_table(recs, mesh):
+    rows = ["| arch | shape | compute (s) | memory (s) | collective (s) | bound | "
+            "MODEL_FLOPs/dev | useful ratio | note |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != mesh or not r.get("ok"):
+            continue
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt(r.get('compute_s'))} | "
+            f"{fmt(r.get('memory_s'))} | {fmt(r.get('collective_s'))} | "
+            f"**{r.get('bound')}** | {fmt(r.get('model_flops'))} | "
+            f"{fmt(r.get('useful_ratio'), 3)} | {r.get('note','')} |")
+    return "\n".join(rows)
+
+
+def dryrun_table(recs):
+    rows = ["| arch | shape | mesh | compile (s) | peak bytes/dev | HLO GFLOPs/dev | "
+            "HLO GB/dev | collective GB/dev (wire) | collectives |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if not r.get("ok"):
+            continue
+        mem = r.get("memory") or {}
+        peak = mem.get("peak_bytes") or mem.get("temp_bytes")
+        colls = ",".join(f"{k}:{int(v['count'])}" for k, v in
+                         sorted((r.get("collectives") or {}).items()))
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r.get('compile_s')} | "
+            f"{fmt(peak)} | {r['hlo_flops']/1e9:.1f} | {r['hlo_bytes']/1e9:.2f} | "
+            f"{r['collective_wire_bytes']/1e9:.3f} | {colls} |")
+    return "\n".join(rows)
+
+
+def failures(recs):
+    out = []
+    for r in recs:
+        if not r.get("ok"):
+            out.append(f"- {r['arch']} x {r['shape']} ({r['mesh']}): {r.get('error')}")
+    return "\n".join(out) or "(none)"
+
+
+if __name__ == "__main__":
+    recs = load(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun")
+    print("## Dry-run (both meshes)\n")
+    print(dryrun_table(recs))
+    print("\n## Roofline (single-pod 16x16)\n")
+    print(roofline_table(recs, "16x16"))
+    print("\n## Roofline (multi-pod 2x16x16)\n")
+    print(roofline_table(recs, "2x16x16"))
+    print("\n## Failures\n")
+    print(failures(recs))

@@ -1,0 +1,41 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import time
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.packing import make_plan
+from repro.data.synthetic import make_batch
+from repro.launch.mesh import make_test_mesh
+from repro.models.wdl import WDLModel
+from repro.train.train_step import TrainConfig, init_state, make_train_step
+from repro.dist.sharding import batch_specs, to_named
+
+ARCH = os.environ.get("ARCH", "deepfm")
+mesh = make_test_mesh(4, 2)
+axes = ("data", "model")
+GB = 64  # global batch
+
+cfg = get_config(ARCH, smoke=True)
+plan = make_plan(cfg, world=8, per_device_batch=GB // 8, hot_bytes=1 << 14,
+                 flush_iters=3, warmup_iters=2, n_interleave=2)
+print(f"{ARCH}: {len(plan.groups)} packed groups, caps={plan.capacity}, "
+      f"micro={plan.microbatch}, ilv={plan.interleave}, cache={plan.cache_rows}")
+
+model = WDLModel(cfg, plan)
+with jax.default_device(jax.devices()[0]):
+    pass
+state = init_state(model, plan, jax.random.PRNGKey(0), mesh=mesh, axes=axes)
+step_fn, _ = make_train_step(model, plan, mesh, axes, GB, TrainConfig())
+
+rng = np.random.default_rng(0)
+t0 = time.time()
+for i in range(6):
+    batch = make_batch(cfg, GB, rng)
+    batch = jax.device_put(batch, to_named(mesh, batch_specs(batch, axes)))
+    state, m = step_fn(state, batch)
+    print(f"step {int(m['step'])}: loss={float(m['loss']):.4f} "
+          f"ovf={int(m['overflow'])} hits={int(m['cache_hits'])}")
+print(f"{time.time()-t0:.1f}s; loss finite:", bool(jnp.isfinite(m["loss"])))

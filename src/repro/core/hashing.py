@@ -1,0 +1,39 @@
+"""ID scrambling for shard load-balance.
+
+Paper §II-D(3): skewed ID distributions unbalance shards. Real pipelines apply
+the hashing trick when assigning raw IDs to table rows; we make that explicit
+with a fixed bijective affine scramble per table so the zipf head spreads
+uniformly over row blocks (and therefore over model-parallel shards), while
+per-row frequency skew (what HybridHash exploits) is preserved.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+_KNUTH = 2654435761  # odd => bijective mod 2^k; good mixing constant
+
+
+def _coprime_mult(vocab: int) -> int:
+    """A multiplier coprime with ``vocab`` (bijective affine map mod vocab)."""
+    a = _KNUTH % vocab
+    if a == 0:
+        a = 1
+    while np.gcd(a, vocab) != 1:
+        a += 1
+    return int(a)
+
+
+def scramble(ids: jnp.ndarray, vocab: int, salt: int = 0) -> jnp.ndarray:
+    """Affine scramble of ids into [0, vocab) (uint32 hashing trick).
+
+    Bijective mod 2^32 (odd multiplier); the final ``% vocab`` is the standard
+    hashing-trick fold — near-uniform spread of the zipf head across shards.
+    """
+    a = jnp.uint32(_coprime_mult(vocab) & 0xFFFFFFFF)
+    return ((ids.astype(jnp.uint32) * a + jnp.uint32(salt)) % jnp.uint32(vocab)).astype(jnp.int32)
+
+
+def scramble_np(ids: np.ndarray, vocab: int, salt: int = 0) -> np.ndarray:
+    a = _coprime_mult(vocab)
+    return ((ids.astype(np.uint64) * a + salt) % vocab).astype(np.int32)

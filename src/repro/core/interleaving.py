@@ -1,0 +1,28 @@
+"""PICASSO Interleaving (paper §III-C).
+
+K-Interleaving: packed lookups are issued in planner-assigned waves with
+``optimization_barrier`` pinning wave boundaries, so comm-bound Shuffle ops of
+wave k+1 can overlap the memory/compute-bound Gather+SegmentReduction of wave
+k instead of all all_to_alls racing for ICI at once (Fig. 8c).
+
+D-Interleaving: the train/serve steps process micro-batches in a software
+pipeline where the (comm-bound) lookup of micro-batch i+1 is issued before the
+(compute-bound) dense stage of micro-batch i (Fig. 8b); see
+repro/train/train_step.py. Sparse updates of micro-batch i land after the
+lookup of i+1 was issued — the same bounded-staleness-within-a-batch the
+paper's pipeline has; n_micro=1 recovers exact semantics.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Sequence, Tuple
+
+import jax
+
+
+def wave_barrier(values: Sequence[Any]) -> List[Any]:
+    """Pin completion of a K-interleave wave (control-dependency boundary)."""
+    if not values:
+        return []
+    flat, tree = jax.tree.flatten(tuple(values))
+    flat = jax.lax.optimization_barrier(tuple(flat))
+    return list(jax.tree.unflatten(tree, flat))

@@ -1,0 +1,396 @@
+"""PICASSO packed-embedding engine (paper §III-B, §III-D).
+
+Executes one *packed* lookup per D-packed group, model-parallel over the whole
+mesh, inside ``shard_map``:
+
+    ids -> [K-Packed Unique&Partition] -> all_to_all (Shuffle) -> local Gather
+        -> all_to_all back -> Stitch -> (hot-cache merge) -> unique rows
+
+and the exact transposed path for sparse gradients. All shapes are static
+(TPU collectives require it): ``unique`` is sort-based with a fixed output
+size, the Shuffle uses fixed-capacity per-peer buckets sized by the planner
+(Eq. 1 statistics), and the HybridHash hot tier absorbs the skew head that
+would otherwise overflow the buckets.
+
+HybridHash on TPU (see DESIGN.md §2): hot rows are replicated per chip; a hit
+is a local gather with zero ICI traffic. Hit gradients are psum'd (replicas
+stay bit-identical) and applied to the replicated hot tier; the hot tier is
+the authoritative storage for its rows between flushes, so training stays
+*exact* synchronous SGD — flush writes rows+optimizer state back to the owner
+shard and reloads the new top-k set.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Axes = Union[str, Tuple[str, ...]]
+
+
+# ---------------------------------------------------------------------------
+# fixed-shape building blocks (K-Packing: Unique&Partition fused)
+# ---------------------------------------------------------------------------
+
+
+class UniqueResult(NamedTuple):
+    uniq: jnp.ndarray      # [n] ascending; slots >= n_uniq hold ``sentinel``
+    inv: jnp.ndarray       # [n] original position -> unique slot
+    n_uniq: jnp.ndarray    # scalar
+    uvalid: jnp.ndarray    # [n] bool, slot validity
+
+
+def fixed_unique(ids: jnp.ndarray, sentinel: int) -> UniqueResult:
+    """Sort-based unique with static output size == input size."""
+    n = ids.shape[0]
+    order = jnp.argsort(ids)
+    s = ids[order]
+    is_first = jnp.concatenate([jnp.ones((1,), bool), s[1:] != s[:-1]])
+    slot_sorted = (jnp.cumsum(is_first) - 1).astype(jnp.int32)
+    inv = jnp.zeros((n,), jnp.int32).at[order].set(slot_sorted)
+    uniq = jnp.full((n,), sentinel, ids.dtype).at[slot_sorted].set(s)
+    n_uniq = jnp.sum(is_first).astype(jnp.int32)
+    uvalid = jnp.arange(n, dtype=jnp.int32) < n_uniq
+    return UniqueResult(uniq, inv, n_uniq, uvalid)
+
+
+class Routing(NamedTuple):
+    """Unique&Partition output: where each unique slot goes in the Shuffle."""
+
+    owner: jnp.ndarray    # [n] destination shard (== world for drop)
+    pos: jnp.ndarray      # [n] position within the per-peer bucket
+    send_slot: jnp.ndarray  # [n] flattened owner*cap + pos (world*cap = drop)
+    kept: jnp.ndarray     # [n] routed (miss & under capacity)
+    overflow: jnp.ndarray  # scalar count of dropped uniques
+
+
+def partition(uniq: jnp.ndarray, miss: jnp.ndarray, rows_per_shard: int, world: int,
+              capacity: int) -> Routing:
+    """Partition sorted unique ids into fixed-capacity per-owner buckets.
+
+    ``uniq`` ascending => block owner ids are monotone, so the rank of a miss
+    within its owner's bucket is a cumsum difference (no extra sort).
+    """
+    n = uniq.shape[0]
+    owner = jnp.minimum(uniq // rows_per_shard, world).astype(jnp.int32)
+    prefix = jnp.cumsum(miss.astype(jnp.int32)) - miss.astype(jnp.int32)  # exclusive
+    start = jnp.searchsorted(owner, owner, side="left").astype(jnp.int32)
+    pos = prefix - prefix[start]
+    kept = miss & (pos < capacity) & (owner < world)
+    send_slot = jnp.where(kept, owner * capacity + pos, world * capacity).astype(jnp.int32)
+    overflow = jnp.sum(miss & (pos >= capacity))
+    return Routing(owner, pos, send_slot, kept, overflow)
+
+
+def _a2a(x: jnp.ndarray, axes: Axes) -> jnp.ndarray:
+    """all_to_all over (possibly multiple) mesh axes; [world, ...] layout."""
+    return lax.all_to_all(x, axes, split_axis=0, concat_axis=0, tiled=True)
+
+
+# ---------------------------------------------------------------------------
+# forward: Shuffle & Stitch (+ HybridHash read path)
+# ---------------------------------------------------------------------------
+
+
+class LookupCtx(NamedTuple):
+    """Everything the backward/statistics passes need (all static shapes)."""
+
+    uniq: jnp.ndarray
+    inv: jnp.ndarray
+    uvalid: jnp.ndarray
+    hit: jnp.ndarray        # [n] served by hot tier
+    cache_slot: jnp.ndarray  # [n] clamped position in hot_keys
+    routing: Routing
+    recv_ids: jnp.ndarray   # [world, cap] ids this shard served (owner side)
+    recv_local: jnp.ndarray  # [world, cap] local row idx (clamped)
+    recv_valid: jnp.ndarray  # [world, cap]
+
+
+def cache_probe(uniq: jnp.ndarray, uvalid: jnp.ndarray,
+                hot_keys: Optional[jnp.ndarray]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if hot_keys is None or hot_keys.shape[0] == 0:
+        z = jnp.zeros(uniq.shape, bool)
+        return z, jnp.zeros(uniq.shape, jnp.int32)
+    p = jnp.searchsorted(hot_keys, uniq).astype(jnp.int32)
+    p_c = jnp.clip(p, 0, hot_keys.shape[0] - 1)
+    hit = (hot_keys[p_c] == uniq) & uvalid
+    return hit, p_c
+
+
+def mp_lookup(
+    table_shard: jnp.ndarray,      # [rows_per_shard, D]
+    ids: jnp.ndarray,              # [n] packed global row ids
+    *,
+    axes: Axes,
+    world: int,
+    capacity: int,
+    hot_keys: Optional[jnp.ndarray] = None,   # [H] replicated, sorted
+    hot_rows: Optional[jnp.ndarray] = None,   # [H, D] replicated
+) -> Tuple[jnp.ndarray, LookupCtx]:
+    """Forward packed lookup. Returns unique rows [n, D] + routing context."""
+    rps, d = table_shard.shape
+    rows_padded = rps * world
+    n = ids.shape[0]
+
+    u = fixed_unique(ids, sentinel=rows_padded)
+    hit, cache_slot = cache_probe(u.uniq, u.uvalid, hot_keys)
+    miss = u.uvalid & ~hit
+    r = partition(u.uniq, miss, rps, world, capacity)
+
+    # ---- Shuffle: route miss ids to owners --------------------------------
+    send_ids = jnp.full((world * capacity,), -1, jnp.int32)
+    send_ids = send_ids.at[r.send_slot].set(u.uniq.astype(jnp.int32), mode="drop")
+    recv_ids = _a2a(send_ids.reshape(world, capacity), axes)  # [world, cap]
+
+    my = lax.axis_index(axes)
+    base = my.astype(jnp.int32) * rps
+    recv_valid = recv_ids >= 0
+    recv_local = jnp.clip(recv_ids - base, 0, rps - 1)
+
+    # ---- local Gather ------------------------------------------------------
+    served = jnp.take(table_shard, recv_local.reshape(-1), axis=0)
+    served = served * recv_valid.reshape(-1, 1).astype(served.dtype)
+
+    # ---- Shuffle back + Stitch ---------------------------------------------
+    back = _a2a(served.reshape(world, capacity, d), axes).reshape(world * capacity, d)
+    take_idx = jnp.minimum(r.send_slot, world * capacity - 1)
+    miss_rows = jnp.take(back, take_idx, axis=0) * r.kept[:, None].astype(served.dtype)
+
+    if hot_rows is not None and hot_rows.shape[0] > 0:
+        hot = jnp.take(hot_rows, cache_slot, axis=0)
+        rows_u = jnp.where(hit[:, None], hot.astype(miss_rows.dtype), miss_rows)
+    else:
+        rows_u = miss_rows
+
+    ctx = LookupCtx(
+        uniq=u.uniq, inv=u.inv, uvalid=u.uvalid, hit=hit, cache_slot=cache_slot,
+        routing=r, recv_ids=recv_ids, recv_local=recv_local, recv_valid=recv_valid,
+    )
+    return rows_u, ctx
+
+
+def pool(
+    rows_u: jnp.ndarray,    # [n, D] unique rows (differentiation leaf)
+    ctx_inv: jnp.ndarray,   # [n]
+    weights: jnp.ndarray,   # [n] (0 for padding; 1/len for mean pooling)
+    seg: jnp.ndarray,       # [n] bag index
+    n_bags: int,
+) -> jnp.ndarray:
+    """SegmentReduction: ids -> bags. Differentiable wrt rows_u."""
+    per_id = jnp.take(rows_u, ctx_inv, axis=0) * weights[:, None].astype(rows_u.dtype)
+    return jax.ops.segment_sum(per_id, seg, num_segments=n_bags)
+
+
+# ---------------------------------------------------------------------------
+# backward: transposed Shuffle + row-wise adagrad (sparse-exact)
+# ---------------------------------------------------------------------------
+
+
+def _dedup_apply(w_shard: jnp.ndarray, acc_shard: jnp.ndarray,
+                 idx: jnp.ndarray, g: jnp.ndarray, valid: jnp.ndarray,
+                 lr: float, eps: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sum duplicate row grads, then row-wise adagrad on touched rows only."""
+    rps = w_shard.shape[0]
+    m = idx.shape[0]
+    idx = jnp.where(valid, idx, rps).astype(jnp.int32)
+    order = jnp.argsort(idx)
+    si, sg = idx[order], jnp.take(g, order, axis=0)
+    first = jnp.concatenate([jnp.ones((1,), bool), si[1:] != si[:-1]])
+    slot = (jnp.cumsum(first) - 1).astype(jnp.int32)
+    uidx = jnp.full((m,), rps, jnp.int32).at[slot].set(si)
+    gsum = jax.ops.segment_sum(sg, slot, num_segments=m)
+
+    uclip = jnp.minimum(uidx, rps - 1)
+    gsq = jnp.mean(jnp.square(gsum), axis=-1, keepdims=True)  # row-wise adagrad
+    acc_new = jnp.take(acc_shard, uclip, axis=0) + gsq
+    upd = lr * gsum / jnp.sqrt(acc_new + eps)
+    w_shard = w_shard.at[uidx].add(-upd.astype(w_shard.dtype), mode="drop")
+    acc_shard = acc_shard.at[uidx].set(acc_new.astype(acc_shard.dtype), mode="drop")
+    return w_shard, acc_shard
+
+
+class CacheState(NamedTuple):
+    keys: jnp.ndarray   # [H] sorted global row ids (sentinel = rows_padded)
+    rows: jnp.ndarray   # [H, D]
+    acc: jnp.ndarray    # [H, 1] adagrad accumulator
+
+
+def init_cache(h: int, d: int, rows_padded: int, dtype=jnp.float32) -> CacheState:
+    return CacheState(
+        keys=jnp.full((h,), rows_padded, jnp.int32),
+        rows=jnp.zeros((h, d), dtype),
+        acc=jnp.zeros((h, 1), dtype),
+    )
+
+
+def apply_sparse_grads(
+    w_shard: jnp.ndarray,
+    acc_shard: jnp.ndarray,
+    cache: Optional[CacheState],
+    ctx: LookupCtx,
+    g_u: jnp.ndarray,    # [n, D] grad wrt unique rows
+    *,
+    axes: Axes,
+    world: int,
+    lr: float,
+    eps: float = 1e-8,
+    cache_update: str = "psum",   # 'psum' (replica-consistent exact) | 'stale'
+) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[CacheState]]:
+    """Transposed path: miss grads -> owners; hit grads -> hot tier or owners.
+
+    'psum'  — hit grads are psum'd into the replicated hot tier; the hot tier
+              is authoritative between flushes (exact training, but the
+              all-reduce is O(H*D) per step — expensive for large H).
+    'stale' — hit grads are routed to the *owner* shards through a second
+              small all_to_all (O(hits*D)); the hot tier is read-only between
+              flushes (paper Algorithm 1 semantics: bounded read staleness of
+              flush_iters, master always exact).
+    """
+    d = w_shard.shape[1]
+    rps = w_shard.shape[0]
+    cap = ctx.recv_ids.shape[1]  # static block shape
+
+    # ---- miss gradients: transposed Shuffle --------------------------------
+    send_g = jnp.zeros((world * cap, d), g_u.dtype)
+    send_g = send_g.at[ctx.routing.send_slot].set(
+        g_u * ctx.routing.kept[:, None].astype(g_u.dtype), mode="drop")
+    recv_g = _a2a(send_g.reshape(world, cap, d), axes).reshape(world * cap, d)
+    w_shard, acc_shard = _dedup_apply(
+        w_shard, acc_shard,
+        ctx.recv_local.reshape(-1), recv_g, ctx.recv_valid.reshape(-1), lr, eps)
+
+    if cache is None or cache.keys.shape[0] == 0:
+        return w_shard, acc_shard, cache
+
+    if cache_update == "stale":
+        # ---- hit gradients: route to owners (cache stays read-only) --------
+        r = partition(ctx.uniq, ctx.hit, rps, world, cap)
+        send_ids = jnp.full((world * cap,), -1, jnp.int32)
+        send_ids = send_ids.at[r.send_slot].set(ctx.uniq.astype(jnp.int32), mode="drop")
+        send_hg = jnp.zeros((world * cap, d), g_u.dtype)
+        send_hg = send_hg.at[r.send_slot].set(
+            g_u * r.kept[:, None].astype(g_u.dtype), mode="drop")
+        recv_ids = _a2a(send_ids.reshape(world, cap), axes).reshape(-1)
+        recv_hg = _a2a(send_hg.reshape(world, cap, d), axes).reshape(world * cap, d)
+        my = lax.axis_index(axes).astype(jnp.int32)
+        local = jnp.clip(recv_ids - my * rps, 0, rps - 1)
+        w_shard, acc_shard = _dedup_apply(
+            w_shard, acc_shard, local, recv_hg, recv_ids >= 0, lr, eps)
+        return w_shard, acc_shard, cache
+
+    # ---- 'psum': hit grads into the replicated hot tier --------------------
+    h = cache.keys.shape[0]
+    g_hit = g_u * ctx.hit[:, None].astype(g_u.dtype)
+    g_hot = jnp.zeros((h, d), g_u.dtype).at[ctx.cache_slot].add(g_hit)
+    g_hot = lax.psum(g_hot, axes)
+    gsq = jnp.mean(jnp.square(g_hot), axis=-1, keepdims=True)
+    touched = (jnp.abs(g_hot).max(axis=-1, keepdims=True) > 0).astype(gsq.dtype)
+    acc_new = cache.acc + gsq * touched
+    upd = lr * g_hot / jnp.sqrt(acc_new + eps)
+    cache = CacheState(cache.keys, cache.rows - upd.astype(cache.rows.dtype),
+                       acc_new.astype(cache.acc.dtype))
+    return w_shard, acc_shard, cache
+
+
+# ---------------------------------------------------------------------------
+# frequency statistics + HybridHash flush (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+
+def count_frequencies(counts_shard: jnp.ndarray, ctx: LookupCtx) -> jnp.ndarray:
+    """Owner-side FCounter update from the ids received this step.
+
+    Counts *routed* queries; cache hits are counted via their last routed
+    appearance before entering the hot set (good enough for top-k drift, and
+    the decay in ``flush_cache`` re-ranks over time).
+    """
+    return counts_shard.at[ctx.recv_local.reshape(-1)].add(
+        ctx.recv_valid.reshape(-1).astype(counts_shard.dtype))
+
+
+def cache_hit_count(ctx: LookupCtx) -> jnp.ndarray:
+    return jnp.sum(ctx.hit)
+
+
+def flush_cache(
+    w_shard: jnp.ndarray,
+    acc_shard: jnp.ndarray,
+    counts_shard: jnp.ndarray,
+    cache: CacheState,
+    *,
+    axes: Axes,
+    world: int,
+    decay: float = 0.5,
+    write_back: bool = True,   # False for cache_update='stale' (master is exact)
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, CacheState]:
+    """Periodic HybridHash flush (Algorithm 1 L23-26), replica-consistent.
+
+    1. write back hot rows + optimizer state to owner shards (no comm: the
+       hot tier is replicated, owners take their slice) — 'psum' mode only;
+    2. select the new global top-H by frequency (all_gather of local top-H);
+    3. load the new hot set (psum of owner contributions).
+    """
+    rps, d = w_shard.shape
+    h = cache.keys.shape[0]
+    rows_padded = rps * world
+    my = lax.axis_index(axes).astype(jnp.int32)
+    base = my * rps
+
+    # ---- 1. write back ------------------------------------------------------
+    if write_back:
+        local = cache.keys - base
+        mine = (local >= 0) & (local < rps) & (cache.keys < rows_padded)
+        lclip = jnp.clip(local, 0, rps - 1)
+        safe_idx = jnp.where(mine, lclip, rps)
+        w_shard = w_shard.at[safe_idx].set(cache.rows.astype(w_shard.dtype), mode="drop")
+        acc_shard = acc_shard.at[safe_idx].set(cache.acc.astype(acc_shard.dtype), mode="drop")
+
+    # ---- 2. global top-H ----------------------------------------------------
+    # scrambled ids spread the hot set ~uniformly over shards, so the global
+    # top-H is inside the union of per-shard top-(4H/world) w.h.p. — keeps the
+    # all_gather at 4H instead of world*H.
+    k_local = min(rps, max(32, (4 * h + world - 1) // world))
+    lvals, lidx = lax.top_k(counts_shard, k_local)
+    gids = base + lidx.astype(jnp.int32)
+    all_vals = lax.all_gather(lvals, axes, tiled=True)   # [world*k_local]
+    all_ids = lax.all_gather(gids, axes, tiled=True)
+    tvals, tidx = lax.top_k(all_vals, h)
+    new_keys = jnp.where(tvals > 0, all_ids[tidx], rows_padded)
+    new_keys = jnp.sort(new_keys)
+
+    # ---- 3. load new hot set ------------------------------------------------
+    nlocal = new_keys - base
+    nmine = (nlocal >= 0) & (nlocal < rps) & (new_keys < rows_padded)
+    nclip = jnp.clip(nlocal, 0, rps - 1)
+    contrib_w = jnp.take(w_shard, nclip, axis=0) * nmine[:, None].astype(w_shard.dtype)
+    contrib_a = jnp.take(acc_shard, nclip, axis=0) * nmine[:, None].astype(acc_shard.dtype)
+    new_rows = lax.psum(contrib_w, axes)
+    new_acc = lax.psum(contrib_a, axes)
+
+    counts_shard = (counts_shard.astype(jnp.float32) * decay).astype(counts_shard.dtype)
+    return w_shard, acc_shard, counts_shard, CacheState(new_keys, new_rows, new_acc)
+
+
+# ---------------------------------------------------------------------------
+# baseline strategies (paper §II-C) for comparison benchmarks
+# ---------------------------------------------------------------------------
+
+
+def ps_lookup(table_shard: jnp.ndarray, ids: jnp.ndarray, *, axes: Axes, world: int
+              ) -> jnp.ndarray:
+    """PS/DP-style lookup: all_gather ids, psum partial rows (no routing, no
+    dedup, no cache). Communication O(world * n * D) vs O(n * D) for the
+    PICASSO path — this is the fragmentary baseline the paper beats."""
+    rps, d = table_shard.shape
+    my = lax.axis_index(axes).astype(jnp.int32)
+    base = my * rps
+    all_ids = lax.all_gather(ids, axes, tiled=True)         # [world*n]
+    local = all_ids - base
+    ok = (local >= 0) & (local < rps)
+    part = jnp.take(table_shard, jnp.clip(local, 0, rps - 1), axis=0)
+    part = part * ok[:, None].astype(part.dtype)
+    full = lax.psum(part, axes)                              # [world*n, D]
+    n = ids.shape[0]
+    return lax.dynamic_slice_in_dim(full, my * n, n, axis=0)

@@ -1,0 +1,4 @@
+from repro.embedding.bag import embedding_bag
+from repro.embedding.state import EmbeddingState, init_embedding_state
+
+__all__ = ["embedding_bag", "EmbeddingState", "init_embedding_state"]

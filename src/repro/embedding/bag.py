@@ -1,0 +1,26 @@
+"""EmbeddingBag built from JAX primitives (no native op exists).
+
+``jnp.take`` + ``jax.ops.segment_sum`` — this is the pure-jnp oracle the
+Pallas kernel in kernels/embedding_bag.py is validated against, and the
+single-device fallback path of the MP engine.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag(
+    table: jnp.ndarray,       # [V, D]
+    ids: jnp.ndarray,         # [N]
+    seg: jnp.ndarray,         # [N] bag index, non-decreasing not required
+    n_bags: int,
+    weights: Optional[jnp.ndarray] = None,  # [N]
+) -> jnp.ndarray:
+    """sum-pool EmbeddingBag: out[b] = sum_{i: seg[i]==b} w[i] * table[ids[i]]."""
+    rows = jnp.take(table, ids, axis=0)
+    if weights is not None:
+        rows = rows * weights[:, None].astype(rows.dtype)
+    return jax.ops.segment_sum(rows, seg, num_segments=n_bags)

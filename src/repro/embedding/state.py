@@ -1,0 +1,56 @@
+"""Per-group embedding state (table shard + adagrad acc + FCounter + cache)."""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packed_embedding import CacheState, init_cache
+from repro.core.packing import PackedGroup, PicassoPlan
+
+
+class EmbeddingState(NamedTuple):
+    w: jnp.ndarray       # [rows, D]   (sharded over the whole mesh)
+    acc: jnp.ndarray     # [rows, 1]   adagrad accumulator
+    counts: jnp.ndarray  # [rows]      FCounter (warm-up + running stats)
+    cache: CacheState    # replicated hot tier
+
+
+def init_group_state(key: jax.Array, group: PackedGroup, hot_rows: int,
+                     dtype=jnp.float32) -> EmbeddingState:
+    scale = 1.0 / jnp.sqrt(jnp.asarray(max(group.dim, 1), jnp.float32))
+    w = jax.random.normal(key, (group.rows, group.dim), dtype) * scale
+    return EmbeddingState(
+        w=w,
+        acc=jnp.zeros((group.rows, 1), dtype),
+        counts=jnp.zeros((group.rows,), jnp.int32),
+        cache=init_cache(hot_rows, group.dim, group.rows, dtype),
+    )
+
+
+def init_embedding_state(key: jax.Array, plan: PicassoPlan,
+                         dtype=jnp.float32) -> Dict[int, EmbeddingState]:
+    keys = jax.random.split(key, len(plan.groups))
+    return {
+        g.gid: init_group_state(keys[i], g, plan.cache_rows.get(g.gid, 0), dtype)
+        for i, g in enumerate(plan.groups)
+    }
+
+
+def abstract_embedding_state(plan: PicassoPlan, dtype=jnp.float32) -> Dict[int, EmbeddingState]:
+    """ShapeDtypeStruct stand-ins for the dry-run (no allocation)."""
+    out = {}
+    for g in plan.groups:
+        h = plan.cache_rows.get(g.gid, 0)
+        out[g.gid] = EmbeddingState(
+            w=jax.ShapeDtypeStruct((g.rows, g.dim), dtype),
+            acc=jax.ShapeDtypeStruct((g.rows, 1), dtype),
+            counts=jax.ShapeDtypeStruct((g.rows,), jnp.int32),
+            cache=CacheState(
+                keys=jax.ShapeDtypeStruct((h,), jnp.int32),
+                rows=jax.ShapeDtypeStruct((h, g.dim), dtype),
+                acc=jax.ShapeDtypeStruct((h, 1), dtype),
+            ),
+        )
+    return out

@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: DCN-v2 cross layer  x0 * (x @ W + b) + x.
+
+Fuses the matmul (MXU) with the elementwise epilogue (VPU) so the [B, d]
+intermediate never round-trips HBM. Grid tiles (batch x out-dim); the x tile
+is the full row (needed for the contraction), W is tiled along columns.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x0_blk, x_blk, w_blk, b_blk, o_blk):
+    acc = jnp.dot(x_blk[...], w_blk[...], preferred_element_type=jnp.float32)
+    z = acc + b_blk[...]
+    o_blk[...] = (x0_blk[...] * z.astype(x0_blk.dtype)
+                  + _slice_cols(x_blk[...], x0_blk.shape[1], o_blk))
+
+
+def _slice_cols(x, width, o_blk):
+    # residual term: the columns of x matching this output tile
+    j = pl.program_id(1)
+    return jax.lax.dynamic_slice_in_dim(x, j * width, width, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_d", "interpret"))
+def cross_layer_pallas(x0: jnp.ndarray, x: jnp.ndarray, w: jnp.ndarray,
+                       b: jnp.ndarray, block_b: int = 128, block_d: int = 128,
+                       interpret: bool = False) -> jnp.ndarray:
+    bsz, d = x.shape
+    bb, bd = min(block_b, bsz), min(block_d, d)
+    pad_b, pad_d = (-bsz) % bb, (-d) % bd
+    if pad_b or pad_d:
+        x0 = jnp.pad(x0, ((0, pad_b), (0, pad_d)))
+        x = jnp.pad(x, ((0, pad_b), (0, pad_d)))
+        w = jnp.pad(w, ((0, pad_d), (0, pad_d)))
+        b = jnp.pad(b, ((0, pad_d),))
+    bp, dp = x.shape
+    b2 = b.reshape(1, dp)
+    out = pl.pallas_call(
+        _kernel,
+        grid=(bp // bb, dp // bd),
+        in_specs=[
+            pl.BlockSpec((bb, bd), lambda i, j: (i, j)),   # x0 tile
+            pl.BlockSpec((bb, dp), lambda i, j: (i, 0)),   # x full row
+            pl.BlockSpec((dp, bd), lambda i, j: (0, j)),   # W column tile
+            pl.BlockSpec((1, bd), lambda i, j: (0, j)),    # bias tile
+        ],
+        out_specs=pl.BlockSpec((bb, bd), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bp, dp), x.dtype),
+        interpret=interpret,
+    )(x0, x, w, b2)
+    return out[:bsz, :d]

@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: DLRM pairwise dot interaction.
+
+[B, F, D] -> [B, P], P = F(F-1)/2. Computes Z = X X^T on the MXU per batch
+tile, then extracts the strict upper triangle with a 0/1 selection matmul
+(gathers are hostile to the TPU vector unit; a [F*F, P] selection matrix is
+MXU-friendly and fuses in VMEM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _kernel(f_blk, sel_blk, o_blk):
+    x = f_blk[...]                                           # [BB, F, D]
+    z = jax.lax.dot_general(x, x, (((2,), (2,)), ((0,), (0,))),
+                            preferred_element_type=jnp.float32)  # [BB, F, F]
+    bb, f, _ = z.shape
+    zf = z.reshape(bb, f * f).astype(f_blk.dtype)
+    o_blk[...] = jnp.dot(zf, sel_blk[...], preferred_element_type=jnp.float32
+                         ).astype(o_blk.dtype)
+
+
+def _selection_matrix(f: int, dtype) -> np.ndarray:
+    iu, ju = np.triu_indices(f, k=1)
+    p = len(iu)
+    sel = np.zeros((f * f, p), dtype)
+    sel[iu * f + ju, np.arange(p)] = 1
+    return sel
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def dot_interaction_pallas(fields: jnp.ndarray, block_b: int = 128,
+                           interpret: bool = False) -> jnp.ndarray:
+    b, f, d = fields.shape
+    p = f * (f - 1) // 2
+    bb = min(block_b, b)
+    pad = (-b) % bb
+    if pad:
+        fields = jnp.pad(fields, ((0, pad), (0, 0), (0, 0)))
+    sel = jnp.asarray(_selection_matrix(f, np.float32), fields.dtype)
+    nb = fields.shape[0] // bb
+    out = pl.pallas_call(
+        _kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((bb, f, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((f * f, p), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, p), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((fields.shape[0], p), fields.dtype),
+        interpret=interpret,
+    )(fields, sel)
+    return out[:b]

@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: fused Gather + SegmentReduction (EmbeddingBag).
+
+The paper's dominant memory-bound embedding-layer op. One grid step per id:
+scalar-prefetched ids drive the table BlockSpec index_map (HBM -> VMEM DMA of
+exactly the needed row, double-buffered by the Pallas pipeline), the
+scalar-prefetched segment ids drive the *output* index_map. Segments are
+sorted, so each output block is revisited while its segment lasts (stays in
+VMEM) and flushed exactly once — the classic TPU embedding-gather idiom.
+
+Requires: seg sorted ascending; every bag in [0, n_bags) appears >= once
+(guaranteed by the packed batch layout: padding positions carry weight 0 but
+still occupy a slot).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ids_ref, seg_ref, w_ref, table_blk, out_blk):
+    i = pl.program_id(0)
+    wgt = w_ref[i]
+    row = table_blk[...] * wgt
+
+    first = jnp.logical_or(i == 0, seg_ref[i] != seg_ref[jnp.maximum(i - 1, 0)])
+
+    @pl.when(first)
+    def _init():
+        out_blk[...] = row
+
+    @pl.when(jnp.logical_not(first))
+    def _acc():
+        out_blk[...] += row
+
+
+@functools.partial(jax.jit, static_argnames=("n_bags", "interpret"))
+def embedding_bag_pallas(
+    table: jnp.ndarray,     # [V, D]
+    ids: jnp.ndarray,       # [N] int32
+    seg: jnp.ndarray,       # [N] int32, sorted ascending, covers [0, n_bags)
+    weights: jnp.ndarray,   # [N]
+    n_bags: int,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    n = ids.shape[0]
+    v, d = table.shape
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,  # ids, seg, weights
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, ids, seg, w: (ids[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, ids, seg, w: (seg[i], 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_bags, d), table.dtype),
+        interpret=interpret,
+    )(ids, seg, weights.astype(table.dtype), table)

@@ -1,0 +1,56 @@
+"""jit'd dispatch wrappers for the Pallas kernels.
+
+On TPU the Pallas path is used; on CPU (this container) the pure-jnp
+reference executes (XLA fuses it well), while tests exercise the kernels in
+``interpret=True`` mode against the same references. Set
+``REPRO_FORCE_PALLAS_INTERPRET=1`` to route *all* calls through the
+interpreted kernels (slow; correctness soak).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.cross_layer import cross_layer_pallas
+from repro.kernels.dot_interaction import dot_interaction_pallas
+from repro.kernels.embedding_bag import embedding_bag_pallas
+from repro.kernels.fm_interaction import fm_interaction_pallas
+
+
+def _use_pallas() -> bool:
+    if os.environ.get("REPRO_FORCE_PALLAS_INTERPRET"):
+        return True
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def embedding_bag(table, ids, seg, n_bags: int, weights: Optional[jnp.ndarray] = None):
+    if _use_pallas():
+        w = weights if weights is not None else jnp.ones_like(ids, table.dtype)
+        return embedding_bag_pallas(table, ids, seg, w, n_bags, interpret=_interpret())
+    return ref.embedding_bag_ref(table, ids, seg, n_bags, weights)
+
+
+def fm_interaction(fields):
+    if _use_pallas():
+        return fm_interaction_pallas(fields, interpret=_interpret())
+    return ref.fm_interaction_ref(fields)
+
+
+def dot_interaction(fields):
+    if _use_pallas():
+        return dot_interaction_pallas(fields, interpret=_interpret())
+    return ref.dot_interaction_ref(fields)
+
+
+def cross_layer(x0, x, w, b):
+    if _use_pallas():
+        return cross_layer_pallas(x0, x, w, b, interpret=_interpret())
+    return ref.cross_layer_ref(x0, x, w, b)

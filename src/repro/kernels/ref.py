@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def embedding_bag_ref(table: jnp.ndarray, ids: jnp.ndarray, seg: jnp.ndarray,
+                      n_bags: int, weights: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    rows = jnp.take(table, ids, axis=0)
+    if weights is not None:
+        rows = rows * weights[:, None].astype(rows.dtype)
+    return jax.ops.segment_sum(rows, seg, num_segments=n_bags)
+
+
+def fm_interaction_ref(fields: jnp.ndarray) -> jnp.ndarray:
+    """[B, F, D] -> [B, 1]: 0.5 * sum_d ((sum_f v)^2 - sum_f v^2)."""
+    s = fields.sum(axis=1)
+    ss = (fields * fields).sum(axis=1)
+    return 0.5 * (s * s - ss).sum(axis=-1, keepdims=True)
+
+
+def dot_interaction_ref(fields: jnp.ndarray) -> jnp.ndarray:
+    """[B, F, D] -> [B, F*(F-1)/2] upper-triangle pairwise dots."""
+    z = jnp.einsum("bfd,bgd->bfg", fields, fields)
+    f = fields.shape[1]
+    iu, ju = np.triu_indices(f, k=1)
+    return z[:, iu, ju]
+
+
+def cross_layer_ref(x0: jnp.ndarray, x: jnp.ndarray, w: jnp.ndarray,
+                    b: jnp.ndarray) -> jnp.ndarray:
+    """DCN-v2: x0 * (x @ w + b) + x."""
+    return x0 * (x @ w + b) + x

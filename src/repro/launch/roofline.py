@@ -1,0 +1,96 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds:
+  compute    = HLO_FLOPs_per_device / peak_FLOPs
+  memory     = HLO_bytes_per_device / HBM_bw
+  collective = collective_bytes_per_device / ICI_link_bw
+
+collective bytes are parsed from the post-SPMD optimized HLO (per-device
+module): every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute, weighted by its algorithmic bytes-on-wire factor.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12     # bf16
+HBM_BW = 819e9          # bytes/s
+ICI_BW = 50e9           # bytes/s per link
+
+_DT_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(?P<res>[^=]*?)\s*(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(fragment: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(fragment):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DT_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str, world: int) -> Tuple[float, Dict[str, Dict[str, float]]]:
+    """Sum algorithmic bytes-on-wire per device across collective ops."""
+    per_op: Dict[str, Dict[str, float]] = {}
+    total = 0.0
+    ring = (world - 1) / max(world, 1)
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "-done(" in line:
+            continue
+        op = m.group("op")
+        size = _shape_bytes(m.group("res"))
+        if size == 0:
+            continue
+        if op == "all-reduce":
+            wire = 2.0 * ring * size
+        elif op == "all-gather":
+            wire = ring * size           # result is the gathered buffer
+        elif op == "reduce-scatter":
+            wire = ring * size * world   # result is the scattered shard
+        elif op == "all-to-all":
+            wire = ring * size
+        else:  # collective-permute
+            wire = float(size)
+        d = per_op.setdefault(op, {"count": 0, "bytes": 0.0, "wire": 0.0})
+        d["count"] += 1
+        d["bytes"] += size
+        d["wire"] += wire
+        total += wire
+    return total, per_op
+
+
+def roofline_terms(flops: float, bytes_accessed: float, coll_wire: float
+                   ) -> Dict[str, float]:
+    t_c = flops / PEAK_FLOPS
+    t_m = bytes_accessed / HBM_BW
+    t_x = coll_wire / ICI_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x), key=lambda kv: kv[1])
+    return {"compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+            "bound": dom[0], "step_s": dom[1]}
+
+
+def count_ops(hlo_text: str) -> Dict[str, int]:
+    """Rough op histogram of the optimized module (for the packing table)."""
+    counts: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w\.\-]+\s*=\s*[^=]*?\s([a-z][a-z0-9\-]*)\(", line)
+        if m:
+            counts[m.group(1)] = counts.get(m.group(1), 0) + 1
+    counts["_total"] = sum(v for k, v in counts.items() if k != "_total")
+    return counts

@@ -1,0 +1,103 @@
+"""GQA attention with RoPE, causal/sliding-window masking, chunked prefill
+(flash-style static q-chunks with exact per-chunk K ranges) and KV-cache
+decode. Pure jnp + sharding-constraint friendly (GSPMD partitions it)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, pos: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., S, H, hd]; pos: [S] (or [B, S])."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # [hd/2]
+    ang = pos[..., :, None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    if x.ndim == 4 and ang.ndim == 2:                  # [B,S,H,hd] with pos [S]
+        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    elif x.ndim == 4:                                  # pos [B,S]
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    x1, x2 = x[..., ::2], x[..., 1::2]
+    xr1 = x1 * cos - x2 * sin
+    xr2 = x1 * sin + x2 * cos
+    out = jnp.stack([xr1, xr2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def _sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+          mask: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """q: [B,Sq,H,hd], k/v: [B,Sk,G,hd] grouped KV; returns [B,Sq,H,hd]."""
+    b, sq, h, hd = q.shape
+    g = k.shape[2]
+    rep = h // g
+    qg = q.reshape(b, sq, g, rep, hd)
+    logits = jnp.einsum("bsgrd,btgd->bgrst", qg, k).astype(jnp.float32)
+    logits = logits / np.sqrt(hd)
+    if mask is not None:
+        logits = jnp.where(mask, logits, -1e30)
+    a = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bgrst,btgd->bsgrd", a, v)
+    return o.reshape(b, sq, h, hd)
+
+
+def chunked_causal_attention(
+    q: jnp.ndarray,          # [B, S, H, hd]
+    k: jnp.ndarray,          # [B, S, G, hd]
+    v: jnp.ndarray,          # [B, S, G, hd]
+    chunk: int = 512,
+    window: Optional[int] = None,   # sliding-window attention width
+) -> jnp.ndarray:
+    """Causal (optionally sliding-window) attention, python-unrolled q-chunks
+    with *static* per-chunk K ranges — no wasted FLOPs on fully-masked blocks,
+    and the [S, S] score matrix is never materialized (peak is [chunk, Kspan])."""
+    b, s, h, hd = q.shape
+    if s <= chunk or s % chunk != 0:
+        pos = jnp.arange(s)
+        m = pos[:, None] >= pos[None, :]
+        if window is not None:
+            m &= pos[:, None] - pos[None, :] < window
+        return _sdpa(q, k, v, m[None, None, None, :, :])
+    assert s % chunk == 0, (s, chunk)
+    outs = []
+    for i in range(s // chunk):
+        q_i = lax.slice_in_dim(q, i * chunk, (i + 1) * chunk, axis=1)
+        hi = (i + 1) * chunk
+        lo = 0 if window is None else max(0, hi - window - chunk + 1)
+        lo = (lo // chunk) * chunk  # align for static shapes
+        k_i = lax.slice_in_dim(k, lo, hi, axis=1)
+        v_i = lax.slice_in_dim(v, lo, hi, axis=1)
+        qpos = i * chunk + jnp.arange(chunk)
+        kpos = lo + jnp.arange(hi - lo)
+        m = qpos[:, None] >= kpos[None, :]
+        if window is not None:
+            m &= qpos[:, None] - kpos[None, :] < window
+        outs.append(_sdpa(q_i, k_i, v_i, m[None, None, None, :, :]))
+    return jnp.concatenate(outs, axis=1)
+
+
+def decode_attention(
+    q: jnp.ndarray,          # [B, 1, H, hd]
+    k_cache: jnp.ndarray,    # [B, S, G, hd]
+    v_cache: jnp.ndarray,    # [B, S, G, hd]
+    length: jnp.ndarray,     # [] or [B] valid cache length
+    window: Optional[int] = None,
+) -> jnp.ndarray:
+    """One-token decode vs. the KV cache. With the cache sharded along S over
+    the 'model' axis, GSPMD turns the softmax reductions into the
+    flash-decoding split-K combine (psum of partial max/sum)."""
+    b, s, g, hd = k_cache.shape
+    pos = jnp.arange(s)
+    valid = pos[None, :] < jnp.reshape(length, (-1, 1))
+    if window is not None:
+        valid &= pos[None, :] >= jnp.reshape(length, (-1, 1)) - window
+    mask = valid[:, None, None, None, :]                   # [B,1,1,1,S]
+    return _sdpa(q, k_cache, v_cache, mask)

@@ -1,0 +1,265 @@
+"""Feature-interaction modules (paper Fig. 2 'Feature Interaction Layer').
+
+Each module is (init_fn, apply_fn) over explicit param pytrees. Inputs are the
+per-field embedding views extracted from the packed group outputs:
+
+  pooled fields  -> [B, D]
+  sequence fields-> [B, L, D]
+
+The compute-heavy ones (cross / fm / dot) have Pallas TPU kernels in
+repro/kernels; apply functions route through kernels.ops which falls back to
+the pure-jnp reference on CPU.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.layers.mlp import init_layernorm, init_linear, init_mlp, layernorm, linear, mlp
+
+
+# ---------------------------------------------------------------------------
+# wide / FM family
+# ---------------------------------------------------------------------------
+
+
+def init_linear_terms(key, n_fields: int, dim: int, dtype=jnp.float32) -> Dict:
+    return {"w": jax.random.normal(key, (n_fields, dim), dtype) * 0.01}
+
+
+def linear_terms(p: Dict, fields: jnp.ndarray) -> jnp.ndarray:
+    """FM 1st order / wide part: sum_f <w_f, e_f>.  fields: [B, F, D]."""
+    return jnp.einsum("bfd,fd->b", fields, p["w"])[:, None]
+
+
+def fm_interaction(fields: jnp.ndarray) -> jnp.ndarray:
+    """FM 2nd order over field embeddings [B, F, D] -> [B, 1].
+
+    0.5 * sum_d ((sum_f v)^2 - sum_f v^2).
+    """
+    from repro.kernels import ops
+    return ops.fm_interaction(fields)
+
+
+def dot_interaction(fields: jnp.ndarray) -> jnp.ndarray:
+    """DLRM pairwise dots [B, F, D] -> [B, F*(F-1)/2]."""
+    from repro.kernels import ops
+    return ops.dot_interaction(fields)
+
+
+# ---------------------------------------------------------------------------
+# DCN-v2 cross network
+# ---------------------------------------------------------------------------
+
+
+def init_cross(key, d: int, n_layers: int, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, n_layers)
+    return {f"l{i}": {"w": jax.random.normal(ks[i], (d, d), dtype) * (1.0 / np.sqrt(d)),
+                      "b": jnp.zeros((d,), dtype)} for i in range(n_layers)}
+
+
+def cross_net(p: Dict, x0: jnp.ndarray) -> jnp.ndarray:
+    """x_{l+1} = x0 * (W x_l + b) + x_l   (DCN-v2 full-rank)."""
+    from repro.kernels import ops
+    x = x0
+    for i in range(len(p)):
+        x = ops.cross_layer(x0, x, p[f"l{i}"]["w"], p[f"l{i}"]["b"])
+    return x
+
+
+# ---------------------------------------------------------------------------
+# sequence attention (SASRec / DIN / AutoInt)
+# ---------------------------------------------------------------------------
+
+
+def init_mha(key, d: int, n_heads: int, dtype=jnp.float32) -> Dict:
+    k = jax.random.split(key, 4)
+    s = 1.0 / np.sqrt(d)
+    return {"wq": jax.random.normal(k[0], (d, d), dtype) * s,
+            "wk": jax.random.normal(k[1], (d, d), dtype) * s,
+            "wv": jax.random.normal(k[2], (d, d), dtype) * s,
+            "wo": jax.random.normal(k[3], (d, d), dtype) * s}
+
+
+def mha(p: Dict, x: jnp.ndarray, mask: jnp.ndarray, n_heads: int, causal: bool = True) -> jnp.ndarray:
+    """x: [B, L, D]; mask: [B, L] validity."""
+    b, l, d = x.shape
+    h = n_heads
+    hd = d // h
+    q = (x @ p["wq"]).reshape(b, l, h, hd).transpose(0, 2, 1, 3)
+    k = (x @ p["wk"]).reshape(b, l, h, hd).transpose(0, 2, 1, 3)
+    v = (x @ p["wv"]).reshape(b, l, h, hd).transpose(0, 2, 1, 3)
+    logits = q @ k.transpose(0, 1, 3, 2) / np.sqrt(hd)
+    neg = jnp.asarray(-1e9, logits.dtype)
+    logits = jnp.where(mask[:, None, None, :], logits, neg)
+    if causal:
+        cm = jnp.tril(jnp.ones((l, l), bool))
+        logits = jnp.where(cm[None, None], logits, neg)
+    a = jax.nn.softmax(logits, axis=-1)
+    o = (a @ v).transpose(0, 2, 1, 3).reshape(b, l, d)
+    return o @ p["wo"]
+
+
+def init_sasrec_block(key, d: int, n_heads: int, dtype=jnp.float32) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": init_layernorm(d, dtype), "attn": init_mha(k1, d, n_heads, dtype),
+            "ln2": init_layernorm(d, dtype),
+            "ff1": init_linear(k2, d, d, dtype), "ff2": init_linear(k3, d, d, dtype)}
+
+
+def sasrec_block(p: Dict, x: jnp.ndarray, mask: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    h = mha(p["attn"], layernorm(p["ln1"], x), mask, n_heads, causal=True)
+    x = x + h
+    f = linear(p["ff2"], jax.nn.relu(linear(p["ff1"], layernorm(p["ln2"], x))))
+    x = (x + f) * mask[..., None].astype(x.dtype)
+    return x
+
+
+def init_self_attn_seq(key, d: int, n_blocks: int, n_heads: int, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, n_blocks)
+    return {**{f"b{i}": init_sasrec_block(ks[i], d, n_heads, dtype) for i in range(n_blocks)},
+            "ln_f": init_layernorm(d, dtype)}
+
+
+def self_attn_seq(p: Dict, seq: jnp.ndarray, mask: jnp.ndarray, n_heads: int = 1) -> jnp.ndarray:
+    """SASRec encoder: [B, L, D] -> [B, D] (last valid position)."""
+    x = seq
+    n_blocks = len([k for k in p if k.startswith("b")])
+    for i in range(n_blocks):
+        x = sasrec_block(p[f"b{i}"], x, mask, n_heads)
+    x = layernorm(p["ln_f"], x)
+    # last valid position per sample
+    idx = jnp.maximum(mask.sum(axis=1).astype(jnp.int32) - 1, 0)
+    return jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
+
+
+def init_target_attn(key, d: int, hidden: int = 36, dtype=jnp.float32) -> Dict:
+    return {"mlp": init_mlp(key, 4 * d, (hidden, 1), dtype)}
+
+
+def target_attn(p: Dict, hist: jnp.ndarray, target: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """DIN attention: weight(h) = MLP([h, t, h*t, h-t]); [B,L,D],[B,D] -> [B,D]."""
+    b, l, d = hist.shape
+    t = jnp.broadcast_to(target[:, None, :], (b, l, d))
+    feat = jnp.concatenate([hist, t, hist * t, hist - t], axis=-1)
+    w = mlp(p["mlp"], feat, final_act=False)[..., 0]          # [B, L]
+    w = jnp.where(mask, w, -1e9)
+    w = jax.nn.softmax(w, axis=-1) * mask.astype(w.dtype)
+    return jnp.einsum("bl,bld->bd", w, hist)
+
+
+# ---------------------------------------------------------------------------
+# MIND capsule routing
+# ---------------------------------------------------------------------------
+
+
+def init_capsule(key, d: int, n_interests: int, dtype=jnp.float32) -> Dict:
+    return {"s": jax.random.normal(key, (d, d), dtype) * (1.0 / np.sqrt(d))}
+
+
+def _squash(v: jnp.ndarray) -> jnp.ndarray:
+    n2 = jnp.sum(v * v, axis=-1, keepdims=True)
+    return (n2 / (1.0 + n2)) * v * jax.lax.rsqrt(n2 + 1e-9)
+
+
+def capsule_routing(p: Dict, hist: jnp.ndarray, mask: jnp.ndarray, iters: int,
+                    key: jax.Array, n_interests: int = 4) -> jnp.ndarray:
+    """B2I dynamic routing: [B, L, D] -> [B, K, D] interest capsules."""
+    b, l, d = hist.shape
+    k = n_interests
+    low = hist @ p["s"]                                        # [B, L, D]
+    logits0 = jax.random.normal(key, (b, k, l)) * 1.0          # fixed random init (paper)
+    neg = jnp.asarray(-1e9, low.dtype)
+
+    logits, caps = logits0, None
+    for _ in range(iters):  # unrolled: keeps cost_analysis exact (no while)
+        w = jax.nn.softmax(jnp.where(mask[:, None, :], logits, neg), axis=-1)
+        caps = _squash(jnp.einsum("bkl,bld->bkd", w, low))
+        logits = logits + jnp.einsum("bkd,bld->bkl", caps, low)
+    return caps
+
+
+def label_aware_attn(interests: jnp.ndarray, target: jnp.ndarray, pw: float = 2.0) -> jnp.ndarray:
+    """MIND label-aware attention: [B,K,D],[B,D] -> [B,D]."""
+    s = jnp.einsum("bkd,bd->bk", interests, target)
+    w = jax.nn.softmax(pw * s, axis=-1)
+    return jnp.einsum("bk,bkd->bd", w, interests)
+
+
+# ---------------------------------------------------------------------------
+# DIEN GRU / MMoE / CAN co-action
+# ---------------------------------------------------------------------------
+
+
+def init_gru(key, d: int, dtype=jnp.float32) -> Dict:
+    k1, k2 = jax.random.split(key)
+    s = 1.0 / np.sqrt(d)
+    return {"wx": jax.random.normal(k1, (d, 3 * d), dtype) * s,
+            "wh": jax.random.normal(k2, (d, 3 * d), dtype) * s,
+            "b": jnp.zeros((3 * d,), dtype)}
+
+
+def gru(p: Dict, seq: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """[B, L, D] -> [B, D] final hidden state."""
+    b, l, d = seq.shape
+
+    def step(h, xm):
+        x, m = xm
+        zrs = x @ p["wx"] + h @ p["wh"] + p["b"]
+        z, r, s = jnp.split(zrs, 3, axis=-1)
+        z, r = jax.nn.sigmoid(z), jax.nn.sigmoid(r)
+        n = jnp.tanh(x @ p["wx"][:, :d] + (r * h) @ p["wh"][:, :d])
+        h2 = (1 - z) * h + z * n
+        h2 = jnp.where(m[:, None], h2, h)
+        return h2, None
+
+    h0 = jnp.zeros((b, d), seq.dtype)
+    hT, _ = jax.lax.scan(step, h0, (seq.transpose(1, 0, 2), mask.T))
+    return hT
+
+
+def init_mmoe(key, d_in: int, n_experts: int, expert_dim: int, n_tasks: int,
+              dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, n_experts + n_tasks)
+    return {**{f"e{i}": init_mlp(ks[i], d_in, (expert_dim, expert_dim), dtype)
+               for i in range(n_experts)},
+            **{f"g{t}": init_linear(ks[n_experts + t], d_in, n_experts, dtype)
+               for t in range(n_tasks)}}
+
+
+def mmoe(p: Dict, x: jnp.ndarray) -> List[jnp.ndarray]:
+    n_e = len([k for k in p if k.startswith("e")])
+    n_t = len([k for k in p if k.startswith("g")])
+    experts = jnp.stack([mlp(p[f"e{i}"], x) for i in range(n_e)], axis=1)  # [B,E,H]
+    outs = []
+    for t in range(n_t):
+        g = jax.nn.softmax(linear(p[f"g{t}"], x), axis=-1)                     # [B,E]
+        outs.append(jnp.einsum("be,beh->bh", g, experts))
+    return outs
+
+
+def coaction(hist: jnp.ndarray, target: jnp.ndarray, mask: jnp.ndarray,
+             layers: Tuple[int, ...] = (4, 4)) -> jnp.ndarray:
+    """CAN co-action unit: target embedding reshaped into MLP weights applied
+    to history embeddings ([B,L,D] x [B,D] -> [B, layers[-1]])."""
+    b, l, d = hist.shape
+    need = 0
+    d_in = d
+    shapes = []
+    for h in layers:
+        shapes.append((d_in, h))
+        need += d_in * h
+        d_in = h
+    reps = int(np.ceil(need / d))
+    wflat = jnp.tile(target, (1, reps))[:, :need]
+    x = hist
+    off = 0
+    for (di, do) in shapes:
+        w = wflat[:, off:off + di * do].reshape(b, di, do)
+        off += di * do
+        x = jnp.tanh(jnp.einsum("bld,bdo->blo", x, w))
+    x = x * mask[..., None].astype(x.dtype)
+    return x.sum(axis=1)

@@ -1,0 +1,51 @@
+"""MLP tower with optional layer-norm + residual (paper Fig. 2 'MLP')."""
+from __future__ import annotations
+
+from typing import Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_linear(key, d_in: int, d_out: int, dtype=jnp.float32) -> Dict:
+    kw, _ = jax.random.split(key)
+    scale = jnp.sqrt(2.0 / d_in).astype(dtype)
+    return {"w": jax.random.normal(kw, (d_in, d_out), dtype) * scale,
+            "b": jnp.zeros((d_out,), dtype)}
+
+
+def linear(p: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    return x @ p["w"] + p["b"]
+
+
+def init_mlp(key, d_in: int, dims: Sequence[int], dtype=jnp.float32) -> Dict:
+    params = {}
+    d = d_in
+    for i, h in enumerate(dims):
+        key, k = jax.random.split(key)
+        params[f"l{i}"] = init_linear(k, d, h, dtype)
+        d = h
+    return params
+
+
+def n_layers(p: Dict) -> int:
+    return len([k for k in p if k.startswith("l")])
+
+
+def mlp(p: Dict, x: jnp.ndarray, act=jax.nn.relu, final_act: bool = True) -> jnp.ndarray:
+    n = n_layers(p)
+    for i in range(n):
+        x = linear(p[f"l{i}"], x)
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def init_layernorm(d: int, dtype=jnp.float32) -> Dict:
+    return {"g": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: Dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * p["g"] + p["b"]

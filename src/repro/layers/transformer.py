@@ -1,0 +1,322 @@
+"""Decoder-only LM stack (covers all five assigned LM-family archs).
+
+Layer params are stacked [L, ...] and the stack runs under ``lax.scan`` so the
+HLO holds one layer body (essential: the 512-device dry-run compiles in
+minutes, not hours). Sharding is declared per-leaf in ``lm_param_specs``:
+Megatron-style TP over the 'model' axis, DP over ('pod','data'); MoE experts
+go EP over 'model' when E % tp == 0, else TP inside the expert FFN.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import LMConfig
+from repro.layers.attention import apply_rope, chunked_causal_attention, decode_attention
+from repro.layers.moe import moe_ffn
+
+
+def _dt(cfg: LMConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def init_lm_params(cfg: LMConfig, key: jax.Array) -> Dict:
+    dt = _dt(cfg)
+    L, D, H, G = cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.head_dim
+    ks = jax.random.split(key, 12)
+
+    def nrm(k, shape, fan_in):
+        return (jax.random.normal(k, shape, jnp.float32) / np.sqrt(fan_in)).astype(dt)
+
+    p: Dict[str, Any] = {
+        "emb": nrm(ks[0], (cfg.vocab, D), 1.0) * 0.02 * np.sqrt(1.0),
+        "ln_f": jnp.ones((D,), dt),
+        "layers": {
+            "ln1": jnp.ones((L, D), dt),
+            "ln2": jnp.ones((L, D), dt),
+            "wq": nrm(ks[1], (L, D, H * hd), D),
+            "wk": nrm(ks[2], (L, D, G * hd), D),
+            "wv": nrm(ks[3], (L, D, G * hd), D),
+            "wo": nrm(ks[4], (L, H * hd, D), H * hd),
+        },
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = nrm(ks[5], (D, cfg.vocab), D)
+    if cfg.moe is not None:
+        E, F = cfg.moe.n_experts, cfg.moe.d_ff
+        p["layers"].update({
+            "router": nrm(ks[6], (L, D, E), D),
+            "w1": nrm(ks[7], (L, E, D, F), D),
+            "w3": nrm(ks[8], (L, E, D, F), D),
+            "w2": nrm(ks[9], (L, E, F, D), F),
+        })
+    else:
+        F = cfg.d_ff
+        p["layers"].update({
+            "w1": nrm(ks[7], (L, D, F), D),
+            "w3": nrm(ks[8], (L, D, F), D),
+            "w2": nrm(ks[9], (L, F, D), F),
+        })
+    return p
+
+
+def abstract_lm_params(cfg: LMConfig) -> Dict:
+    return jax.eval_shape(functools.partial(init_lm_params, cfg), jax.random.PRNGKey(0))
+
+
+def lm_param_specs(cfg: LMConfig, mesh_shape: Dict[str, int],
+                   dp_axes: Tuple[str, ...] = ("data",), tp_axis: str = "model",
+                   fsdp: bool = True) -> Dict:
+    """PartitionSpecs per leaf: Megatron TP over ``tp_axis`` on the natural
+    contraction-free dim + FSDP over ``dp_axes`` on a second dim (gathered
+    per-layer inside the scan). Divisibility decides shard-vs-replicate."""
+    t = tp_axis
+    tp = mesh_shape[t]
+    dpn = int(np.prod([mesh_shape[a] for a in dp_axes])) if fsdp else 0
+    dp = dp_axes if fsdp else None
+
+    def ok(sz, ways):
+        return ways and sz % ways == 0
+
+    def p_tp(sz):  # shard over tp if divisible
+        return t if ok(sz, tp) else None
+
+    def p_dp(sz):
+        return dp if fsdp and ok(sz, dpn) else None
+
+    D, hd = cfg.d_model, cfg.head_dim
+    H, G, V = cfg.n_heads, cfg.n_kv_heads, cfg.vocab
+    specs = {
+        "emb": P(p_tp(V), p_dp(D)),   # vocab-sharded MP embedding (as in recsys)
+        "ln_f": P(None),
+        "layers": {
+            "ln1": P(None, None), "ln2": P(None, None),
+            "wq": P(None, p_dp(D), p_tp(H * hd)),
+            "wk": P(None, p_dp(D), p_tp(G * hd)),
+            "wv": P(None, p_dp(D), p_tp(G * hd)),
+            "wo": P(None, p_tp(H * hd), p_dp(D)),
+        },
+    }
+    if cfg.moe is None:
+        F = cfg.d_ff
+        specs["layers"].update({"w1": P(None, p_dp(D), p_tp(F)),
+                                "w3": P(None, p_dp(D), p_tp(F)),
+                                "w2": P(None, p_tp(F), p_dp(D))})
+    else:
+        E, F = cfg.moe.n_experts, cfg.moe.d_ff
+        specs["layers"].update({
+            "router": P(None, p_dp(D), None),
+            "w1": P(None, None, p_dp(D), p_tp(F)),
+            "w3": P(None, None, p_dp(D), p_tp(F)),
+            "w2": P(None, None, p_tp(F), p_dp(D)),
+        })
+    if not cfg.tie_embeddings:
+        specs["head"] = P(p_dp(D), p_tp(V))
+    return specs
+
+
+def _rmsnorm(g: jnp.ndarray, x: jnp.ndarray, eps: float) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * lax.rsqrt(var + eps).astype(x.dtype)) * g
+
+
+class LayerIO(NamedTuple):
+    x: jnp.ndarray
+    pos: jnp.ndarray
+
+
+def _layer(cfg: LMConfig, lp: Dict, x: jnp.ndarray, pos: jnp.ndarray,
+           attn_chunk: int, moe_cap: float, moe_exec=None) -> jnp.ndarray:
+    b, s, d = x.shape
+    hd, h, g = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    hx = _rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    q = (hx @ lp["wq"]).reshape(b, s, h, hd)
+    k = (hx @ lp["wk"]).reshape(b, s, g, hd)
+    v = (hx @ lp["wv"]).reshape(b, s, g, hd)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    o = chunked_causal_attention(q, k, v, chunk=attn_chunk, window=cfg.swa_window)
+    x = x + (o.reshape(b, s, h * hd) @ lp["wo"])
+
+    hx = _rmsnorm(lp["ln2"], x, cfg.norm_eps)
+    if cfg.moe is not None:
+        flat = hx.reshape(b * s, d)
+        groups, xe_sh = moe_exec if moe_exec else (1, None)
+        y = moe_ffn(flat, lp["router"], lp["w1"], lp["w2"], lp["w3"], cfg.moe.top_k,
+                    capacity_factor=moe_cap, groups=groups, xe_sharding=xe_sh)
+        x = x + y.reshape(b, s, d)
+    else:
+        y = (jax.nn.silu(hx @ lp["w3"]) * (hx @ lp["w1"])) @ lp["w2"]
+        x = x + y
+    return x
+
+
+def lm_forward(cfg: LMConfig, params: Dict, tokens: jnp.ndarray,
+               attn_chunk: int = 512, remat: bool = True,
+               moe_cap: float = 1.25, unroll: bool = False) -> jnp.ndarray:
+    """tokens [B, S] -> logits [B, S, V]."""
+    x = _backbone(cfg, params, tokens, attn_chunk, remat, moe_cap, unroll)
+    head = params["emb"].T if cfg.tie_embeddings else params["head"]
+    return x @ head
+
+
+def lm_loss(cfg: LMConfig, params: Dict, tokens: jnp.ndarray,
+            attn_chunk: int = 512, remat: bool = True,
+            moe_cap: float = 1.25, loss_chunk: int = 0,
+            unroll: bool = False, moe_exec=None) -> jnp.ndarray:
+    """Next-token CE, mean over tokens.
+
+    ``loss_chunk`` > 0 computes the [B, S, V] logits in sequence chunks under
+    a scan so the full-vocab logits tensor never materializes (vital for
+    V=131072 at seq 4096).
+    """
+    b, s = tokens.shape
+    x = _backbone(cfg, params, tokens, attn_chunk, remat, moe_cap, unroll, moe_exec)
+    head = params["emb"].T if cfg.tie_embeddings else params["head"]
+
+    def ce(xc, tgt, wc):
+        lg = (xc @ head).astype(jnp.float32)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        true = jnp.take_along_axis(lg, tgt[..., None], axis=-1)[..., 0]
+        return ((lse - true) * wc).sum()
+
+    # predict token t+1 from position t; last position has weight 0
+    tgt = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    w = jnp.ones((b, s), jnp.float32).at[:, -1].set(0.0)
+    if loss_chunk and s % loss_chunk == 0 and s > loss_chunk:
+        # unrolled (NOT lax.scan): XLA cost_analysis counts a while body once,
+        # which would hide (nc-1)/nc of the CE cost from the roofline terms.
+        nc = s // loss_chunk
+        ck = jax.checkpoint(ce)
+        total = jnp.zeros(())
+        for i in range(nc):
+            sl = slice(i * loss_chunk, (i + 1) * loss_chunk)
+            total = total + ck(x[:, sl], tgt[:, sl], w[:, sl])
+    else:
+        total = ce(x, tgt, w)
+    return total / (b * (s - 1))
+
+
+def _backbone(cfg: LMConfig, params: Dict, tokens: jnp.ndarray,
+              attn_chunk: int, remat: bool, moe_cap: float,
+              unroll: bool = False, moe_exec=None) -> jnp.ndarray:
+    b, s = tokens.shape
+    x = jnp.take(params["emb"], tokens, axis=0)
+    pos = jnp.arange(s)
+
+    def body(x, lp):
+        return _layer(cfg, lp, x, pos, attn_chunk, moe_cap, moe_exec), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    # unroll=True is used by the dry-run cost-correction compiles: XLA's
+    # cost_analysis counts a while body once, an unrolled stack exactly.
+    x, _ = lax.scan(body, x, params["layers"],
+                    unroll=cfg.n_layers if unroll else 1)
+    return _rmsnorm(params["ln_f"], x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with KV cache
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray  # [L, B, S, G, hd]
+    v: jnp.ndarray
+
+
+def abstract_kv_cache(cfg: LMConfig, batch: int, seq: int) -> KVCache:
+    dt = _dt(cfg)
+    sh = (cfg.n_layers, batch, seq, cfg.n_kv_heads, cfg.head_dim)
+    return KVCache(jax.ShapeDtypeStruct(sh, dt), jax.ShapeDtypeStruct(sh, dt))
+
+
+def init_kv_cache(cfg: LMConfig, batch: int, seq: int) -> KVCache:
+    dt = _dt(cfg)
+    sh = (cfg.n_layers, batch, seq, cfg.n_kv_heads, cfg.head_dim)
+    return KVCache(jnp.zeros(sh, dt), jnp.zeros(sh, dt))
+
+
+def lm_decode_step(cfg: LMConfig, params: Dict, cache: KVCache,
+                   tokens: jnp.ndarray, length: jnp.ndarray,
+                   moe_cap: float = 1.25, unroll: bool = False
+                   ) -> Tuple[jnp.ndarray, KVCache]:
+    """One decode step. tokens [B, 1]; length: current cache fill (scalar).
+
+    The KV cache stays sharded along S over the 'model' axis; the attention
+    softmax over the sharded S dim becomes a flash-decoding style split-K
+    combine under GSPMD.
+    """
+    b = tokens.shape[0]
+    hd, h, g = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    x = jnp.take(params["emb"], tokens, axis=0)           # [B, 1, D]
+    pos = jnp.reshape(length, (1,))                       # position of the new token
+
+    def body(x, lp_cache):
+        lp, kc, vc = lp_cache
+        hx = _rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        q = (hx @ lp["wq"]).reshape(b, 1, h, hd)
+        k = (hx @ lp["wk"]).reshape(b, 1, g, hd)
+        v = (hx @ lp["wv"]).reshape(b, 1, g, hd)
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+        kc = lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), length, axis=1)
+        vc = lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), length, axis=1)
+        o = decode_attention(q, kc, vc, length + 1, window=cfg.swa_window)
+        x = x + (o.reshape(b, 1, h * hd) @ lp["wo"])
+        hx = _rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        if cfg.moe is not None:
+            y = moe_ffn(hx.reshape(b, -1), lp["router"], lp["w1"], lp["w2"], lp["w3"],
+                        cfg.moe.top_k, capacity_factor=moe_cap).reshape(b, 1, -1)
+        else:
+            y = (jax.nn.silu(hx @ lp["w3"]) * (hx @ lp["w1"])) @ lp["w2"]
+        return x + y, (kc, vc)
+
+    x, (k2, v2) = lax.scan(body, x, (params["layers"], cache.k, cache.v),
+                           unroll=cfg.n_layers if unroll else 1)
+    x = _rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    head = params["emb"].T if cfg.tie_embeddings else params["head"]
+    return (x @ head)[:, 0], KVCache(k2, v2)
+
+
+def lm_prefill(cfg: LMConfig, params: Dict, tokens: jnp.ndarray,
+               attn_chunk: int = 512, moe_cap: float = 1.25,
+               unroll: bool = False, moe_exec=None) -> Tuple[jnp.ndarray, KVCache]:
+    """Prefill: tokens [B, S] -> (last-position logits, filled cache)."""
+    b, s = tokens.shape
+    hd, h, g = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    x = jnp.take(params["emb"], tokens, axis=0)
+    pos = jnp.arange(s)
+
+    def body(x, lp):
+        hx = _rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        q = (hx @ lp["wq"]).reshape(b, s, h, hd)
+        k = (hx @ lp["wk"]).reshape(b, s, g, hd)
+        v = (hx @ lp["wv"]).reshape(b, s, g, hd)
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+        o = chunked_causal_attention(q, k, v, chunk=attn_chunk, window=cfg.swa_window)
+        x = x + (o.reshape(b, s, h * hd) @ lp["wo"])
+        hx = _rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        if cfg.moe is not None:
+            groups, xe_sh = moe_exec if moe_exec else (1, None)
+            y = moe_ffn(hx.reshape(b * s, -1), lp["router"], lp["w1"], lp["w2"],
+                        lp["w3"], cfg.moe.top_k, capacity_factor=moe_cap,
+                        groups=groups, xe_sharding=xe_sh).reshape(b, s, -1)
+        else:
+            y = (jax.nn.silu(hx @ lp["w3"]) * (hx @ lp["w1"])) @ lp["w2"]
+        return x + y, (k.astype(x.dtype), v.astype(x.dtype))
+
+    x, (ks, vs) = lax.scan(body, x, params["layers"],
+                           unroll=cfg.n_layers if unroll else 1)
+    x = _rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    head = params["emb"].T if cfg.tie_embeddings else params["head"]
+    return (x @ head)[:, -1], KVCache(ks, vs)

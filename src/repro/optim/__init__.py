@@ -1,0 +1,3 @@
+from repro.optim.optimizers import adam_init, adam_update, lamb_update, sgd_update
+
+__all__ = ["adam_init", "adam_update", "lamb_update", "sgd_update"]

@@ -1,0 +1,43 @@
+"""Gradient compression for the dense DP all-reduce (paper §V: 'quantitative
+communication' [50]).
+
+On TPU the practical lever is payload dtype: round the psum payload to
+bf16 / f8_e4m3 with *error feedback* (the residual is carried in optimizer
+state so the compression bias cancels over steps). Halves / quarters the
+all-reduce wire bytes of the dense layers — visible directly in the dry-run
+collective term.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+_DTYPES = {"none": None, "bf16": jnp.bfloat16, "f8": jnp.float8_e4m3fn}
+
+
+def compressed_psum(grads: Any, axes, mode: str = "none",
+                    residual: Optional[Any] = None) -> Tuple[Any, Any]:
+    """psum with payload rounded to a narrow dtype + error feedback.
+
+    Returns (summed grads fp32, new residual).
+    """
+    dt = _DTYPES[mode]
+    if dt is None:
+        return jax.tree.map(lambda g: lax.psum(g, axes), grads), residual
+
+    def one(g, r):
+        x = g + (r if r is not None else 0.0)
+        q = x.astype(dt)
+        new_r = x - q.astype(x.dtype)              # error feedback residual
+        s = lax.psum(q, axes).astype(jnp.float32)  # narrow dtype on the wire
+        return s, new_r
+
+    if residual is None:
+        residual = jax.tree.map(lambda g: jnp.zeros_like(g), grads)
+    out = jax.tree.map(one, grads, residual)
+    summed = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_res = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    return summed, new_res

@@ -1,0 +1,66 @@
+"""Dense-parameter optimizers (replicated DP side of the hybrid strategy).
+
+Sparse embedding rows use the row-wise Adagrad fused into the MP engine
+(core/packed_embedding._dedup_apply). Here: SGD / Adam / LAMB (the paper's
+§IV discussion points at LAMB for super-large batches).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def adam_init(params: Any) -> Dict:
+    z = jax.tree.map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree.map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+def _adam_moments(opt, grads, b1, b2):
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, opt["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, opt["v"], grads)
+    return m, v
+
+
+def adam_update(params: Any, grads: Any, opt: Dict, lr: float, b1: float = 0.9,
+                b2: float = 0.999, eps: float = 1e-8, wd: float = 0.0
+                ) -> Tuple[Any, Dict]:
+    t = opt["t"] + 1
+    m, v = _adam_moments(opt, grads, b1, b2)
+    tf = t.astype(jnp.float32)
+    c1, c2 = 1 - b1 ** tf, 1 - b2 ** tf
+
+    def upd(p, m, v):
+        if p.dtype not in (jnp.float32, jnp.bfloat16, jnp.float16):
+            return p
+        step = lr * (m / c1) / (jnp.sqrt(v / c2) + eps)
+        if wd:
+            step = step + lr * wd * p
+        return (p - step).astype(p.dtype)
+
+    return jax.tree.map(upd, params, m, v), {"m": m, "v": v, "t": t}
+
+
+def lamb_update(params: Any, grads: Any, opt: Dict, lr: float, b1: float = 0.9,
+                b2: float = 0.999, eps: float = 1e-6, wd: float = 0.01
+                ) -> Tuple[Any, Dict]:
+    t = opt["t"] + 1
+    m, v = _adam_moments(opt, grads, b1, b2)
+    tf = t.astype(jnp.float32)
+    c1, c2 = 1 - b1 ** tf, 1 - b2 ** tf
+
+    def upd(p, m, v):
+        if p.dtype not in (jnp.float32, jnp.bfloat16, jnp.float16):
+            return p
+        r = (m / c1) / (jnp.sqrt(v / c2) + eps) + wd * p
+        pn = jnp.linalg.norm(p.astype(jnp.float32))
+        rn = jnp.linalg.norm(r.astype(jnp.float32))
+        trust = jnp.where((pn > 0) & (rn > 0), pn / rn, 1.0)
+        return (p - lr * trust * r).astype(p.dtype)
+
+    return jax.tree.map(upd, params, m, v), {"m": m, "v": v, "t": t}
+
+
+def sgd_update(params: Any, grads: Any, opt: Dict, lr: float) -> Tuple[Any, Dict]:
+    return jax.tree.map(lambda p, g: (p - lr * g).astype(p.dtype), params, grads), opt

@@ -1,0 +1,117 @@
+"""Inference steps for WDL models: online (p99) / bulk scoring / retrieval.
+
+Same shard_map program shape as training minus the backward: packed lookups
+(with the HybridHash read path) -> interactions -> sigmoid scores. Retrieval
+scores one query against 1M candidates: two-tower archs (sasrec / mind) embed
+the user once and dot against mesh-sharded candidate item rows with a
+distributed top-k; pure-CTR archs (deepfm / dcn-v2) run a bulk forward over
+the candidate batch (batched-dot, never a loop).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import packed_embedding as pe
+from repro.core.features import PackedBatch, field_index, pack_group
+from repro.core.packing import PicassoPlan
+from repro.dist.sharding import batch_specs, state_specs
+from repro.models.wdl import WDLModel
+
+
+def _mesh_world(mesh, axes):
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def make_serve_step(model: WDLModel, plan: PicassoPlan, mesh, axes, global_batch: int,
+                    use_cache: bool = True):
+    """Forward-only scoring: batch -> sigmoid probabilities [B, n_tasks]."""
+    world = _mesh_world(mesh, axes)
+    b_local = global_batch // world
+    cache_on = use_cache and any(plan.cache_rows.get(g.gid, 0) > 0 for g in plan.groups)
+
+    def local_fn(emb, dense, batch):
+        pooled = {}
+        for g in plan.groups:
+            pb = pack_group(g, batch["fields"])
+            st = emb[str(g.gid)]
+            rows_u, ctx = pe.mp_lookup(
+                st.w, pb.ids, axes=axes, world=world, capacity=plan.capacity[g.gid],
+                hot_keys=st.cache.keys if cache_on else None,
+                hot_rows=st.cache.rows if cache_on else None)
+            p = pe.pool(rows_u, ctx.inv, pb.weights, pb.seg, b_local * g.n_bags)
+            pooled[g.gid] = p.reshape(b_local, g.n_bags, g.dim)
+        logits = model.apply(dense, pooled, batch)
+        return jax.nn.sigmoid(logits)
+
+    def wrapped(state, batch):
+        emb_specs = {k: v for k, v in state_specs(plan, axes, state["dense"],
+                                                  None)["emb"].items()}
+        rep = jax.tree.map(lambda x: P(*((None,) * len(x.shape))), state["dense"])
+        f = jax.shard_map(local_fn, mesh=mesh,
+                          in_specs=(emb_specs, rep, batch_specs(batch, axes)),
+                          out_specs=P(axes, None), check_vma=False)
+        return f(state["emb"], state["dense"], batch)
+
+    return jax.jit(wrapped)
+
+
+def make_retrieval_step(model: WDLModel, plan: PicassoPlan, mesh, axes,
+                        n_candidates: int, top_k: int = 100):
+    """Two-tower retrieval: one user -> top-k of 1M candidates.
+
+    The user representation is computed from the behaviour sequence
+    (self_attn_seq / capsule interaction); candidate ids are mesh-sharded,
+    their rows come from the *local* slice of the MP item table via the same
+    packed-lookup engine, scores are a batched dot, and top-k is local-top-k
+    -> all_gather -> global-top-k.
+    """
+    world = _mesh_world(mesh, axes)
+    cand_local = n_candidates // world
+    fidx = field_index(model.plan)
+    item_field = next(f.name for f in model.cfg.fields
+                      if f.pooling == "none" and f.max_len > 1)
+    gid = fidx[item_field].gid
+    group = plan.group(gid)
+
+    def local_fn(emb, dense, batch, cand_ids):
+        # --- user tower (batch=1, replicated compute) -----------------------
+        pooled = {}
+        for g in plan.groups:
+            pb = pack_group(g, batch["fields"])
+            st = emb[str(g.gid)]
+            rows_u, ctx = pe.mp_lookup(st.w, pb.ids, axes=axes, world=world,
+                                       capacity=plan.capacity[g.gid])
+            p = pe.pool(rows_u, ctx.inv, pb.weights, pb.seg, 1 * g.n_bags)
+            pooled[g.gid] = p.reshape(1, g.n_bags, g.dim)
+        user = model.user_repr(dense, pooled, batch)          # [K, D]
+
+        # --- candidate tower: local chunk of ids via the MP engine ----------
+        st = emb[str(gid)]
+        cand_rows, ctx = pe.mp_lookup(st.w, cand_ids.reshape(-1), axes=axes,
+                                      world=world,
+                                      capacity=plan.capacity[gid])
+        rows = jnp.take(cand_rows, ctx.inv, axis=0)            # [cand_local, D]
+        scores = jnp.max(rows @ user.T, axis=-1).astype(jnp.float32)  # max over interests
+        k = min(top_k, cand_local)
+        sv, si = lax.top_k(scores, k)
+        gv = lax.all_gather(sv, axes, tiled=True)              # [world*k]
+        gi = lax.all_gather(cand_ids.reshape(-1)[si], axes, tiled=True)
+        fv, fi = lax.top_k(gv, top_k)
+        return fv, gi[fi]
+
+    def wrapped(state, batch, cand_ids):
+        emb_specs = state_specs(plan, axes, state["dense"], None)["emb"]
+        rep = jax.tree.map(lambda x: P(*((None,) * len(x.shape))), state["dense"])
+        bspec = jax.tree.map(lambda x: P(*((None,) * len(x.shape))), batch)
+        f = jax.shard_map(local_fn, mesh=mesh,
+                          in_specs=(emb_specs, rep, bspec, P(axes)),
+                          out_specs=(P(), P()), check_vma=False)
+        return f(state["emb"], state["dense"], batch, cand_ids)
+
+    return jax.jit(wrapped)

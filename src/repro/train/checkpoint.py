@@ -1,0 +1,164 @@
+"""Checkpoint save/restore: atomic, async-capable, elastic across mesh sizes.
+
+Layout: <dir>/step_<n>/ manifest.json + one .npy per leaf (zstd-compressed).
+Embedding tables are stored *logically* (gathered, world-size padding kept but
+recorded), so a checkpoint written on 512 chips restores onto any mesh: the
+row space is world-independent (scramble + offsets derive from raw vocabs;
+only the tail padding differs and is re-cut on load).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import zstandard
+
+_SEP = "/"
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+
+    def rec(prefix, node):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                rec(f"{prefix}{_SEP}{k}" if prefix else str(k), v)
+        elif hasattr(node, "_fields"):  # NamedTuple
+            for k in node._fields:
+                rec(f"{prefix}{_SEP}{k}" if prefix else str(k), getattr(node, k))
+        else:
+            flat[prefix] = node
+
+    rec("", tree)
+    return flat
+
+
+def _unflatten_into(template, flat: Dict[str, Any]):
+    def rec(prefix, node):
+        if isinstance(node, dict):
+            return {k: rec(f"{prefix}{_SEP}{k}" if prefix else str(k), v)
+                    for k, v in node.items()}
+        if hasattr(node, "_fields"):
+            vals = {k: rec(f"{prefix}{_SEP}{k}" if prefix else str(k), getattr(node, k))
+                    for k in node._fields}
+            return type(node)(**vals)
+        return flat[prefix]
+
+    return rec("", template)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, state: Any, keep: int = 3) -> str:
+    """Atomic checkpoint: write to tmp, fsync, rename."""
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    final = ckpt_dir / f"step_{step:08d}"
+    tmp = Path(tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_"))
+    flat = _flatten(jax.device_get(state))
+    manifest = {}
+    cctx = zstandard.ZstdCompressor(level=3)
+    for name, arr in flat.items():
+        arr = np.asarray(arr)
+        fn = name.replace(_SEP, "__") + ".npy.zst"
+        with open(tmp / fn, "wb") as f:
+            f.write(cctx.compress(_np_bytes(arr)))
+        manifest[name] = {"file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+    (tmp / "manifest.json").write_text(json.dumps({"step": step, "leaves": manifest}))
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _gc_checkpoints(ckpt_dir, keep)
+    return str(final)
+
+
+def _np_bytes(arr: np.ndarray) -> bytes:
+    import io
+    buf = io.BytesIO()
+    np.save(buf, arr, allow_pickle=False)
+    return buf.getvalue()
+
+
+def _np_from_bytes(b: bytes) -> np.ndarray:
+    import io
+    return np.load(io.BytesIO(b), allow_pickle=False)
+
+
+def _gc_checkpoints(ckpt_dir: Path, keep: int) -> None:
+    steps = sorted(p for p in ckpt_dir.iterdir() if p.name.startswith("step_"))
+    for p in steps[:-keep]:
+        shutil.rmtree(p, ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    d = Path(ckpt_dir)
+    if not d.exists():
+        return None
+    steps = sorted(int(p.name.split("_")[1]) for p in d.iterdir()
+                   if p.name.startswith("step_") and (p / "manifest.json").exists())
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, template: Any, step: Optional[int] = None,
+                       shardings: Any = None) -> Tuple[Any, int]:
+    """Restore into ``template`` (abstract or concrete pytree).
+
+    Elastic re-mesh: a leaf whose leading dim differs from the stored one
+    (world-padding) is zero-extended / truncated to the template's rows.
+    """
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    d = Path(ckpt_dir) / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())["leaves"]
+    dctx = zstandard.ZstdDecompressor()
+    tflat = _flatten(template)
+    out = {}
+    for name, t in tflat.items():
+        info = manifest[name]
+        arr = _np_from_bytes(dctx.decompress((d / info["file"]).read_bytes()))
+        tshape = tuple(t.shape)
+        if tuple(arr.shape) != tshape:
+            if arr.ndim >= 1 and arr.shape[1:] == tshape[1:]:
+                new = np.zeros(tshape, arr.dtype)
+                n = min(arr.shape[0], tshape[0])
+                new[:n] = arr[:n]
+                arr = new  # elastic re-pad (world-size change)
+            else:
+                raise ValueError(f"{name}: stored {arr.shape} vs template {tshape}")
+        out[name] = arr.astype(t.dtype)
+    state = _unflatten_into(template, out)
+    if shardings is not None:
+        state = jax.device_put(state, shardings)
+    return state, step
+
+
+class AsyncCheckpointer:
+    """Snapshot-to-host then write in a background thread (training continues)."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_path: Optional[str] = None
+
+    def save(self, step: int, state: Any) -> None:
+        self.wait()
+        host_state = jax.device_get(state)  # synchronous snapshot, async write
+
+        def work():
+            self.last_path = save_checkpoint(self.ckpt_dir, step, host_state, self.keep)
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

@@ -1,0 +1,300 @@
+"""Hybrid MP/DP train step for WDL models (paper §III-A + Fig. 6).
+
+One SPMD program under ``shard_map`` over the full mesh:
+
+  pack (D-Packing) -> wave lookups (K-Packing + K-Interleaving)
+  -> micro-batch pipeline (D-Interleaving): dense fwd/bwd of chunk i overlaps
+     the Shuffle of chunk i+1
+  -> dense grads psum (DP) + Adam ; sparse grads routed back (MP) + row-wise
+     Adagrad ; HybridHash hit grads psum'd into the replicated hot tier
+  -> FCounter update ; periodic HybridHash flush.
+
+Strategies (paper §II-C / §IV baselines):
+  'picasso' — the full system;
+  'hybrid'  — MP all_to_all per group but plan built without packing/cache;
+  'ps'      — PS-style all_gather+psum lookups (the fragmentary baseline).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import packed_embedding as pe
+from repro.core.features import PackedBatch, pack_group
+from repro.core.interleaving import wave_barrier
+from repro.core.packing import PicassoPlan
+from repro.dist.sharding import batch_specs, state_specs, to_named
+from repro.embedding.state import EmbeddingState
+from repro.models.wdl import WDLModel
+from repro.optim.optimizers import adam_init, adam_update, lamb_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    lr_emb: float = 0.05
+    lr_dense: float = 1e-3
+    optimizer: str = "adam"        # 'adam' | 'lamb'
+    strategy: str = "picasso"      # 'picasso' | 'ps'
+    pipeline_micro: bool = True    # D-Interleaving pipeline order
+    use_cache: bool = True
+    use_interleave: bool = True    # K-Interleaving waves (False: one wave)
+    cache_update: str = "psum"     # 'psum' (exact) | 'stale' (Algorithm 1)
+    flush_in_step: bool = True     # False: host calls make_flush_fn() instead
+    grad_compression: str = "none"  # 'none' | 'bf16' | 'f8' (dense DP psum)
+    eps: float = 1e-8
+
+
+def _mesh_world(mesh, axes) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _slice_micro(x, i, micro):
+    return lax.dynamic_slice_in_dim(x, i * micro, micro, axis=0)
+
+
+def make_train_step(model: WDLModel, plan: PicassoPlan, mesh, axes: Tuple[str, ...],
+                    global_batch: int, tcfg: TrainConfig = TrainConfig()):
+    """Returns (jitted_step, state_specs_pytree). step(state, batch) -> (state, metrics)."""
+    world = _mesh_world(mesh, axes)
+    assert global_batch % world == 0, (global_batch, world)
+    b_local = global_batch // world
+    micro = plan.microbatch if plan.microbatch <= b_local else b_local
+    n_micro = max(1, b_local // micro)
+    waves = plan.interleave if tcfg.use_interleave else [[g.gid for g in plan.groups]]
+    cache_on = tcfg.use_cache and any(plan.cache_rows.get(g.gid, 0) > 0 for g in plan.groups)
+
+    # ------------------------------------------------------------- lookups
+    def lookups(emb: Dict[str, EmbeddingState], packed: Dict[int, PackedBatch]):
+        rows, ctxs = {}, {}
+        ids_in = {g.gid: packed[g.gid].ids for g in plan.groups}
+        for wi, wave in enumerate(waves):
+            if wi > 0:
+                # K-Interleaving (Fig. 8c): wave wi's inputs pass through one
+                # barrier with wave wi-1's outputs -> a real control boundary.
+                prev = waves[wi - 1]
+                flat = wave_barrier([rows[g] for g in prev] + [ids_in[g] for g in wave])
+                for g, v in zip(prev, flat[: len(prev)]):
+                    rows[g] = v
+                for j, g in enumerate(wave):
+                    ids_in[g] = flat[len(prev) + j]
+            for gid in wave:
+                st = emb[str(gid)]
+                hk = st.cache.keys if cache_on else None
+                hr = st.cache.rows if cache_on else None
+                if tcfg.strategy == "ps":
+                    per_id = pe.ps_lookup(st.w, ids_in[gid], axes=axes, world=world)
+                    rows[gid], ctxs[gid] = per_id, None
+                else:
+                    rows[gid], ctxs[gid] = pe.mp_lookup(
+                        st.w, ids_in[gid], axes=axes, world=world,
+                        capacity=plan.capacity[gid], hot_keys=hk, hot_rows=hr)
+        return rows, ctxs
+
+    # -------------------------------------------------------- loss closure
+    def micro_loss(dense, rows, ctxs, packed, mb):
+        pooled = {}
+        for gid, pb in packed.items():
+            g = plan.group(gid)
+            if tcfg.strategy == "ps":
+                per_id = rows[gid] * pb.weights[:, None]
+                p = jax.ops.segment_sum(per_id, pb.seg, num_segments=micro * g.n_bags)
+            else:
+                p = pe.pool(rows[gid], ctxs[gid].inv, pb.weights, pb.seg, micro * g.n_bags)
+            pooled[gid] = p.reshape(micro, g.n_bags, g.dim)
+        loss_sum, logits = model.loss(dense, pooled, mb)
+        return loss_sum / global_batch, logits
+
+    # ------------------------------------------------------------ updates
+    def apply_updates(emb, rows_g, ctxs, pm):
+        ovf = jnp.zeros((), jnp.int32)
+        hits = jnp.zeros((), jnp.int32)
+        for gid, g_u in rows_g.items():
+            st = emb[str(gid)]
+            if tcfg.strategy == "ps":
+                # PS baseline: dense-ish scatter via all_gather of per-id grads
+                w2, acc2 = _ps_apply(st.w, st.acc, g_u, pm[gid].ids)
+                emb[str(gid)] = st._replace(w=w2, acc=acc2)
+                continue
+            ctx = ctxs[gid]
+            cache = st.cache if cache_on else None
+            w2, acc2, cache2 = pe.apply_sparse_grads(
+                st.w, st.acc, cache, ctx, g_u, axes=axes, world=world,
+                lr=tcfg.lr_emb, eps=tcfg.eps, cache_update=tcfg.cache_update)
+            counts2 = pe.count_frequencies(st.counts, ctx)
+            emb[str(gid)] = EmbeddingState(w=w2, acc=acc2, counts=counts2,
+                                           cache=cache2 if cache2 is not None else st.cache)
+            ovf = ovf + ctx.routing.overflow.astype(jnp.int32)
+            hits = hits + pe.cache_hit_count(ctx).astype(jnp.int32)
+        return emb, ovf, hits
+
+    def _ps_apply(w_shard, acc_shard, g_per_id, ids):
+        rps = w_shard.shape[0]
+        my = lax.axis_index(axes).astype(jnp.int32)
+        base = my * rps
+        all_ids = lax.all_gather(ids, axes, tiled=True)
+        all_g = lax.all_gather(g_per_id, axes, tiled=True)
+        local = all_ids - base
+        ok = (local >= 0) & (local < rps)
+        return pe._dedup_apply(w_shard, acc_shard, jnp.clip(local, 0, rps - 1),
+                               all_g, ok, tcfg.lr_emb, tcfg.eps)
+
+    # --------------------------------------------------------------- step
+    def local_step(state, batch):
+        emb: Dict[str, EmbeddingState] = dict(state["emb"])
+        dense, opt, step = state["dense"], state["opt"], state["step"]
+
+        packed_full = {g.gid: pack_group(g, batch["fields"]) for g in plan.groups}
+
+        def packed_micro(i):
+            out = {}
+            for gid, pb in packed_full.items():
+                g = plan.group(gid)
+                ips = g.ids_per_sample
+                ids = _slice_micro(pb.ids.reshape(b_local, ips), i, micro).reshape(-1)
+                wts = _slice_micro(pb.weights.reshape(b_local, ips), i, micro).reshape(-1)
+                seg = pb.seg[: micro * ips]  # per-sample pattern repeats
+                out[gid] = PackedBatch(ids=ids, weights=wts, seg=seg, n_bags=g.n_bags)
+            return out
+
+        def batch_micro(i):
+            mb = {"fields": {n: {k: _slice_micro(v, i, micro) for k, v in f.items()}
+                             for n, f in batch["fields"].items()},
+                  "labels": _slice_micro(batch["labels"], i, micro)}
+            if "dense" in batch:
+                mb["dense"] = _slice_micro(batch["dense"], i, micro)
+            return mb
+
+        grad_fn = jax.value_and_grad(micro_loss, argnums=(0, 1), has_aux=True)
+
+        loss_acc = jnp.zeros(())
+        g_dense_acc = jax.tree.map(jnp.zeros_like, dense)
+        ovf_acc = jnp.zeros((), jnp.int32)
+        hit_acc = jnp.zeros((), jnp.int32)
+
+        pm0 = packed_micro(0)
+        pending = (lookups(emb, pm0), pm0, batch_micro(0))
+        for i in range(n_micro):
+            (rows, ctxs), pm, mb = pending
+            if tcfg.pipeline_micro and i + 1 < n_micro:
+                # D-Interleaving: issue Shuffle of chunk i+1 before dense of i
+                pm_next = packed_micro(i + 1)
+                pending = (lookups(emb, pm_next), pm_next, batch_micro(i + 1))
+            (loss, _logits), (g_dense, g_rows) = grad_fn(dense, rows, ctxs, pm, mb)
+            loss_acc = loss_acc + loss
+            g_dense_acc = jax.tree.map(jnp.add, g_dense_acc, g_dense)
+            emb, ovf, hits = apply_updates(emb, g_rows, ctxs, pm)
+            ovf_acc, hit_acc = ovf_acc + ovf, hit_acc + hits
+            if not (tcfg.pipeline_micro) and i + 1 < n_micro:
+                pm_next = packed_micro(i + 1)
+                pending = (lookups(emb, pm_next), pm_next, batch_micro(i + 1))
+
+        # ---- dense DP: psum grads over the whole mesh ----------------------
+        if tcfg.grad_compression != "none":
+            from repro.optim.grad_compression import compressed_psum
+            g_dense_acc, _ = compressed_psum(g_dense_acc, axes,
+                                             mode=tcfg.grad_compression)
+        else:
+            g_dense_acc = lax.psum(g_dense_acc, axes)
+        loss_glob = lax.psum(loss_acc, axes)
+        upd = adam_update if tcfg.optimizer == "adam" else lamb_update
+        dense2, opt2 = upd(dense, g_dense_acc, opt, tcfg.lr_dense)
+
+        # ---- HybridHash flush (Algorithm 1 L23-26) -------------------------
+        step2 = step + 1
+        if cache_on and tcfg.strategy != "ps" and tcfg.flush_in_step:
+            do_flush = (step2 >= plan.warmup_iters) & (step2 % plan.flush_iters == 0)
+
+            def flush_all(emb_in):
+                out = dict(emb_in)
+                for g in plan.groups:
+                    st = out[str(g.gid)]
+                    if plan.cache_rows.get(g.gid, 0) == 0:
+                        continue
+                    w2, acc2, counts2, cache2 = pe.flush_cache(
+                        st.w, st.acc, st.counts, st.cache, axes=axes, world=world,
+                        write_back=tcfg.cache_update == "psum")
+                    out[str(g.gid)] = EmbeddingState(w2, acc2, counts2, cache2)
+                return out
+
+            emb = lax.cond(do_flush, flush_all, lambda e: e, emb)
+
+        new_state = {"emb": emb, "dense": dense2, "opt": opt2, "step": step2}
+        metrics = {"loss": loss_glob,
+                   "overflow": lax.psum(ovf_acc, axes),
+                   "cache_hits": lax.psum(hit_acc, axes),
+                   "step": step2}
+        return new_state, metrics
+
+    # ---------------------------------------------------------------- wrap
+    dense0 = jax.eval_shape(lambda k: model.init_dense(k), jax.random.PRNGKey(0))
+    opt0 = jax.eval_shape(adam_init, dense0)
+    sspecs = state_specs(plan, axes, dense0, opt0)
+
+    def wrapped(state, batch):
+        bspecs = batch_specs(batch, axes)
+        f = jax.shard_map(local_step, mesh=mesh,
+                          in_specs=(sspecs, bspecs),
+                          out_specs=(sspecs, {"loss": P(), "overflow": P(),
+                                              "cache_hits": P(), "step": P()}),
+                          check_vma=False)
+        return f(state, batch)
+
+    step_fn = jax.jit(wrapped, donate_argnums=(0,))
+    return step_fn, sspecs
+
+
+def make_flush_fn(plan: PicassoPlan, mesh, axes: Tuple[str, ...],
+                  cache_update: str = "psum"):
+    """Host-scheduled HybridHash flush: jitted state -> state (called every
+    ``plan.flush_iters`` steps by the trainer when flush_in_step=False).
+    Keeps the flush collectives OUT of the hot train step."""
+    world = _mesh_world(mesh, axes)
+
+    def local_flush(emb):
+        out = dict(emb)
+        for g in plan.groups:
+            st = out[str(g.gid)]
+            if plan.cache_rows.get(g.gid, 0) == 0:
+                continue
+            w2, acc2, counts2, cache2 = pe.flush_cache(
+                st.w, st.acc, st.counts, st.cache, axes=axes, world=world,
+                write_back=cache_update == "psum")
+            out[str(g.gid)] = EmbeddingState(w2, acc2, counts2, cache2)
+        return out
+
+    especs = {str(g.gid): __import__("repro.dist.sharding", fromlist=["emb_state_specs"]
+                                     ).emb_state_specs(axes) for g in plan.groups}
+
+    def wrapped(state):
+        f = jax.shard_map(local_flush, mesh=mesh, in_specs=(especs,),
+                          out_specs=especs, check_vma=False)
+        return {**state, "emb": f(state["emb"])}
+
+    return jax.jit(wrapped, donate_argnums=(0,))
+
+
+def init_state(model: WDLModel, plan: PicassoPlan, key, mesh=None, axes=None):
+    """Initialize a TrainState; with mesh given, tables come out pre-sharded."""
+    from repro.embedding.state import init_embedding_state
+
+    def build(k):
+        k1, k2 = jax.random.split(k)
+        emb = init_embedding_state(k1, plan)
+        dense = model.init_dense(k2)
+        return {"emb": {str(g): s for g, s in emb.items()},
+                "dense": dense, "opt": adam_init(dense),
+                "step": jnp.zeros((), jnp.int32)}
+
+    if mesh is None:
+        return build(key)
+    dense0 = jax.eval_shape(lambda k: model.init_dense(k), key)
+    sspecs = state_specs(plan, axes, dense0, jax.eval_shape(adam_init, dense0))
+    shardings = to_named(mesh, sspecs)
+    return jax.jit(build, out_shardings=shardings)(key)

@@ -1,0 +1,88 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from repro.kernels import ref
+from repro.kernels.cross_layer import cross_layer_pallas
+from repro.kernels.dot_interaction import dot_interaction_pallas
+from repro.kernels.embedding_bag import embedding_bag_pallas
+from repro.kernels.fm_interaction import fm_interaction_pallas
+
+RNG = np.random.default_rng(0)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == np.float32 else dict(atol=1e-1, rtol=1e-1)
+
+
+@pytest.mark.parametrize("v,d,n,nb", [(32, 8, 20, 5), (128, 16, 64, 16),
+                                      (64, 50, 40, 8), (256, 128, 100, 10)])
+@pytest.mark.parametrize("dtype", [np.float32])
+def test_embedding_bag_sweep(v, d, n, nb, dtype):
+    table = RNG.normal(size=(v, d)).astype(dtype)
+    ids = RNG.integers(0, v, n).astype(np.int32)
+    # sorted segments covering every bag at least once
+    seg = np.sort(np.concatenate([np.arange(nb), RNG.integers(0, nb, n - nb)])).astype(np.int32)
+    w = RNG.normal(size=n).astype(dtype)
+    got = embedding_bag_pallas(jnp.asarray(table), jnp.asarray(ids), jnp.asarray(seg),
+                               jnp.asarray(w), nb, interpret=True)
+    exp = ref.embedding_bag_ref(jnp.asarray(table), jnp.asarray(ids), jnp.asarray(seg),
+                                nb, jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), **_tol(dtype))
+
+
+@pytest.mark.parametrize("b,f,d", [(8, 4, 8), (33, 7, 12), (128, 26, 10), (65, 13, 16)])
+def test_fm_sweep(b, f, d):
+    x = jnp.asarray(RNG.normal(size=(b, f, d)).astype(np.float32))
+    got = fm_interaction_pallas(x, block_b=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.fm_interaction_ref(x)),
+                               atol=1e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("b,f,d", [(8, 4, 8), (32, 27, 16), (65, 13, 16)])
+def test_dot_sweep(b, f, d):
+    x = jnp.asarray(RNG.normal(size=(b, f, d)).astype(np.float32))
+    got = dot_interaction_pallas(x, block_b=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.dot_interaction_ref(x)),
+                               atol=1e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("b,d,bb,bd", [(16, 16, 8, 8), (50, 24, 16, 8),
+                                       (128, 130, 32, 64), (33, 7, 16, 8)])
+def test_cross_sweep(b, d, bb, bd):
+    x0 = jnp.asarray(RNG.normal(size=(b, d)).astype(np.float32))
+    x = jnp.asarray(RNG.normal(size=(b, d)).astype(np.float32))
+    w = jnp.asarray(RNG.normal(size=(d, d)).astype(np.float32) / np.sqrt(d))
+    bias = jnp.asarray(RNG.normal(size=(d,)).astype(np.float32))
+    got = cross_layer_pallas(x0, x, w, bias, block_b=bb, block_d=bd, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.cross_layer_ref(x0, x, w, bias)),
+                               atol=1e-3, rtol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 40), st.integers(2, 12), st.integers(2, 24), st.integers(1, 9))
+def test_embedding_bag_property(v, d, n, nb):
+    """Property: kernel == take+segment_sum for any sorted covering seg."""
+    nb = min(nb, n)
+    rng = np.random.default_rng(v * 1000 + n)
+    table = rng.normal(size=(v, d)).astype(np.float32)
+    ids = rng.integers(0, v, n).astype(np.int32)
+    seg = np.sort(np.concatenate([np.arange(nb), rng.integers(0, nb, n - nb)])).astype(np.int32)
+    w = rng.normal(size=n).astype(np.float32)
+    got = embedding_bag_pallas(jnp.asarray(table), jnp.asarray(ids), jnp.asarray(seg),
+                               jnp.asarray(w), nb, interpret=True)
+    exp = ref.embedding_bag_ref(jnp.asarray(table), jnp.asarray(ids), jnp.asarray(seg),
+                                nb, jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), atol=1e-4, rtol=1e-4)
+
+
+def test_bf16_dtype():
+    x = jnp.asarray(RNG.normal(size=(16, 8, 8))).astype(jnp.bfloat16)
+    got = fm_interaction_pallas(x, block_b=8, interpret=True)
+    exp = ref.fm_interaction_ref(x)
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(exp, np.float32),
+                                atol=1.0, rtol=0.1)

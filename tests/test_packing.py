@@ -1,0 +1,117 @@
+"""PICASSO planner unit + property tests (Eq. 1/2/3 logic)."""
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.configs.base import FeatureField, InteractionSpec, WDLConfig
+from repro.core.packing import (PackedGroup, build_tables, calc_vparam, make_plan,
+                                plan_capacity, plan_interleave, plan_microbatch,
+                                plan_packing)
+
+
+def _cfg(fields):
+    return WDLConfig(name="t", fields=tuple(fields), n_dense=0,
+                     interactions=(InteractionSpec("fm"),), mlp_dims=(8,))
+
+
+def test_groups_by_dim():
+    fields = [FeatureField("a", 100, 8), FeatureField("b", 200, 8),
+              FeatureField("c", 300, 16)]
+    groups = plan_packing(_cfg(fields), world=4)
+    dims = sorted(g.dim for g in groups)
+    assert dims == [8, 16]
+    g8 = next(g for g in groups if g.dim == 8)
+    assert {t.name for t in g8.tables} == {"a", "b"}
+
+
+def test_no_packing_mode():
+    fields = [FeatureField(f"f{i}", 100, 8) for i in range(5)]
+    groups = plan_packing(_cfg(fields), world=2, enable_packing=False)
+    assert len(groups) == 5  # one fragmentary op per table (baseline)
+
+
+def test_vparam_split():
+    # one dominant group (many tables, big dim) must split into shards
+    fields = [FeatureField(f"big{i}", 10_000, 32) for i in range(8)]
+    fields += [FeatureField("small", 100, 8)]
+    groups = plan_packing(_cfg(fields), world=2, split_factor=1.1)
+    g32 = [g for g in groups if g.dim == 32]
+    assert len(g32) > 1  # split happened
+    names = sorted(t.name for g in g32 for t in g.tables)
+    assert names == sorted(f"big{i}" for i in range(8))  # no loss, no dup
+
+
+def test_shared_table():
+    fields = [FeatureField("hist", 1000, 8, max_len=10, pooling="none"),
+              FeatureField("tgt", 1000, 8, shared_table="hist")]
+    tables, f2t = build_tables(_cfg(fields))
+    assert list(tables) == ["hist"]
+    assert tables["hist"].ids_per_sample == 11
+    groups = plan_packing(_cfg(fields), world=4)
+    assert len(groups) == 1
+    assert groups[0].n_bags == 11  # 10 un-pooled positions + 1 pooled bag
+
+
+def test_rows_padded_to_world():
+    fields = [FeatureField("a", 1001, 8)]
+    for world in (1, 2, 64, 512):
+        g = plan_packing(_cfg(fields), world)[0]
+        assert g.rows % world == 0 and g.rows >= 1001
+
+
+def test_capacity_exact_and_planned():
+    g = plan_packing(_cfg([FeatureField("a", 10_000, 8)]), 8)[0]
+    assert plan_capacity(g, local_ids=64, world=8, exact=True) == 64
+    cap = plan_capacity(g, local_ids=1024, world=8, slack=2.0)
+    assert 4 <= cap <= 1024
+    assert plan_capacity(g, 1024, 8, slack=2.0, cache_hit_ratio=0.5) <= cap
+
+
+def test_microbatch_divides():
+    for b in (8, 48, 128):
+        bs = plan_microbatch(b, act_bytes_per_sample=1 << 20,
+                             mem_budget_bytes=16 << 20)
+        assert b % bs == 0
+    assert plan_microbatch(64, 1.0, n_micro=4) == 16
+
+
+def test_interleave_partition():
+    fields = [FeatureField(f"f{i}", 1000 * (i + 1), 2 ** (2 + i % 3)) for i in range(9)]
+    groups = plan_packing(_cfg(fields), 4)
+    ilv = plan_interleave(groups, n_groups=2)
+    flat = sorted(g for wave in ilv for g in wave)
+    assert flat == sorted(g.gid for g in groups)  # exact partition
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(10, 50_000),       # vocab
+                          st.sampled_from([4, 8, 16, 32]),  # dim
+                          st.integers(1, 20)),            # max_len
+                min_size=1, max_size=25),
+       st.sampled_from([1, 4, 8, 512]))
+def test_plan_properties(specs, world):
+    fields = [FeatureField(f"f{i}", v, d, max_len=m,
+                           pooling="sum" if m == 1 else "none")
+              for i, (v, d, m) in enumerate(specs)]
+    plan = make_plan(_cfg(fields), world=world, per_device_batch=8)
+    # every field appears in exactly one group slot
+    seen = [s.field.name for g in plan.groups for s in g.slots]
+    assert sorted(seen) == sorted(f.name for f in fields)
+    for g in plan.groups:
+        assert g.rows % world == 0
+        assert all(t.dim == g.dim for t in g.tables)
+        # table offsets are disjoint
+        spans = sorted((off, off + next(t.vocab for t in g.tables if t.name == n))
+                       for n, off in g.table_offsets.items())
+        for (a0, a1), (b0, b1) in zip(spans, spans[1:]):
+            assert a1 <= b0
+        assert plan.capacity[g.gid] >= 4
+    flat = sorted(g for wave in plan.interleave for g in wave)
+    assert flat == sorted(g.gid for g in plan.groups)
+
+
+def test_calc_vparam_monotone():
+    t1 = plan_packing(_cfg([FeatureField("a", 100, 8)]), 1)[0]
+    t2 = plan_packing(_cfg([FeatureField("a", 100, 16)]), 1)[0]
+    assert calc_vparam(t2.tables) > calc_vparam(t1.tables)
