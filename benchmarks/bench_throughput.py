@@ -1,6 +1,12 @@
 """Paper Tab. III / Fig. 10: training throughput of the benchmark models
-(DLRM / DeepFM / DIN / DCN-v2) under PICASSO vs the PS baseline strategy.
-CPU-scaled smoke configs; the *ratio* is the reproduced quantity."""
+(DLRM / DeepFM / DIN / DCN-v2) under the EmbeddingEngine's registry
+strategies — 'picasso' vs the 'hybrid' (MP, no cache) and 'ps' baselines.
+CPU-scaled smoke configs; the *ratio* is the reproduced quantity.
+
+``--smoke`` runs one model at a reduced batch with fewer timing iters — the
+fast CI pass wired into scripts/ci.sh."""
+import argparse
+
 from repro.configs import get_config
 from repro.configs.paper_models import din, dlrm
 from repro.train.train_step import TrainConfig
@@ -10,7 +16,9 @@ from benchmarks.common import bench_train_ips, emit
 GB = 128
 
 
-def models():
+def models(smoke: bool = False):
+    if smoke:
+        return {"deepfm": get_config("deepfm", smoke=True)}
     return {
         "dlrm": dlrm(criteo=False, scale=0.01),
         "deepfm": get_config("deepfm", smoke=True),
@@ -19,16 +27,32 @@ def models():
     }
 
 
-def run():
-    for name, cfg in models().items():
-        pic = bench_train_ips(cfg, GB, TrainConfig(strategy="picasso"))
-        ps = bench_train_ips(cfg, GB, TrainConfig(strategy="ps", use_cache=False),
-                             enable_cache=False)
+def run(smoke: bool = False):
+    gb = 32 if smoke else GB
+    iters = 2 if smoke else 5
+    for name, cfg in models(smoke).items():
+        pic = bench_train_ips(cfg, gb, TrainConfig(strategy="picasso"), iters=iters)
+        ps = bench_train_ips(cfg, gb, TrainConfig(strategy="ps", use_cache=False),
+                             iters=iters, enable_cache=False)
         speedup = ps["us_per_call"] / pic["us_per_call"]
         emit(f"throughput/{name}/picasso", pic["us_per_call"], f"ips={pic['ips']:.0f}")
         emit(f"throughput/{name}/ps", ps["us_per_call"], f"ips={ps['ips']:.0f}")
         emit(f"throughput/{name}/speedup", 0.0, f"x{speedup:.2f}")
+        if not smoke:
+            # paper §II-C intermediate baseline: MP routing, but neither
+            # D-Packing nor the HybridHash tier
+            hyb = bench_train_ips(cfg, gb,
+                                  TrainConfig(strategy="hybrid", use_cache=False),
+                                  iters=iters, enable_cache=False,
+                                  enable_packing=False)
+            emit(f"throughput/{name}/hybrid", hyb["us_per_call"],
+                 f"ips={hyb['ips']:.0f}")
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one model, small batch, 2 iters (CI fast pass)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke)

@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# Tier-1 CI: full test suite + fast benchmark smoke pass.
+#
+#   ./scripts/ci.sh            # from anywhere; cd's to the repo root
+#
+# Seed baseline (PR 0, recorded at PR 1 so regressions vs. seed are
+# detectable): `PYTHONPATH=src python -m pytest -q` FAILED with
+#   - 7 collection errors:
+#       tests/test_checkpoint.py    (zstandard not installed)
+#       tests/test_engine.py        (hypothesis not installed)
+#       tests/test_kernels.py       (hypothesis not installed)
+#       tests/test_models_smoke.py  (repro.dist module missing)
+#       tests/test_packing.py       (hypothesis not installed)
+#       tests/test_system.py        (repro.dist module missing)
+#       tests/test_transformer.py   (hypothesis not installed)
+#   - tests/test_distributed.py: 5 failed (repro.dist missing in subprocess)
+#   - tests/test_grad_compression.py: 2 errors (jax.sharding.AxisType
+#     missing on jax 0.4.37)
+#   - 11 passed (test_data, test_moe, remaining test_grad_compression-free
+#     collectible modules)
+# All of the above pass as of PR 1; this script therefore runs strict.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+echo "== tier-1: benchmark smoke =="
+python -m benchmarks.bench_throughput --smoke
+
+echo "== ci.sh: all green =="

@@ -6,7 +6,9 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 import numpy as np
 
-mesh = jax.make_mesh((4, 2), ("data", "model"))
+from repro.dist.compat import make_mesh_compat, shard_map
+
+mesh = make_mesh_compat((4, 2), ("data", "model"))
 axes = ("data", "model")
 WORLD = 8
 
@@ -20,7 +22,7 @@ def f(x):
 
 
 xs = jnp.zeros((WORLD, 4), jnp.int32)
-recv, idxs = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P(axes), out_specs=P(axes)))(xs)
+recv, idxs = jax.jit(shard_map(f, mesh=mesh, in_specs=P(axes), out_specs=P(axes)))(xs)
 print("axis_index per device:", np.array(idxs).ravel())
 print("recv on device 0:", np.array(recv)[0])   # expect [0,100,200,...,700] + 0
 print("recv on device 3:", np.array(recv)[3])   # expect j*100+3
@@ -34,7 +36,7 @@ def g(wshard):
     return (wshard[0] == idx * 2).reshape(1, 1)
 
 
-ok = jax.jit(jax.shard_map(g, mesh=mesh, in_specs=P(axes), out_specs=P(axes)))(w)
+ok = jax.jit(shard_map(g, mesh=mesh, in_specs=P(axes), out_specs=P(axes)))(w)
 print("block order matches axis_index:", np.array(ok).ravel())
 
 # all_gather + psum with tuple axes
@@ -44,6 +46,6 @@ def h(x):
     return g.reshape(1, -1), s.reshape(1, 1)
 
 
-gg, ss = jax.jit(jax.shard_map(h, mesh=mesh, in_specs=P(axes), out_specs=(P(axes), P(axes))))(
+gg, ss = jax.jit(shard_map(h, mesh=mesh, in_specs=P(axes), out_specs=(P(axes), P(axes))))(
     jnp.arange(8.0).reshape(8, 1))
 print("all_gather row0:", np.array(gg)[0], "psum:", np.array(ss).ravel()[0])

@@ -3,11 +3,13 @@
 K-Interleaving: packed lookups are issued in planner-assigned waves with
 ``optimization_barrier`` pinning wave boundaries, so comm-bound Shuffle ops of
 wave k+1 can overlap the memory/compute-bound Gather+SegmentReduction of wave
-k instead of all all_to_alls racing for ICI at once (Fig. 8c).
+k instead of all all_to_alls racing for ICI at once (Fig. 8c). The wave loop
+lives in ``repro.engine.EmbeddingEngine._wave_lookups`` — one place, shared by
+train, serve, retrieval, and the dry-run cells.
 
-D-Interleaving: the train/serve steps process micro-batches in a software
-pipeline where the (comm-bound) lookup of micro-batch i+1 is issued before the
-(compute-bound) dense stage of micro-batch i (Fig. 8b); see
+D-Interleaving: the train step processes micro-batches in a software pipeline
+where the (comm-bound) ``EmbeddingEngine.forward`` of micro-batch i+1 is
+issued before the (compute-bound) dense stage of micro-batch i (Fig. 8b); see
 repro/train/train_step.py. Sparse updates of micro-batch i land after the
 lookup of i+1 was issued — the same bounded-staleness-within-a-batch the
 paper's pipeline has; n_micro=1 recovers exact semantics.

@@ -1,4 +1,8 @@
-"""PICASSO packed-embedding engine (paper §III-B, §III-D).
+"""PICASSO packed-embedding primitives (paper §III-B, §III-D).
+
+This is the kernel layer beneath ``repro.engine.EmbeddingEngine``: stateless,
+fixed-shape collective building blocks. Workloads never call these directly —
+they go through the engine's ``LookupStrategy`` classes, which compose them.
 
 Executes one *packed* lookup per D-packed group, model-parallel over the whole
 mesh, inside ``shard_map``:

@@ -1,0 +1,15 @@
+"""Distributed execution utilities: sharding specs + jax version compat."""
+from repro.dist.compat import make_mesh_compat, shard_map
+from repro.dist.sharding import (batch_specs, emb_specs, emb_state_specs,
+                                 replicated, state_specs, to_named)
+
+__all__ = [
+    "batch_specs",
+    "emb_specs",
+    "emb_state_specs",
+    "make_mesh_compat",
+    "replicated",
+    "shard_map",
+    "state_specs",
+    "to_named",
+]

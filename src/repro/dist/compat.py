@@ -1,0 +1,49 @@
+"""Version shims so the repo runs on any jax from 0.4.3x to current.
+
+Two API drifts are absorbed here:
+
+* ``shard_map`` moved from ``jax.experimental.shard_map`` to ``jax.shard_map``
+  and its replication-check kwarg was renamed ``check_rep`` -> ``check_vma``.
+* ``jax.make_mesh`` grew an ``axis_types`` kwarg (and ``jax.sharding.AxisType``)
+  that older versions reject.
+
+Every shard_map/make_mesh call in the repo goes through these wrappers; no
+other module should touch the raw jax entry points.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    _shard_map_impl = jax.shard_map
+else:  # jax < 0.6: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+_SHARD_MAP_KWARGS = frozenset(inspect.signature(_shard_map_impl).parameters)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: Optional[bool] = None):
+    """``jax.shard_map`` with the replication check disabled portably.
+
+    ``check_vma=False`` (new name) / ``check_rep=False`` (old name) is required
+    because the engine's collectives produce values jax cannot prove replicated.
+    """
+    kw = {}
+    if check_vma is not None:
+        if "check_vma" in _SHARD_MAP_KWARGS:
+            kw["check_vma"] = check_vma
+        elif "check_rep" in _SHARD_MAP_KWARGS:
+            kw["check_rep"] = check_vma
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+def make_mesh_compat(shape: Sequence[int], axes: Sequence[str]):
+    """``jax.make_mesh`` with Auto axis types where the version supports them."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(tuple(shape), tuple(axes),
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes))

@@ -1,0 +1,80 @@
+"""PartitionSpec builders for the hybrid MP/DP layout (paper §III-A).
+
+One convention everywhere:
+
+* embedding tables / adagrad accs / FCounters — row-sharded over the *whole*
+  mesh (every chip is a model-parallel shard);
+* the HybridHash hot tier — replicated (a hit is a local gather);
+* dense params + optimizer moments — replicated (DP side of the hybrid);
+* batches — leading dim sharded over the whole mesh (every chip also holds a
+  data shard: that is PICASSO's "hybrid" placement).
+
+These spec pytrees mirror the state pytrees exactly (same dict keys, same
+NamedTuple containers), so they serve as ``shard_map`` in/out specs and — via
+``to_named`` — as ``jit`` in/out shardings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.packed_embedding import CacheState
+from repro.core.packing import PicassoPlan
+from repro.embedding.state import EmbeddingState
+
+Axes = Union[str, Tuple[str, ...]]
+
+
+def _is_spec(x: Any) -> bool:
+    return isinstance(x, P)
+
+
+def replicated(tree: Any) -> Any:
+    """Fully-replicated specs matching ``tree``'s structure (rank-aware)."""
+    return jax.tree.map(lambda x: P(*((None,) * len(x.shape))), tree)
+
+
+def to_named(mesh, specs: Any) -> Any:
+    """PartitionSpec pytree -> NamedSharding pytree on ``mesh``."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs, is_leaf=_is_spec)
+
+
+def batch_specs(batch: Any, axes: Axes) -> Any:
+    """Shard every batch leaf's leading dim over the full mesh (hybrid DP)."""
+    return jax.tree.map(
+        lambda x: P(axes, *((None,) * (len(x.shape) - 1))), batch)
+
+
+def emb_state_specs(axes: Axes) -> EmbeddingState:
+    """Specs for one packed group's EmbeddingState (table MP, hot tier DP)."""
+    return EmbeddingState(
+        w=P(axes, None),
+        acc=P(axes, None),
+        counts=P(axes),
+        cache=CacheState(keys=P(), rows=P(), acc=P()),
+    )
+
+
+def emb_specs(plan: PicassoPlan, axes: Axes) -> Dict[str, EmbeddingState]:
+    """Specs for the full per-group embedding dict (the ``"emb"`` subtree)."""
+    return {str(g.gid): emb_state_specs(axes) for g in plan.groups}
+
+
+def state_specs(plan: PicassoPlan, axes: Axes, dense: Any,
+                opt: Optional[Any] = None) -> Dict[str, Any]:
+    """Specs for the full train/serve state pytree.
+
+    ``opt=None`` builds the serve-time subset (no optimizer, no step counter);
+    callers then index ``["emb"]`` / ``["dense"]`` as needed.
+    """
+    specs: Dict[str, Any] = {
+        "emb": emb_specs(plan, axes),
+        "dense": replicated(dense),
+    }
+    if opt is not None:
+        specs["opt"] = replicated(opt)
+        specs["step"] = P()
+    return specs

@@ -1,0 +1,21 @@
+"""Unified embedding engine: one sparse path for train / serve / retrieval.
+
+``EmbeddingEngine`` executes a ``PicassoPlan`` with a pluggable
+``LookupStrategy`` (``'picasso' | 'hybrid' | 'ps'``, see ``strategies``).
+"""
+from repro.engine.engine import EmbeddingEngine, EngineContext
+from repro.engine.strategies import (HybridStrategy, LookupStrategy, PicassoStrategy,
+                                     PSStrategy, available_strategies, get_strategy,
+                                     register_strategy)
+
+__all__ = [
+    "EmbeddingEngine",
+    "EngineContext",
+    "HybridStrategy",
+    "LookupStrategy",
+    "PSStrategy",
+    "PicassoStrategy",
+    "available_strategies",
+    "get_strategy",
+    "register_strategy",
+]

@@ -1,0 +1,183 @@
+"""EmbeddingEngine: the one owner of PICASSO's packed sparse path.
+
+Architecture (engine layer)
+---------------------------
+
+Every workload — hybrid MP/DP training, online/bulk serving, two-tower
+retrieval, and the dry-run cells — consumes the *same* engine instead of
+re-implementing the ``pack_group -> lookup -> pool`` loop:
+
+    EmbeddingEngine(plan, axes, world, strategy=<name>)
+        .forward(emb, packed)          -> (pooled, ctx)     # K-interleaved
+        .backward(emb, ctx, g_pooled)  -> (emb', metrics)   # transposed path
+        .flush(emb)                    -> emb'              # HybridHash flush
+        .lookup_rows(emb, gid, ids)    -> rows              # raw per-id rows
+
+``forward`` runs the planner's K-Interleaving waves (lookups of wave k+1 are
+pinned behind a barrier with wave k's outputs, Fig. 8c) and pools each packed
+group into ``pooled[gid]: [B, n_bags, D]``. ``backward`` takes the loss
+gradient w.r.t. those pooled tensors, applies the (linear) SegmentReduction
+transpose to recover per-row gradients, and hands them to the strategy's
+update path; it also folds cache hit / bucket overflow counters into metrics.
+``ctx`` is a pytree, so engine calls compose with ``jax.value_and_grad``,
+``lax.cond`` and the D-Interleaving micro-batch pipeline in the train step.
+
+The sparse *mechanism* (which collectives move ids and gradients, whether a
+hot tier absorbs the skew head) is a ``LookupStrategy`` selected by name from
+the registry in ``repro.engine.strategies`` — ``'picasso'``, ``'hybrid'``,
+``'ps'``. Scenario PRs add strategies; they do not touch this file's callers.
+
+All shapes are static: the engine runs inside ``shard_map`` on TPU meshes.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packed_embedding as pe
+from repro.core.features import PackedBatch
+from repro.core.interleaving import wave_barrier
+from repro.core.packing import PicassoPlan
+from repro.embedding.state import EmbeddingState
+from repro.engine.strategies import LookupStrategy, get_strategy
+
+Axes = Union[str, Tuple[str, ...]]
+
+
+class EngineContext(NamedTuple):
+    """Everything ``backward`` needs from a ``forward`` call (a pytree)."""
+
+    ctxs: Dict[int, Any]            # gid -> strategy lookup ctx
+    packed: Dict[int, PackedBatch]  # gid -> the packed batch it served
+
+
+class EmbeddingEngine:
+    """Owns the full sparse path for one PicassoPlan on one mesh.
+
+    Parameters
+    ----------
+    plan: the planner output (groups, capacities, waves, cache budget).
+    axes/world: mesh axes the engine's collectives run over, and their size.
+    strategy: registry name — ``'picasso' | 'hybrid' | 'ps'`` (see
+        ``repro.engine.strategies.available_strategies()``).
+    use_cache: enable the HybridHash hot tier (only honoured by strategies
+        with ``uses_cache=True`` and plans with a non-zero cache budget).
+    use_interleave: issue lookups in the planner's K-Interleaving waves;
+        ``False`` collapses to a single wave.
+    lr_emb/eps: row-wise adagrad hyperparameters for the sparse update.
+    cache_update: ``'psum'`` (exact, replica-consistent hot tier) or
+        ``'stale'`` (Algorithm 1 bounded-staleness semantics).
+    capacity: optional per-gid override of the all_to_all bucket capacity
+        (e.g. retrieval candidate towers that look up far more ids per shard
+        than the training batch the plan was sized for).
+    """
+
+    def __init__(self, plan: PicassoPlan, axes: Axes, world: int, *,
+                 strategy: str = "picasso", use_cache: bool = True,
+                 use_interleave: bool = True, lr_emb: float = 0.05,
+                 eps: float = 1e-8, cache_update: str = "psum",
+                 capacity: Optional[Dict[int, int]] = None):
+        cls = get_strategy(strategy)   # raises on unknown names
+        self.plan = plan
+        self.axes = axes
+        self.world = world
+        self.strategy_name = strategy
+        self.cache_update = cache_update
+        self.strategy: LookupStrategy = cls(
+            axes=axes, world=world,
+            capacity=dict(capacity if capacity is not None else plan.capacity),
+            lr=lr_emb, eps=eps, cache_update=cache_update)
+        self.cache_on = (use_cache and cls.uses_cache
+                         and any(plan.cache_rows.get(g.gid, 0) > 0
+                                 for g in plan.groups))
+        self.waves = (plan.interleave if use_interleave
+                      else [[g.gid for g in plan.groups]])
+
+    # ------------------------------------------------------------- forward
+    def _wave_lookups(self, emb: Dict[str, EmbeddingState],
+                      packed: Dict[int, PackedBatch]
+                      ) -> Tuple[Dict[int, jnp.ndarray], Dict[int, Any]]:
+        """Per-group lookups in K-Interleaving waves (Fig. 8c)."""
+        rows: Dict[int, jnp.ndarray] = {}
+        ctxs: Dict[int, Any] = {}
+        ids_in = {g.gid: packed[g.gid].ids for g in self.plan.groups}
+        for wi, wave in enumerate(self.waves):
+            if wi > 0:
+                # wave wi's inputs pass through one barrier with wave wi-1's
+                # outputs -> a real control boundary between the all_to_alls.
+                prev = self.waves[wi - 1]
+                flat = wave_barrier([rows[g] for g in prev]
+                                    + [ids_in[g] for g in wave])
+                for g, v in zip(prev, flat[: len(prev)]):
+                    rows[g] = v
+                for j, g in enumerate(wave):
+                    ids_in[g] = flat[len(prev) + j]
+            for gid in wave:
+                rows[gid], ctxs[gid] = self.strategy.lookup(
+                    emb[str(gid)], gid, ids_in[gid], cache_on=self.cache_on)
+        return rows, ctxs
+
+    def forward(self, emb: Dict[str, EmbeddingState],
+                packed: Dict[int, PackedBatch]
+                ) -> Tuple[Dict[int, jnp.ndarray], EngineContext]:
+        """Packed batch -> pooled group outputs ``[B, n_bags, D]`` + ctx."""
+        rows, ctxs = self._wave_lookups(emb, packed)
+        pooled = {}
+        for gid, pb in packed.items():
+            g = self.plan.group(gid)
+            b = pb.ids.shape[0] // g.ids_per_sample
+            p = pe.pool(rows[gid], ctxs[gid].inv, pb.weights, pb.seg,
+                        b * g.n_bags)
+            pooled[gid] = p.reshape(b, g.n_bags, g.dim)
+        return pooled, EngineContext(ctxs=ctxs, packed=dict(packed))
+
+    def lookup_rows(self, emb: Dict[str, EmbeddingState], gid: int,
+                    ids: jnp.ndarray) -> jnp.ndarray:
+        """Raw per-id rows ``[n, D]`` for one group (retrieval towers)."""
+        rows_u, ctx = self.strategy.lookup(emb[str(gid)], gid, ids,
+                                           cache_on=self.cache_on)
+        return jnp.take(rows_u, ctx.inv, axis=0)
+
+    # ------------------------------------------------------------ backward
+    def backward(self, emb: Dict[str, EmbeddingState], ctx: EngineContext,
+                 g_pooled: Dict[int, jnp.ndarray]
+                 ) -> Tuple[Dict[str, EmbeddingState], Dict[str, jnp.ndarray]]:
+        """Pooled grads -> sparse updates. Returns (emb', local metrics).
+
+        The SegmentReduction of ``forward`` is linear in the looked-up rows,
+        so its transpose is explicit: ``g_rows[u] = sum_{i: inv[i]=u} w[i] *
+        g_pooled[seg[i]]``. Metrics are per-shard sums; callers psum them.
+        """
+        emb = dict(emb)
+        ovf = jnp.zeros((), jnp.int32)
+        hits = jnp.zeros((), jnp.int32)
+        for gid, g_p in g_pooled.items():
+            pb = ctx.packed[gid]
+            gctx = ctx.ctxs[gid]
+            g_flat = g_p.reshape(-1, g_p.shape[-1])
+            per_id = (jnp.take(g_flat, pb.seg, axis=0)
+                      * pb.weights[:, None].astype(g_flat.dtype))
+            g_rows = jax.ops.segment_sum(per_id, gctx.inv,
+                                         num_segments=pb.ids.shape[0])
+            st2, o, h = self.strategy.apply_grads(
+                emb[str(gid)], gid, gctx, g_rows, cache_on=self.cache_on)
+            emb[str(gid)] = st2
+            ovf = ovf + o
+            hits = hits + h
+        return emb, {"overflow": ovf, "cache_hits": hits}
+
+    # --------------------------------------------------------------- flush
+    def flush(self, emb: Dict[str, EmbeddingState]) -> Dict[str, EmbeddingState]:
+        """HybridHash flush (Algorithm 1 L23-26) for every cached group."""
+        out = dict(emb)
+        for g in self.plan.groups:
+            if self.plan.cache_rows.get(g.gid, 0) == 0:
+                continue
+            st = out[str(g.gid)]
+            w2, acc2, counts2, cache2 = pe.flush_cache(
+                st.w, st.acc, st.counts, st.cache, axes=self.axes,
+                world=self.world, write_back=self.cache_update == "psum")
+            out[str(g.gid)] = EmbeddingState(w2, acc2, counts2, cache2)
+        return out

@@ -1,0 +1,189 @@
+"""Pluggable lookup strategies for the EmbeddingEngine (paper §II-C, §IV).
+
+A ``LookupStrategy`` owns the per-group sparse hot path: how packed IDs turn
+into rows (forward) and how row gradients turn into table updates (backward).
+The engine is strategy-agnostic; everything below the ``lookup`` /
+``apply_grads`` boundary — collectives, dedup, caching — is a strategy detail.
+
+Concrete strategies (selected by name through the registry):
+
+``picasso``
+    The full system: K-Packed Unique&Partition, fixed-capacity all_to_all
+    Shuffle, HybridHash hot tier on the read and update paths.
+``hybrid``
+    MP all_to_all routing per group, but no HybridHash tier: same Shuffle,
+    every unique goes to its owner shard every step. Packing is a *plan*
+    choice, not a strategy choice — the paper's full intermediate baseline
+    ("MP without packing or cache", §II-C) is this strategy on a plan built
+    with ``enable_packing=False`` (one fragmentary op per table).
+``ps``
+    PS-style all_gather + psum lookups (the fragmentary baseline): no routing,
+    no dedup, no cache; communication O(world * n * D).
+
+New workloads (multi-task serving, frequency-adaptive dims, other baselines)
+land as one ``@register_strategy`` class instead of a new copy of the loop.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple, Type, Union
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import packed_embedding as pe
+from repro.embedding.state import EmbeddingState
+
+Axes = Union[str, Tuple[str, ...]]
+
+_REGISTRY: Dict[str, Type["LookupStrategy"]] = {}
+
+
+def register_strategy(name: str):
+    """Class decorator: make a LookupStrategy selectable by name."""
+
+    def deco(cls: Type["LookupStrategy"]) -> Type["LookupStrategy"]:
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def available_strategies() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_strategy(name: str) -> Type["LookupStrategy"]:
+    """Resolve a strategy class by name; unknown names raise with the menu."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown lookup strategy {name!r}; available: "
+            f"{', '.join(available_strategies())}") from None
+
+
+class LookupStrategy:
+    """Base class: per-group sparse forward/backward, parameterized once.
+
+    Subclasses implement ``lookup`` and ``apply_grads``; both receive the
+    group's EmbeddingState and a group id (to index the static plan data) and
+    must keep all shapes static — they run inside ``shard_map``.
+    """
+
+    name = "base"
+    uses_cache = False        # whether the HybridHash hot tier participates
+    uses_routing_ctx = True   # ctx carries Shuffle routing (MP strategies)
+
+    def __init__(self, *, axes: Axes, world: int, capacity: Dict[int, int],
+                 lr: float = 0.05, eps: float = 1e-8,
+                 cache_update: str = "psum"):
+        self.axes = axes
+        self.world = world
+        self.capacity = capacity
+        self.lr = lr
+        self.eps = eps
+        self.cache_update = cache_update
+
+    # ----------------------------------------------------------------- fwd
+    def lookup(self, st: EmbeddingState, gid: int, ids: jnp.ndarray,
+               *, cache_on: bool = False) -> Tuple[jnp.ndarray, Any]:
+        """ids [n] -> (rows [n, D], ctx). ``ctx.inv`` maps positions to rows."""
+        raise NotImplementedError
+
+    # ----------------------------------------------------------------- bwd
+    def apply_grads(self, st: EmbeddingState, gid: int, ctx: Any,
+                    g_rows: jnp.ndarray, *, cache_on: bool = False
+                    ) -> Tuple[EmbeddingState, jnp.ndarray, jnp.ndarray]:
+        """Row grads -> updated state. Returns (state, overflow, cache_hits)."""
+        raise NotImplementedError
+
+
+@register_strategy("picasso")
+class PicassoStrategy(LookupStrategy):
+    """Full packed/interleaved/cached path (paper §III-B/D).
+
+    Forward: fixed-shape unique -> cache probe -> partition -> all_to_all
+    Shuffle -> local gather -> Shuffle back -> Stitch (+ hot-tier merge).
+    Backward: transposed Shuffle for miss grads; hit grads psum'd into the
+    replicated hot tier ('psum') or routed to owners ('stale'); FCounter
+    update on the owner side.
+    """
+
+    uses_cache = True
+
+    def lookup(self, st, gid, ids, *, cache_on=False):
+        return pe.mp_lookup(
+            st.w, ids, axes=self.axes, world=self.world,
+            capacity=self.capacity[gid],
+            hot_keys=st.cache.keys if cache_on else None,
+            hot_rows=st.cache.rows if cache_on else None)
+
+    def apply_grads(self, st, gid, ctx, g_rows, *, cache_on=False):
+        w2, acc2, cache2 = pe.apply_sparse_grads(
+            st.w, st.acc, st.cache if cache_on else None, ctx, g_rows,
+            axes=self.axes, world=self.world, lr=self.lr, eps=self.eps,
+            cache_update=self.cache_update)
+        counts2 = pe.count_frequencies(st.counts, ctx)
+        st2 = EmbeddingState(w=w2, acc=acc2, counts=counts2,
+                             cache=cache2 if cache2 is not None else st.cache)
+        return (st2, ctx.routing.overflow.astype(jnp.int32),
+                pe.cache_hit_count(ctx).astype(jnp.int32))
+
+
+@register_strategy("hybrid")
+class HybridStrategy(PicassoStrategy):
+    """MP all_to_all routing without the HybridHash tier (paper §II-C).
+
+    Same Shuffle/Stitch machinery as PICASSO, but the hot tier never
+    participates: every unique id is routed to its owner shard every step.
+    Isolates the cache's contribution in ablations; pair with a plan built
+    with ``enable_packing=False`` to reproduce the paper's full "MP without
+    packing or cache" intermediate baseline.
+    """
+
+    uses_cache = False
+
+    def lookup(self, st, gid, ids, *, cache_on=False):
+        return super().lookup(st, gid, ids, cache_on=False)
+
+    def apply_grads(self, st, gid, ctx, g_rows, *, cache_on=False):
+        return super().apply_grads(st, gid, ctx, g_rows, cache_on=False)
+
+
+class PSCtx(NamedTuple):
+    """Context of a PS lookup: rows are per-id, so ``inv`` is the identity."""
+
+    inv: jnp.ndarray   # [n] == arange(n)
+    ids: jnp.ndarray   # [n] original packed ids (backward needs them)
+
+
+@register_strategy("ps")
+class PSStrategy(LookupStrategy):
+    """PS/DP-style baseline (paper §II-C): all_gather ids, psum partial rows.
+
+    No routing, no dedup, no cache — the fragmentary pattern PICASSO beats.
+    Backward all_gathers per-id grads and scatters into the local shard.
+    """
+
+    uses_cache = False
+    uses_routing_ctx = False
+
+    def lookup(self, st, gid, ids, *, cache_on=False):
+        rows = pe.ps_lookup(st.w, ids, axes=self.axes, world=self.world)
+        n = ids.shape[0]
+        return rows, PSCtx(inv=jnp.arange(n, dtype=jnp.int32), ids=ids)
+
+    def apply_grads(self, st, gid, ctx, g_rows, *, cache_on=False):
+        rps = st.w.shape[0]
+        my = lax.axis_index(self.axes).astype(jnp.int32)
+        base = my * rps
+        all_ids = lax.all_gather(ctx.ids, self.axes, tiled=True)
+        all_g = lax.all_gather(g_rows, self.axes, tiled=True)
+        local = all_ids - base
+        ok = (local >= 0) & (local < rps)
+        w2, acc2 = pe._dedup_apply(st.w, st.acc, jnp.clip(local, 0, rps - 1),
+                                   all_g, ok, self.lr, self.eps)
+        zero = jnp.zeros((), jnp.int32)
+        return st._replace(w=w2, acc=acc2), zero, zero

@@ -21,6 +21,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import LMConfig, SchNetConfig, ShapeSpec, WDLConfig, get_config, get_shapes
 from repro.core.packing import PicassoPlan, make_plan
 from repro.data.synthetic import batch_spec
+from repro.dist.compat import shard_map
 from repro.dist.sharding import batch_specs, state_specs, to_named
 from repro.embedding.state import abstract_embedding_state
 from repro.layers.transformer import (abstract_kv_cache, abstract_lm_params, lm_decode_step,
@@ -94,7 +95,10 @@ def _wdl_flops(cfg: WDLConfig, plan: PicassoPlan, batch: int, train: bool) -> fl
 
 
 def build_wdl_cell(arch: str, shape: ShapeSpec, mesh, smoke: bool = False,
-                   tcfg: Optional[TrainConfig] = None, plan_kw: Optional[dict] = None) -> Cell:
+                   tcfg: Optional[TrainConfig] = None, plan_kw: Optional[dict] = None,
+                   strategy: str = "picasso") -> Cell:
+    """``strategy`` selects the EmbeddingEngine lookup path by registry name
+    for the serve/retrieval cells; train cells take it from ``tcfg.strategy``."""
     cfg = get_config(arch, smoke=smoke)
     axes = tuple(mesh.axis_names)
     world = int(mesh.devices.size)
@@ -108,7 +112,8 @@ def build_wdl_cell(arch: str, shape: ShapeSpec, mesh, smoke: bool = False,
             nc_pad = ((nc + world - 1) // world) * world
             plan = _wdl_plan(cfg, world, 1, **plan_kw)
             model = WDLModel(cfg, plan)
-            step = make_retrieval_step(model, plan, mesh, axes, nc_pad)
+            step = make_retrieval_step(model, plan, mesh, axes, nc_pad,
+                                       strategy=strategy)
             state = _abstract_state(model, plan, mesh, axes)
             batch = _abstract(batch_spec(cfg, 1), mesh, _rep_specs(batch_spec(cfg, 1)))
             cand = jax.ShapeDtypeStruct((nc_pad,), jnp.int32,
@@ -120,7 +125,7 @@ def build_wdl_cell(arch: str, shape: ShapeSpec, mesh, smoke: bool = False,
         nc_pad = ((nc + world - 1) // world) * world
         plan = _wdl_plan(cfg, world, max(1, nc_pad // world), **plan_kw)
         model = WDLModel(cfg, plan)
-        step = make_serve_step(model, plan, mesh, axes, nc_pad)
+        step = make_serve_step(model, plan, mesh, axes, nc_pad, strategy=strategy)
         state = _abstract_state(model, plan, mesh, axes)
         bsp = batch_spec(cfg, nc_pad)
         batch = _abstract(bsp, mesh, batch_specs(bsp, axes))
@@ -140,7 +145,7 @@ def build_wdl_cell(arch: str, shape: ShapeSpec, mesh, smoke: bool = False,
         step, _ = make_train_step(model, plan, mesh, axes, gb, tcfg or TrainConfig())
         return Cell(arch, shape.name, step, (state, batch),
                     _wdl_flops(cfg, plan, gb, True), "hybrid MP/DP train")
-    step = make_serve_step(model, plan, mesh, axes, gb)
+    step = make_serve_step(model, plan, mesh, axes, gb, strategy=strategy)
     return Cell(arch, shape.name, step, (state, batch),
                 _wdl_flops(cfg, plan, gb, False), "forward scoring")
 
@@ -324,9 +329,9 @@ def make_schnet_step(cfg: SchNetConfig, mesh, d_feat: int, batched: bool, lr=1e-
         return sh
 
     def wrapped(params, opt, batch):
-        f = jax.shard_map(local_step, mesh=mesh,
-                          in_specs=(rep, orep, batch_spec_fn(batch)),
-                          out_specs=(rep, orep, P()), check_vma=False)
+        f = shard_map(local_step, mesh=mesh,
+                      in_specs=(rep, orep, batch_spec_fn(batch)),
+                      out_specs=(rep, orep, P()), check_vma=False)
         return f(params, opt, batch)
 
     return jax.jit(wrapped, donate_argnums=(0, 1)), params, opt, rep, orep, batch_spec_fn

@@ -18,6 +18,8 @@ def main():
     ap.add_argument("--candidates", type=int, default=65536)
     ap.add_argument("--devices", type=int, default=0)
     ap.add_argument("--mesh", default="")
+    ap.add_argument("--strategy", default="picasso",
+                    help="EmbeddingEngine lookup strategy registry name")
     args = ap.parse_args()
 
     if args.devices:
@@ -53,7 +55,8 @@ def main():
         model = WDLModel(cfg, plan)
         state = init_state(model, plan, jax.random.PRNGKey(0), mesh=mesh, axes=axes)
         nc = (args.candidates // world) * world
-        step = make_retrieval_step(model, plan, mesh, axes, nc, top_k=10)
+        step = make_retrieval_step(model, plan, mesh, axes, nc, top_k=10,
+                                   strategy=args.strategy)
         user = make_batch(cfg, 1, np.random.default_rng(1))
         from jax.sharding import NamedSharding, PartitionSpec as P
         cand = jax.device_put(jnp.arange(nc, dtype=jnp.int32) % cfg.fields[0].vocab,
@@ -65,7 +68,8 @@ def main():
     plan = make_plan(cfg, world=world, per_device_batch=args.batch // world)
     model = WDLModel(cfg, plan)
     state = init_state(model, plan, jax.random.PRNGKey(0), mesh=mesh, axes=axes)
-    serve = make_serve_step(model, plan, mesh, axes, args.batch)
+    serve = make_serve_step(model, plan, mesh, axes, args.batch,
+                            strategy=args.strategy)
     rng = np.random.default_rng(0)
     lat = []
     for i in range(args.n_requests):

@@ -17,7 +17,9 @@ def main():
     ap.add_argument("--global-batch", type=int, default=256)
     ap.add_argument("--devices", type=int, default=0, help="force host device count")
     ap.add_argument("--mesh", default="", help="e.g. 4x2 (data x model)")
-    ap.add_argument("--strategy", default="picasso", choices=["picasso", "ps"])
+    ap.add_argument("--strategy", default="picasso",
+                    help="EmbeddingEngine lookup strategy registry name "
+                         "(picasso | hybrid | ps)")
     ap.add_argument("--no-cache", action="store_true")
     ap.add_argument("--no-interleave", action="store_true")
     ap.add_argument("--no-packing", action="store_true")

@@ -1,11 +1,17 @@
 """Inference steps for WDL models: online (p99) / bulk scoring / retrieval.
 
-Same shard_map program shape as training minus the backward: packed lookups
-(with the HybridHash read path) -> interactions -> sigmoid scores. Retrieval
-scores one query against 1M candidates: two-tower archs (sasrec / mind) embed
-the user once and dot against mesh-sharded candidate item rows with a
+Same shard_map program shape as training minus the backward: the shared
+``repro.engine.EmbeddingEngine`` executes the packed lookups (including the
+HybridHash read path and K-Interleaving waves) -> interactions -> sigmoid
+scores. Retrieval scores one query against 1M candidates: two-tower archs
+(sasrec / mind) embed the user once and dot against mesh-sharded candidate
+item rows served by the same engine with a widened bucket capacity, with a
 distributed top-k; pure-CTR archs (deepfm / dcn-v2) run a bulk forward over
 the candidate batch (batched-dot, never a loop).
+
+All sharding specs are built once at trace-construction time — nothing is
+recomputed per call. The lookup strategy is selectable by registry name
+(``'picasso' | 'hybrid' | 'ps'``) so serving benchmarks can A/B the paths.
 """
 from __future__ import annotations
 
@@ -17,10 +23,11 @@ import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core import packed_embedding as pe
-from repro.core.features import PackedBatch, field_index, pack_group
+from repro.core.features import field_index, pack_group
 from repro.core.packing import PicassoPlan
-from repro.dist.sharding import batch_specs, state_specs
+from repro.dist.compat import shard_map
+from repro.dist.sharding import batch_specs, emb_specs, replicated
+from repro.engine import EmbeddingEngine
 from repro.models.wdl import WDLModel
 
 
@@ -29,47 +36,43 @@ def _mesh_world(mesh, axes):
 
 
 def make_serve_step(model: WDLModel, plan: PicassoPlan, mesh, axes, global_batch: int,
-                    use_cache: bool = True):
+                    use_cache: bool = True, strategy: str = "picasso"):
     """Forward-only scoring: batch -> sigmoid probabilities [B, n_tasks]."""
     world = _mesh_world(mesh, axes)
-    b_local = global_batch // world
-    cache_on = use_cache and any(plan.cache_rows.get(g.gid, 0) > 0 for g in plan.groups)
+    engine = EmbeddingEngine(plan, axes, world, strategy=strategy,
+                             use_cache=use_cache)
+
+    # specs are static per (model, plan): build them once, not per trace call
+    especs = emb_specs(plan, axes)
+    rep = replicated(jax.eval_shape(lambda k: model.init_dense(k),
+                                    jax.random.PRNGKey(0)))
 
     def local_fn(emb, dense, batch):
-        pooled = {}
-        for g in plan.groups:
-            pb = pack_group(g, batch["fields"])
-            st = emb[str(g.gid)]
-            rows_u, ctx = pe.mp_lookup(
-                st.w, pb.ids, axes=axes, world=world, capacity=plan.capacity[g.gid],
-                hot_keys=st.cache.keys if cache_on else None,
-                hot_rows=st.cache.rows if cache_on else None)
-            p = pe.pool(rows_u, ctx.inv, pb.weights, pb.seg, b_local * g.n_bags)
-            pooled[g.gid] = p.reshape(b_local, g.n_bags, g.dim)
+        packed = {g.gid: pack_group(g, batch["fields"]) for g in plan.groups}
+        pooled, _ctx = engine.forward(emb, packed)
         logits = model.apply(dense, pooled, batch)
         return jax.nn.sigmoid(logits)
 
     def wrapped(state, batch):
-        emb_specs = {k: v for k, v in state_specs(plan, axes, state["dense"],
-                                                  None)["emb"].items()}
-        rep = jax.tree.map(lambda x: P(*((None,) * len(x.shape))), state["dense"])
-        f = jax.shard_map(local_fn, mesh=mesh,
-                          in_specs=(emb_specs, rep, batch_specs(batch, axes)),
-                          out_specs=P(axes, None), check_vma=False)
+        f = shard_map(local_fn, mesh=mesh,
+                      in_specs=(especs, rep, batch_specs(batch, axes)),
+                      out_specs=P(axes, None), check_vma=False)
         return f(state["emb"], state["dense"], batch)
 
     return jax.jit(wrapped)
 
 
 def make_retrieval_step(model: WDLModel, plan: PicassoPlan, mesh, axes,
-                        n_candidates: int, top_k: int = 100):
+                        n_candidates: int, top_k: int = 100,
+                        strategy: str = "picasso"):
     """Two-tower retrieval: one user -> top-k of 1M candidates.
 
     The user representation is computed from the behaviour sequence
     (self_attn_seq / capsule interaction); candidate ids are mesh-sharded,
     their rows come from the *local* slice of the MP item table via the same
-    packed-lookup engine, scores are a batched dot, and top-k is local-top-k
-    -> all_gather -> global-top-k.
+    packed-lookup engine (bucket capacity widened to the candidate chunk, so
+    no candidate is ever dropped), scores are a batched dot, and top-k is
+    local-top-k -> all_gather -> global-top-k.
     """
     world = _mesh_world(mesh, axes)
     cand_local = n_candidates // world
@@ -77,26 +80,26 @@ def make_retrieval_step(model: WDLModel, plan: PicassoPlan, mesh, axes,
     item_field = next(f.name for f in model.cfg.fields
                       if f.pooling == "none" and f.max_len > 1)
     gid = fidx[item_field].gid
-    group = plan.group(gid)
+
+    engine = EmbeddingEngine(plan, axes, world, strategy=strategy,
+                             use_cache=False)
+    # candidate tower: same strategy, but buckets sized for cand_local ids
+    cand_engine = EmbeddingEngine(
+        plan, axes, world, strategy=strategy, use_cache=False,
+        capacity={**plan.capacity, gid: max(plan.capacity[gid], cand_local)})
+
+    especs = emb_specs(plan, axes)
+    rep = replicated(jax.eval_shape(lambda k: model.init_dense(k),
+                                    jax.random.PRNGKey(0)))
 
     def local_fn(emb, dense, batch, cand_ids):
         # --- user tower (batch=1, replicated compute) -----------------------
-        pooled = {}
-        for g in plan.groups:
-            pb = pack_group(g, batch["fields"])
-            st = emb[str(g.gid)]
-            rows_u, ctx = pe.mp_lookup(st.w, pb.ids, axes=axes, world=world,
-                                       capacity=plan.capacity[g.gid])
-            p = pe.pool(rows_u, ctx.inv, pb.weights, pb.seg, 1 * g.n_bags)
-            pooled[g.gid] = p.reshape(1, g.n_bags, g.dim)
+        packed = {g.gid: pack_group(g, batch["fields"]) for g in plan.groups}
+        pooled, _ctx = engine.forward(emb, packed)
         user = model.user_repr(dense, pooled, batch)          # [K, D]
 
-        # --- candidate tower: local chunk of ids via the MP engine ----------
-        st = emb[str(gid)]
-        cand_rows, ctx = pe.mp_lookup(st.w, cand_ids.reshape(-1), axes=axes,
-                                      world=world,
-                                      capacity=plan.capacity[gid])
-        rows = jnp.take(cand_rows, ctx.inv, axis=0)            # [cand_local, D]
+        # --- candidate tower: local chunk of ids via the same engine --------
+        rows = cand_engine.lookup_rows(emb, gid, cand_ids.reshape(-1))
         scores = jnp.max(rows @ user.T, axis=-1).astype(jnp.float32)  # max over interests
         k = min(top_k, cand_local)
         sv, si = lax.top_k(scores, k)
@@ -106,12 +109,10 @@ def make_retrieval_step(model: WDLModel, plan: PicassoPlan, mesh, axes,
         return fv, gi[fi]
 
     def wrapped(state, batch, cand_ids):
-        emb_specs = state_specs(plan, axes, state["dense"], None)["emb"]
-        rep = jax.tree.map(lambda x: P(*((None,) * len(x.shape))), state["dense"])
         bspec = jax.tree.map(lambda x: P(*((None,) * len(x.shape))), batch)
-        f = jax.shard_map(local_fn, mesh=mesh,
-                          in_specs=(emb_specs, rep, bspec, P(axes)),
-                          out_specs=(P(), P()), check_vma=False)
+        f = shard_map(local_fn, mesh=mesh,
+                      in_specs=(especs, rep, bspec, P(axes)),
+                      out_specs=(P(), P()), check_vma=False)
         return f(state["emb"], state["dense"], batch, cand_ids)
 
     return jax.jit(wrapped)

@@ -19,7 +19,11 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-import zstandard
+
+try:  # optional: plain .npy files when the container lacks zstandard
+    import zstandard
+except ImportError:
+    zstandard = None
 
 _SEP = "/"
 
@@ -63,12 +67,13 @@ def save_checkpoint(ckpt_dir: str, step: int, state: Any, keep: int = 3) -> str:
     tmp = Path(tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_"))
     flat = _flatten(jax.device_get(state))
     manifest = {}
-    cctx = zstandard.ZstdCompressor(level=3)
+    cctx = zstandard.ZstdCompressor(level=3) if zstandard is not None else None
     for name, arr in flat.items():
         arr = np.asarray(arr)
-        fn = name.replace(_SEP, "__") + ".npy.zst"
+        fn = name.replace(_SEP, "__") + (".npy.zst" if cctx else ".npy")
+        payload = _np_bytes(arr)
         with open(tmp / fn, "wb") as f:
-            f.write(cctx.compress(_np_bytes(arr)))
+            f.write(cctx.compress(payload) if cctx else payload)
         manifest[name] = {"file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype)}
     (tmp / "manifest.json").write_text(json.dumps({"step": step, "leaves": manifest}))
     if final.exists():
@@ -117,12 +122,19 @@ def restore_checkpoint(ckpt_dir: str, template: Any, step: Optional[int] = None,
         raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
     d = Path(ckpt_dir) / f"step_{step:08d}"
     manifest = json.loads((d / "manifest.json").read_text())["leaves"]
-    dctx = zstandard.ZstdDecompressor()
+    dctx = zstandard.ZstdDecompressor() if zstandard is not None else None
     tflat = _flatten(template)
     out = {}
     for name, t in tflat.items():
         info = manifest[name]
-        arr = _np_from_bytes(dctx.decompress((d / info["file"]).read_bytes()))
+        raw = (d / info["file"]).read_bytes()
+        if info["file"].endswith(".zst"):
+            if dctx is None:
+                raise ImportError(
+                    f"checkpoint leaf {info['file']} is zstd-compressed but "
+                    "zstandard is not installed")
+            raw = dctx.decompress(raw)
+        arr = _np_from_bytes(raw)
         tshape = tuple(t.shape)
         if tuple(arr.shape) != tshape:
             if arr.ndim >= 1 and arr.shape[1:] == tshape[1:]:

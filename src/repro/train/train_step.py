@@ -2,22 +2,26 @@
 
 One SPMD program under ``shard_map`` over the full mesh:
 
-  pack (D-Packing) -> wave lookups (K-Packing + K-Interleaving)
+  pack (D-Packing) -> EmbeddingEngine.forward (K-Packing + K-Interleaving)
   -> micro-batch pipeline (D-Interleaving): dense fwd/bwd of chunk i overlaps
      the Shuffle of chunk i+1
-  -> dense grads psum (DP) + Adam ; sparse grads routed back (MP) + row-wise
-     Adagrad ; HybridHash hit grads psum'd into the replicated hot tier
-  -> FCounter update ; periodic HybridHash flush.
+  -> dense grads psum (DP) + Adam ; EmbeddingEngine.backward routes sparse
+     grads (MP) + row-wise Adagrad ; HybridHash hit grads psum'd into the
+     replicated hot tier
+  -> FCounter update ; periodic HybridHash flush (EmbeddingEngine.flush).
 
-Strategies (paper §II-C / §IV baselines):
-  'picasso' — the full system;
-  'hybrid'  — MP all_to_all per group but plan built without packing/cache;
+The whole sparse path lives in ``repro.engine.EmbeddingEngine``; this module
+only owns the micro-batch pipeline, the dense optimizer, and metric psums.
+Strategies (paper §II-C / §IV baselines) are selected by registry name via
+``TrainConfig.strategy``:
+  'picasso' — the full system (packed + interleaved + HybridHash);
+  'hybrid'  — MP all_to_all per group but no HybridHash tier;
   'ps'      — PS-style all_gather+psum lookups (the fragmentary baseline).
+Unknown names raise at trace-construction time with the registry's menu.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -26,12 +30,12 @@ import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core import packed_embedding as pe
 from repro.core.features import PackedBatch, pack_group
-from repro.core.interleaving import wave_barrier
 from repro.core.packing import PicassoPlan
-from repro.dist.sharding import batch_specs, state_specs, to_named
+from repro.dist.compat import shard_map
+from repro.dist.sharding import batch_specs, emb_specs, state_specs, to_named
 from repro.embedding.state import EmbeddingState
+from repro.engine import EmbeddingEngine
 from repro.models.wdl import WDLModel
 from repro.optim.optimizers import adam_init, adam_update, lamb_update
 
@@ -41,7 +45,7 @@ class TrainConfig:
     lr_emb: float = 0.05
     lr_dense: float = 1e-3
     optimizer: str = "adam"        # 'adam' | 'lamb'
-    strategy: str = "picasso"      # 'picasso' | 'ps'
+    strategy: str = "picasso"      # registry name: 'picasso' | 'hybrid' | 'ps'
     pipeline_micro: bool = True    # D-Interleaving pipeline order
     use_cache: bool = True
     use_interleave: bool = True    # K-Interleaving waves (False: one wave)
@@ -67,83 +71,18 @@ def make_train_step(model: WDLModel, plan: PicassoPlan, mesh, axes: Tuple[str, .
     b_local = global_batch // world
     micro = plan.microbatch if plan.microbatch <= b_local else b_local
     n_micro = max(1, b_local // micro)
-    waves = plan.interleave if tcfg.use_interleave else [[g.gid for g in plan.groups]]
-    cache_on = tcfg.use_cache and any(plan.cache_rows.get(g.gid, 0) > 0 for g in plan.groups)
 
-    # ------------------------------------------------------------- lookups
-    def lookups(emb: Dict[str, EmbeddingState], packed: Dict[int, PackedBatch]):
-        rows, ctxs = {}, {}
-        ids_in = {g.gid: packed[g.gid].ids for g in plan.groups}
-        for wi, wave in enumerate(waves):
-            if wi > 0:
-                # K-Interleaving (Fig. 8c): wave wi's inputs pass through one
-                # barrier with wave wi-1's outputs -> a real control boundary.
-                prev = waves[wi - 1]
-                flat = wave_barrier([rows[g] for g in prev] + [ids_in[g] for g in wave])
-                for g, v in zip(prev, flat[: len(prev)]):
-                    rows[g] = v
-                for j, g in enumerate(wave):
-                    ids_in[g] = flat[len(prev) + j]
-            for gid in wave:
-                st = emb[str(gid)]
-                hk = st.cache.keys if cache_on else None
-                hr = st.cache.rows if cache_on else None
-                if tcfg.strategy == "ps":
-                    per_id = pe.ps_lookup(st.w, ids_in[gid], axes=axes, world=world)
-                    rows[gid], ctxs[gid] = per_id, None
-                else:
-                    rows[gid], ctxs[gid] = pe.mp_lookup(
-                        st.w, ids_in[gid], axes=axes, world=world,
-                        capacity=plan.capacity[gid], hot_keys=hk, hot_rows=hr)
-        return rows, ctxs
+    # The engine owns lookups, pooling, sparse updates, and the flush;
+    # the strategy name is validated against the registry right here.
+    engine = EmbeddingEngine(
+        plan, axes, world, strategy=tcfg.strategy, use_cache=tcfg.use_cache,
+        use_interleave=tcfg.use_interleave, lr_emb=tcfg.lr_emb, eps=tcfg.eps,
+        cache_update=tcfg.cache_update)
 
     # -------------------------------------------------------- loss closure
-    def micro_loss(dense, rows, ctxs, packed, mb):
-        pooled = {}
-        for gid, pb in packed.items():
-            g = plan.group(gid)
-            if tcfg.strategy == "ps":
-                per_id = rows[gid] * pb.weights[:, None]
-                p = jax.ops.segment_sum(per_id, pb.seg, num_segments=micro * g.n_bags)
-            else:
-                p = pe.pool(rows[gid], ctxs[gid].inv, pb.weights, pb.seg, micro * g.n_bags)
-            pooled[gid] = p.reshape(micro, g.n_bags, g.dim)
+    def micro_loss(dense, pooled, mb):
         loss_sum, logits = model.loss(dense, pooled, mb)
         return loss_sum / global_batch, logits
-
-    # ------------------------------------------------------------ updates
-    def apply_updates(emb, rows_g, ctxs, pm):
-        ovf = jnp.zeros((), jnp.int32)
-        hits = jnp.zeros((), jnp.int32)
-        for gid, g_u in rows_g.items():
-            st = emb[str(gid)]
-            if tcfg.strategy == "ps":
-                # PS baseline: dense-ish scatter via all_gather of per-id grads
-                w2, acc2 = _ps_apply(st.w, st.acc, g_u, pm[gid].ids)
-                emb[str(gid)] = st._replace(w=w2, acc=acc2)
-                continue
-            ctx = ctxs[gid]
-            cache = st.cache if cache_on else None
-            w2, acc2, cache2 = pe.apply_sparse_grads(
-                st.w, st.acc, cache, ctx, g_u, axes=axes, world=world,
-                lr=tcfg.lr_emb, eps=tcfg.eps, cache_update=tcfg.cache_update)
-            counts2 = pe.count_frequencies(st.counts, ctx)
-            emb[str(gid)] = EmbeddingState(w=w2, acc=acc2, counts=counts2,
-                                           cache=cache2 if cache2 is not None else st.cache)
-            ovf = ovf + ctx.routing.overflow.astype(jnp.int32)
-            hits = hits + pe.cache_hit_count(ctx).astype(jnp.int32)
-        return emb, ovf, hits
-
-    def _ps_apply(w_shard, acc_shard, g_per_id, ids):
-        rps = w_shard.shape[0]
-        my = lax.axis_index(axes).astype(jnp.int32)
-        base = my * rps
-        all_ids = lax.all_gather(ids, axes, tiled=True)
-        all_g = lax.all_gather(g_per_id, axes, tiled=True)
-        local = all_ids - base
-        ok = (local >= 0) & (local < rps)
-        return pe._dedup_apply(w_shard, acc_shard, jnp.clip(local, 0, rps - 1),
-                               all_g, ok, tcfg.lr_emb, tcfg.eps)
 
     # --------------------------------------------------------------- step
     def local_step(state, batch):
@@ -178,22 +117,22 @@ def make_train_step(model: WDLModel, plan: PicassoPlan, mesh, axes: Tuple[str, .
         ovf_acc = jnp.zeros((), jnp.int32)
         hit_acc = jnp.zeros((), jnp.int32)
 
-        pm0 = packed_micro(0)
-        pending = (lookups(emb, pm0), pm0, batch_micro(0))
+        pending = (engine.forward(emb, packed_micro(0)), batch_micro(0))
         for i in range(n_micro):
-            (rows, ctxs), pm, mb = pending
+            (pooled, ectx), mb = pending
             if tcfg.pipeline_micro and i + 1 < n_micro:
                 # D-Interleaving: issue Shuffle of chunk i+1 before dense of i
-                pm_next = packed_micro(i + 1)
-                pending = (lookups(emb, pm_next), pm_next, batch_micro(i + 1))
-            (loss, _logits), (g_dense, g_rows) = grad_fn(dense, rows, ctxs, pm, mb)
+                pending = (engine.forward(emb, packed_micro(i + 1)),
+                           batch_micro(i + 1))
+            (loss, _logits), (g_dense, g_pooled) = grad_fn(dense, pooled, mb)
             loss_acc = loss_acc + loss
             g_dense_acc = jax.tree.map(jnp.add, g_dense_acc, g_dense)
-            emb, ovf, hits = apply_updates(emb, g_rows, ctxs, pm)
-            ovf_acc, hit_acc = ovf_acc + ovf, hit_acc + hits
+            emb, em = engine.backward(emb, ectx, g_pooled)
+            ovf_acc = ovf_acc + em["overflow"]
+            hit_acc = hit_acc + em["cache_hits"]
             if not (tcfg.pipeline_micro) and i + 1 < n_micro:
-                pm_next = packed_micro(i + 1)
-                pending = (lookups(emb, pm_next), pm_next, batch_micro(i + 1))
+                pending = (engine.forward(emb, packed_micro(i + 1)),
+                           batch_micro(i + 1))
 
         # ---- dense DP: psum grads over the whole mesh ----------------------
         if tcfg.grad_compression != "none":
@@ -208,22 +147,9 @@ def make_train_step(model: WDLModel, plan: PicassoPlan, mesh, axes: Tuple[str, .
 
         # ---- HybridHash flush (Algorithm 1 L23-26) -------------------------
         step2 = step + 1
-        if cache_on and tcfg.strategy != "ps" and tcfg.flush_in_step:
+        if engine.cache_on and tcfg.flush_in_step:
             do_flush = (step2 >= plan.warmup_iters) & (step2 % plan.flush_iters == 0)
-
-            def flush_all(emb_in):
-                out = dict(emb_in)
-                for g in plan.groups:
-                    st = out[str(g.gid)]
-                    if plan.cache_rows.get(g.gid, 0) == 0:
-                        continue
-                    w2, acc2, counts2, cache2 = pe.flush_cache(
-                        st.w, st.acc, st.counts, st.cache, axes=axes, world=world,
-                        write_back=tcfg.cache_update == "psum")
-                    out[str(g.gid)] = EmbeddingState(w2, acc2, counts2, cache2)
-                return out
-
-            emb = lax.cond(do_flush, flush_all, lambda e: e, emb)
+            emb = lax.cond(do_flush, engine.flush, lambda e: e, emb)
 
         new_state = {"emb": emb, "dense": dense2, "opt": opt2, "step": step2}
         metrics = {"loss": loss_glob,
@@ -239,11 +165,11 @@ def make_train_step(model: WDLModel, plan: PicassoPlan, mesh, axes: Tuple[str, .
 
     def wrapped(state, batch):
         bspecs = batch_specs(batch, axes)
-        f = jax.shard_map(local_step, mesh=mesh,
-                          in_specs=(sspecs, bspecs),
-                          out_specs=(sspecs, {"loss": P(), "overflow": P(),
-                                              "cache_hits": P(), "step": P()}),
-                          check_vma=False)
+        f = shard_map(local_step, mesh=mesh,
+                      in_specs=(sspecs, bspecs),
+                      out_specs=(sspecs, {"loss": P(), "overflow": P(),
+                                          "cache_hits": P(), "step": P()}),
+                      check_vma=False)
         return f(state, batch)
 
     step_fn = jax.jit(wrapped, donate_argnums=(0,))
@@ -256,25 +182,12 @@ def make_flush_fn(plan: PicassoPlan, mesh, axes: Tuple[str, ...],
     ``plan.flush_iters`` steps by the trainer when flush_in_step=False).
     Keeps the flush collectives OUT of the hot train step."""
     world = _mesh_world(mesh, axes)
-
-    def local_flush(emb):
-        out = dict(emb)
-        for g in plan.groups:
-            st = out[str(g.gid)]
-            if plan.cache_rows.get(g.gid, 0) == 0:
-                continue
-            w2, acc2, counts2, cache2 = pe.flush_cache(
-                st.w, st.acc, st.counts, st.cache, axes=axes, world=world,
-                write_back=cache_update == "psum")
-            out[str(g.gid)] = EmbeddingState(w2, acc2, counts2, cache2)
-        return out
-
-    especs = {str(g.gid): __import__("repro.dist.sharding", fromlist=["emb_state_specs"]
-                                     ).emb_state_specs(axes) for g in plan.groups}
+    engine = EmbeddingEngine(plan, axes, world, cache_update=cache_update)
+    especs = emb_specs(plan, axes)
 
     def wrapped(state):
-        f = jax.shard_map(local_flush, mesh=mesh, in_specs=(especs,),
-                          out_specs=especs, check_vma=False)
+        f = shard_map(engine.flush, mesh=mesh, in_specs=(especs,),
+                      out_specs=especs, check_vma=False)
         return {**state, "emb": f(state["emb"])}
 
     return jax.jit(wrapped, donate_argnums=(0,))

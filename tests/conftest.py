@@ -2,16 +2,16 @@
 # device; multi-device behaviour is covered by subprocess tests
 # (test_distributed.py) which set --xla_force_host_platform_device_count
 # in the child process only.
-import jax
 import pytest
+
+from repro.launch.mesh import make_test_mesh
 
 
 @pytest.fixture(scope="session")
 def mesh1():
     """1x1 mesh: exercises the full shard_map/collective code path on one
     device (all_to_all over a size-1 axis is identity)."""
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_test_mesh(1, 1)
 
 
 AXES = ("data", "model")

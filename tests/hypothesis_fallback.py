@@ -1,0 +1,75 @@
+"""Deterministic miniature stand-in for hypothesis when it isn't installed.
+
+The container this repo targets has no ``hypothesis`` wheel (and nothing may
+be pip-installed), so property tests import through::
+
+    try:
+        import hypothesis.strategies as st
+        from hypothesis import given, settings
+    except ImportError:
+        from hypothesis_fallback import given, settings, st
+
+The fallback draws ``max_examples`` pseudo-random samples from a fixed seed —
+no shrinking, no database, but the same property gets exercised on every run
+with reproducible inputs. Only the strategy combinators the test-suite uses
+are implemented (integers / lists / tuples / sampled_from).
+"""
+from __future__ import annotations
+
+import functools
+from types import SimpleNamespace
+from typing import Any, Callable, List
+
+import numpy as np
+
+_DEFAULT_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, sample: Callable[[np.random.Generator], Any]):
+        self.sample = sample
+
+
+def _integers(lo: int, hi: int) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(lo, hi + 1)))
+
+
+def _sampled_from(seq) -> _Strategy:
+    items = list(seq)
+    return _Strategy(lambda rng: items[int(rng.integers(len(items)))])
+
+
+def _tuples(*strats: _Strategy) -> _Strategy:
+    return _Strategy(lambda rng: tuple(s.sample(rng) for s in strats))
+
+
+def _lists(strat: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+    return _Strategy(lambda rng: [strat.sample(rng)
+                                  for _ in range(int(rng.integers(min_size,
+                                                                  max_size + 1)))])
+
+
+st = SimpleNamespace(integers=_integers, sampled_from=_sampled_from,
+                     tuples=_tuples, lists=_lists)
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats: _Strategy):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper():
+            n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+            rng = np.random.default_rng(0)
+            for _ in range(n):
+                fn(*(s.sample(rng) for s in strats))
+        # pytest resolves fixtures through __wrapped__'s signature; the
+        # original fn's params are strategy draws, not fixtures — hide it.
+        del wrapper.__wrapped__
+        return wrapper
+    return deco

@@ -1,21 +1,41 @@
-"""MP embedding engine on a 1x1 mesh: the full shard_map path (unique,
+"""Engine strategy layer on a 1x1 mesh: the full shard_map path (unique,
 partition, Shuffle/Stitch, pooling, sparse adagrad, HybridHash) vs the dense
-EmbeddingBag oracle. Multi-device equivalence is in test_distributed.py."""
+EmbeddingBag oracle, exercised through ``repro.engine`` strategies.
+Multi-device equivalence is in test_distributed.py."""
 import functools
 
-import hypothesis.strategies as st
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:
+    from hypothesis_fallback import given, settings, st
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
 from jax.sharding import PartitionSpec as P
 
 from repro.core import packed_embedding as pe
 from repro.core.hashing import scramble, scramble_np
+from repro.dist.compat import shard_map
 from repro.embedding.bag import embedding_bag
+from repro.embedding.state import EmbeddingState
+from repro.engine import PicassoStrategy
 
 AXES = ("data", "model")
+
+
+def _group_state(table, hot_keys=None, hot_rows=None) -> EmbeddingState:
+    """Single-group EmbeddingState around a dense table (tests only)."""
+    v, d = table.shape
+    if hot_keys is not None:
+        cache = pe.CacheState(keys=hot_keys, rows=hot_rows,
+                              acc=jnp.zeros((hot_keys.shape[0], 1), jnp.float32))
+    else:
+        cache = pe.init_cache(0, d, v)
+    return EmbeddingState(w=table, acc=jnp.zeros((v, 1), jnp.float32),
+                          counts=jnp.zeros((v,), jnp.int32), cache=cache)
 
 
 @settings(max_examples=25, deadline=None)
@@ -41,13 +61,15 @@ def test_scramble_bijective(vocab):
 
 
 def _lookup1(mesh, table, ids, cap, hot_keys=None, hot_rows=None):
+    strat = PicassoStrategy(axes=AXES, world=1, capacity={0: cap})
+
     def f(tsh, ids_l):
-        rows_u, ctx = pe.mp_lookup(tsh, ids_l, axes=AXES, world=1, capacity=cap,
-                                   hot_keys=hot_keys, hot_rows=hot_rows)
+        gst = _group_state(tsh, hot_keys, hot_rows)
+        rows_u, ctx = strat.lookup(gst, 0, ids_l, cache_on=hot_keys is not None)
         return jnp.take(rows_u, ctx.inv, axis=0)
 
-    return jax.jit(jax.shard_map(f, mesh=mesh, in_specs=(P(AXES, None), P()),
-                                 out_specs=P(), check_vma=False))(table, ids)
+    return jax.jit(shard_map(f, mesh=mesh, in_specs=(P(AXES, None), P()),
+                             out_specs=P(), check_vma=False))(table, ids)
 
 
 def test_lookup_matches_gather(mesh1):
@@ -78,14 +100,15 @@ def test_pool_matches_embedding_bag(mesh1):
     ids = jnp.asarray(rng.integers(0, v, n).astype(np.int32))
     seg = jnp.asarray(np.sort(rng.integers(0, nb, n)).astype(np.int32))
     w = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    strat = PicassoStrategy(axes=AXES, world=1, capacity={0: n})
 
     def f(tsh, ids_l, w_l, seg_l):
-        rows_u, ctx = pe.mp_lookup(tsh, ids_l, axes=AXES, world=1, capacity=n)
+        rows_u, ctx = strat.lookup(_group_state(tsh), 0, ids_l)
         return pe.pool(rows_u, ctx.inv, w_l, seg_l, nb)
 
-    got = jax.jit(jax.shard_map(f, mesh=mesh1,
-                                in_specs=(P(AXES, None), P(), P(), P()),
-                                out_specs=P(), check_vma=False))(table, ids, w, seg)
+    got = jax.jit(shard_map(f, mesh=mesh1,
+                            in_specs=(P(AXES, None), P(), P(), P()),
+                            out_specs=P(), check_vma=False))(table, ids, w, seg)
     exp = embedding_bag(table, ids, seg, nb, w)
     np.testing.assert_allclose(np.asarray(got), np.asarray(exp), atol=1e-5)
 
@@ -94,20 +117,20 @@ def test_sparse_adagrad_matches_dense(mesh1):
     rng = np.random.default_rng(3)
     v, d, n = 40, 5, 25
     table = jnp.asarray(rng.normal(size=(v, d)).astype(np.float32))
-    acc0 = jnp.zeros((v, 1), jnp.float32)
     ids = jnp.asarray(rng.integers(0, v, n).astype(np.int32))
     g_per_id = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    strat = PicassoStrategy(axes=AXES, world=1, capacity={0: n}, lr=0.1)
 
-    def f(tsh, acc, ids_l, g):
-        rows_u, ctx = pe.mp_lookup(tsh, ids_l, axes=AXES, world=1, capacity=n)
+    def f(tsh, ids_l, g):
+        gst = _group_state(tsh)
+        rows_u, ctx = strat.lookup(gst, 0, ids_l)
         g_u = jax.ops.segment_sum(g, ctx.inv, num_segments=n)
-        w2, a2, _ = pe.apply_sparse_grads(tsh, acc, None, ctx, g_u,
-                                          axes=AXES, world=1, lr=0.1)
-        return w2, a2
+        st2, _, _ = strat.apply_grads(gst, 0, ctx, g_u)
+        return st2.w, st2.acc
 
-    w2, a2 = jax.jit(jax.shard_map(
-        f, mesh=mesh1, in_specs=(P(AXES, None), P(AXES, None), P(), P()),
-        out_specs=(P(AXES, None), P(AXES, None)), check_vma=False))(table, acc0, ids, g_per_id)
+    w2, a2 = jax.jit(shard_map(
+        f, mesh=mesh1, in_specs=(P(AXES, None), P(), P()),
+        out_specs=(P(AXES, None), P(AXES, None)), check_vma=False))(table, ids, g_per_id)
 
     gref = np.zeros((v, d), np.float32)
     np.add.at(gref, np.asarray(ids), np.asarray(g_per_id))
@@ -121,13 +144,14 @@ def test_overflow_counted(mesh1):
     rng = np.random.default_rng(4)
     table = jnp.asarray(rng.normal(size=(64, 4)).astype(np.float32))
     ids = jnp.asarray(np.arange(32, dtype=np.int32))  # 32 distinct ids
+    strat = PicassoStrategy(axes=AXES, world=1, capacity={0: 8})
 
     def f(tsh, ids_l):
-        _, ctx = pe.mp_lookup(tsh, ids_l, axes=AXES, world=1, capacity=8)
+        _, ctx = strat.lookup(_group_state(tsh), 0, ids_l)
         return ctx.routing.overflow.reshape(())
 
-    ovf = jax.jit(jax.shard_map(f, mesh=mesh1, in_specs=(P(AXES, None), P()),
-                                out_specs=P(), check_vma=False))(table, ids)
+    ovf = jax.jit(shard_map(f, mesh=mesh1, in_specs=(P(AXES, None), P()),
+                            out_specs=P(), check_vma=False))(table, ids)
     assert int(ovf) == 32 - 8  # uniques beyond capacity dropped & counted
 
 
@@ -144,7 +168,7 @@ def test_flush_cache_roundtrip(mesh1):
         return pe.flush_cache(w, acc, counts, pe.CacheState(ck, cr, ca),
                               axes=AXES, world=1)
 
-    w2, acc2, counts2, cache2 = jax.jit(jax.shard_map(
+    w2, acc2, counts2, cache2 = jax.jit(shard_map(
         f, mesh=mesh1,
         in_specs=(P(AXES, None), P(AXES, None), P(AXES), P(), P(), P()),
         out_specs=(P(AXES, None), P(AXES, None), P(AXES),

@@ -4,6 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.dist.compat import shard_map
 from repro.optim.grad_compression import compressed_psum
 
 AXES = ("data", "model")
@@ -15,8 +16,8 @@ def _psum1(mesh, grads, mode, residual=None):
         return out, res
 
     r0 = residual if residual is not None else jax.tree.map(jnp.zeros_like, grads)
-    return jax.jit(jax.shard_map(f, mesh=mesh, in_specs=(P(), P()),
-                                 out_specs=(P(), P()), check_vma=False))(grads, r0)
+    return jax.jit(shard_map(f, mesh=mesh, in_specs=(P(), P()),
+                             out_specs=(P(), P()), check_vma=False))(grads, r0)
 
 
 def test_bf16_close(mesh1):

@@ -3,8 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-import hypothesis.strategies as st
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:
+    from hypothesis_fallback import given, settings, st
 
 from repro.kernels import ref
 from repro.kernels.cross_layer import cross_layer_pallas

@@ -1,8 +1,12 @@
 """PICASSO planner unit + property tests (Eq. 1/2/3 logic)."""
-import hypothesis.strategies as st
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:
+    from hypothesis_fallback import given, settings, st
 
 from repro.configs.base import FeatureField, InteractionSpec, WDLConfig
 from repro.core.packing import (PackedGroup, build_tables, calc_vparam, make_plan,

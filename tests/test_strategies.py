@@ -1,0 +1,126 @@
+"""EmbeddingEngine strategy registry + parity (single-device, in-process).
+
+Multi-device parity of the same strategies lives in
+test_distributed.py::test_strategy_parity_8dev.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.features import pack_group
+from repro.core.packing import make_plan
+from repro.data.synthetic import make_batch
+from repro.dist.compat import shard_map
+from repro.dist.sharding import emb_specs, replicated
+from repro.embedding.state import init_embedding_state
+from repro.engine import (EmbeddingEngine, HybridStrategy, LookupStrategy,
+                          PicassoStrategy, PSStrategy, available_strategies,
+                          get_strategy, register_strategy)
+
+AXES = ("data", "model")
+GB = 16
+
+
+# --------------------------------------------------------------- registry
+def test_registry_contents():
+    names = available_strategies()
+    assert {"picasso", "hybrid", "ps"} <= set(names)
+    assert get_strategy("picasso") is PicassoStrategy
+    assert get_strategy("hybrid") is HybridStrategy
+    assert get_strategy("ps") is PSStrategy
+
+
+def test_unknown_strategy_raises_with_menu():
+    with pytest.raises(ValueError, match="picasso"):
+        get_strategy("does-not-exist")
+
+
+def test_train_step_validates_strategy_name(mesh1, axes):
+    from repro.models.wdl import WDLModel
+    from repro.train.train_step import TrainConfig, make_train_step
+    cfg = get_config("deepfm", smoke=True)
+    plan = make_plan(cfg, world=1, per_device_batch=GB, enable_cache=False)
+    model = WDLModel(cfg, plan)
+    with pytest.raises(ValueError, match="unknown lookup strategy"):
+        make_train_step(model, plan, mesh1, axes, GB,
+                        TrainConfig(strategy="nope"))
+
+
+def test_custom_strategy_registers_and_resolves():
+    @register_strategy("_test_dummy")
+    class DummyStrategy(PicassoStrategy):
+        pass
+
+    try:
+        assert get_strategy("_test_dummy") is DummyStrategy
+        assert DummyStrategy.name == "_test_dummy"
+    finally:
+        from repro.engine import strategies as S
+        S._REGISTRY.pop("_test_dummy", None)
+
+
+# ----------------------------------------------------------------- parity
+def _engine_roundtrip(mesh, strategy: str):
+    """forward + backward of one synthetic batch through the bare engine."""
+    cfg = get_config("deepfm", smoke=True)
+    plan = make_plan(cfg, world=1, per_device_batch=GB, enable_cache=False,
+                     exact_capacity=True)
+    emb0 = {str(g): s for g, s in
+            init_embedding_state(jax.random.PRNGKey(0), plan).items()}
+    batch = make_batch(cfg, GB, np.random.default_rng(3))
+    fields = jax.tree.map(jnp.asarray, batch["fields"])
+    engine = EmbeddingEngine(plan, AXES, 1, strategy=strategy,
+                             use_cache=False, lr_emb=0.1)
+    especs = emb_specs(plan, AXES)
+
+    def f(emb, fields):
+        packed = {g.gid: pack_group(g, fields) for g in plan.groups}
+        pooled, ctx = engine.forward(emb, packed)
+        # deterministic synthetic loss grad: d(0.5*sum(pooled^2)) = pooled
+        emb2, _m = engine.backward(emb, ctx, pooled)
+        return pooled, emb2
+
+    pooled_specs = {g.gid: jax.sharding.PartitionSpec(AXES, None, None)
+                    for g in plan.groups}
+    g = jax.jit(shard_map(
+        f, mesh=mesh, in_specs=(especs, replicated(fields)),
+        out_specs=(pooled_specs, especs), check_vma=False))
+    pooled, emb2 = g(emb0, fields)
+    tables = {k: np.asarray(v.w) for k, v in emb2.items()}
+    return jax.tree.map(np.asarray, pooled), tables
+
+
+def test_strategy_parity_forward_and_update(mesh1):
+    """With exact capacity and no cache, all strategies produce matching
+    pooled outputs and post-update embedding tables."""
+    ref_pooled, ref_tables = _engine_roundtrip(mesh1, "picasso")
+    for name in ("hybrid", "ps"):
+        pooled, tables = _engine_roundtrip(mesh1, name)
+        for gid in ref_pooled:
+            np.testing.assert_allclose(pooled[gid], ref_pooled[gid],
+                                       atol=1e-5, err_msg=f"{name}/pooled/{gid}")
+        for k in ref_tables:
+            np.testing.assert_allclose(tables[k], ref_tables[k],
+                                       atol=1e-5, err_msg=f"{name}/table/{k}")
+
+
+def test_hybrid_selectable_by_name_end_to_end(mesh1, axes):
+    """'hybrid' resolves from the registry through TrainConfig and trains."""
+    from repro.dist.sharding import batch_specs, to_named
+    from repro.models.wdl import WDLModel
+    from repro.train.train_step import TrainConfig, init_state, make_train_step
+    cfg = get_config("deepfm", smoke=True)
+    plan = make_plan(cfg, world=1, per_device_batch=GB, enable_cache=False,
+                     exact_capacity=True)
+    model = WDLModel(cfg, plan)
+    state = init_state(model, plan, jax.random.PRNGKey(0), mesh=mesh1, axes=axes)
+    step, _ = make_train_step(model, plan, mesh1, axes, GB,
+                              TrainConfig(strategy="hybrid", use_cache=False))
+    b = make_batch(cfg, GB, np.random.default_rng(0))
+    b = jax.device_put(b, to_named(mesh1, batch_specs(b, axes)))
+    state, m = step(state, b)
+    assert bool(jnp.isfinite(m["loss"]))
+    # hybrid never touches the hot tier
+    assert int(m["cache_hits"]) == 0

@@ -39,8 +39,9 @@ def test_loss_decreases_on_learnable_task(mesh1, axes):
     for i, batch in zip(range(40), batch_stream(cfg, GB, seed=0, learnable=True)):
         state, m = step(state, _put(mesh1, axes, batch))
         losses.append(float(m["loss"]))
-    first, last = np.mean(losses[:10]), np.mean(losses[-10:])
-    assert np.isfinite(last)
+    assert np.isfinite(losses).all()
+    # medians: a single adagrad spike in either window must not flip the test
+    first, last = np.median(losses[:10]), np.median(losses[-10:])
     assert last < first * 0.98, (first, last)
 
 

@@ -1,11 +1,9 @@
 """LM stack correctness: chunked==full attention, SWA masking, GQA,
 prefill/decode consistency vs the full forward, RoPE properties."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
 
 from repro.configs import get_config
 from repro.layers.attention import (apply_rope, chunked_causal_attention,
