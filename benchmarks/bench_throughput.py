@@ -1,10 +1,12 @@
 """Paper Tab. III / Fig. 10: training throughput of the benchmark models
 (DLRM / DeepFM / DIN / DCN-v2) under the EmbeddingEngine's registry
-strategies — 'picasso' vs the 'hybrid' (MP, no cache) and 'ps' baselines.
-CPU-scaled smoke configs; the *ratio* is the reproduced quantity.
+strategies — 'picasso' vs the 'hybrid' (MP, no cache) and 'ps' baselines,
+plus 'mixed' (the repro.core.assign cost model picking a strategy per packed
+group). CPU-scaled smoke configs; the *ratio* is the reproduced quantity.
 
 ``--smoke`` runs one model at a reduced batch with fewer timing iters — the
-fast CI pass wired into scripts/ci.sh."""
+fast CI pass wired into scripts/ci.sh (and the only place the auto-assignment
+path is executed on every CI run)."""
 import argparse
 
 from repro.configs import get_config
@@ -34,9 +36,13 @@ def run(smoke: bool = False):
         pic = bench_train_ips(cfg, gb, TrainConfig(strategy="picasso"), iters=iters)
         ps = bench_train_ips(cfg, gb, TrainConfig(strategy="ps", use_cache=False),
                              iters=iters, enable_cache=False)
+        # per-group cost-model assignment (tiny tables PS, big skewed ones
+        # routed + cached); the engine compiles it from the plan on the fly
+        mix = bench_train_ips(cfg, gb, TrainConfig(strategy="mixed"), iters=iters)
         speedup = ps["us_per_call"] / pic["us_per_call"]
         emit(f"throughput/{name}/picasso", pic["us_per_call"], f"ips={pic['ips']:.0f}")
         emit(f"throughput/{name}/ps", ps["us_per_call"], f"ips={ps['ips']:.0f}")
+        emit(f"throughput/{name}/mixed", mix["us_per_call"], f"ips={mix['ips']:.0f}")
         emit(f"throughput/{name}/speedup", 0.0, f"x{speedup:.2f}")
         if not smoke:
             # paper §II-C intermediate baseline: MP routing, but neither
@@ -47,6 +53,9 @@ def run(smoke: bool = False):
                                   enable_packing=False)
             emit(f"throughput/{name}/hybrid", hyb["us_per_call"],
                  f"ips={hyb['ips']:.0f}")
+            emit(f"throughput/{name}/mixed_vs_best_pure", 0.0,
+                 "x{:.2f}".format(min(pic["us_per_call"], ps["us_per_call"],
+                                      hyb["us_per_call"]) / mix["us_per_call"]))
 
 
 if __name__ == "__main__":

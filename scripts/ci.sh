@@ -28,6 +28,10 @@ echo "== tier-1: pytest =="
 python -m pytest -x -q
 
 echo "== tier-1: benchmark smoke =="
-python -m benchmarks.bench_throughput --smoke
+# the smoke pass must include the 'mixed' per-group assignment row so the
+# repro.core.assign cost-model path is executed on every CI run
+bench_out=$(python -m benchmarks.bench_throughput --smoke | tee /dev/stderr)
+echo "$bench_out" | grep -q "/mixed" \
+    || { echo "ci.sh: bench smoke missing the 'mixed' strategy row" >&2; exit 1; }
 
 echo "== ci.sh: all green =="

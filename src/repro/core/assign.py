@@ -1,0 +1,310 @@
+"""Per-group strategy assignment: the cost model behind 'mixed' engines.
+
+PICASSO's packing analysis (paper §III-B) treats every packed group the same
+way, but embedding tables are wildly heterogeneous: a handful of huge skewed
+tables dominate ``CalcVParam`` while hundreds of tiny tables cost more in
+all_to_all routing overhead than MP sharding saves in memory. The winning
+layout is *mixed* (HugeCTR hybrid embedding; Meta's DLRM efficiency study):
+PS-replicate the tiny tables, model-parallel-shard the big ones, cache only
+where the skew pays for the hot tier.
+
+This module is pure planning (numpy / python, like ``repro.core.packing``).
+``compile_assignment`` scores each packed group's per-step communication
+volume under every registered strategy and emits a ``StrategyAssignment``:
+
+``ps``
+    all_gather ids + psum partial rows: O(world * n * D) elements but no
+    routing machinery — wins for tiny/replicable groups where n is small and
+    the fixed Shuffle overhead dominates.
+``picasso``
+    MP routing with the HybridHash hot tier absorbing the skew head: misses
+    only through the Shuffle, plus the per-step psum of hot-row grads — wins
+    for large groups whose FCounter skew gives a real hit ratio.
+``hybrid``
+    MP routing, no cache — the middle ground when a group is too big to
+    replicate but too flat (or unbudgeted) to cache.
+
+The engine consumes the result through ``resolve_assignment``, which also
+normalizes the user-facing spellings: a single registry name broadcasts, a
+``{gid_or_table_glob: name}`` dict overrides, ``'mixed'``/``'auto'`` compiles.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from fnmatch import fnmatchcase
+from typing import Dict, Mapping, Optional, Union
+
+import numpy as np
+
+from repro.core.packing import PackedGroup, PicassoPlan
+
+# Fixed per-group cost (in "row elements") of launching the Shuffle machinery:
+# unique/partition kernels plus two all_to_all dispatches. Tiny groups whose
+# whole PS transfer is below this are cheaper off the routed path entirely.
+ROUTE_OVERHEAD_ELEMS = 4096.0
+
+# Cache hit ratio assumed for a budgeted group with no measured stats
+# (paper Tab. VI: >=20% at a 1 GB hot tier on production skew).
+DEFAULT_HIT_RATIO = 0.2
+
+# A group is "replicable" (eligible for the PS path) only below this many
+# packed rows: the PS pattern effectively replicates the lookup work on
+# every shard, which is only acceptable for tiny tables.
+PS_MAX_ROWS = 8192
+
+# Minimum hot-tier hit ratio for the cache's psum/flush machinery to pay
+# for itself; flatter groups stay on the plain routed path.
+SKEW_MIN = 0.05
+
+
+@dataclass(frozen=True)
+class GroupScore:
+    """Cost-model inputs and per-candidate scores for one packed group."""
+
+    gid: int
+    vparam: float
+    ids_per_shard: int          # expected ids per step per shard
+    rows: int
+    skew: float                 # estimated hot-tier hit ratio in [0, 1]
+    costs: Dict[str, float]     # candidate name -> est. comm elems / step
+    choice: str
+    reason: str
+
+
+@dataclass(frozen=True)
+class StrategyAssignment:
+    """Plan-level strategy map plus the cost-model evidence behind it."""
+
+    strategy: Dict[int, str]            # gid -> registry name
+    scores: Dict[int, GroupScore] = field(default_factory=dict)
+
+    def describe(self) -> str:
+        """Human-readable per-group table (launchers print this)."""
+        lines = []
+        for gid in sorted(self.strategy):
+            s = self.scores.get(gid)
+            if s is None:
+                lines.append(f"  g{gid}: {self.strategy[gid]}")
+            else:
+                lines.append(f"  g{gid}: {s.choice:8s} rows={s.rows:<9d} "
+                             f"ids/shard={s.ids_per_shard:<6d} "
+                             f"skew={s.skew:.2f}  ({s.reason})")
+        return "\n".join(lines)
+
+
+def _validate_name(name: str) -> str:
+    # engine.strategies imports jax; keep this module importable without it
+    # except when a name actually needs resolving against the registry.
+    from repro.engine.strategies import get_strategy
+
+    get_strategy(name)  # raises with the registry menu on unknown names
+    return name
+
+
+def estimate_skew(group: PackedGroup, cache_rows: int,
+                  counts: Optional[np.ndarray] = None) -> float:
+    """Expected hot-tier hit ratio for ``group`` given ``cache_rows`` slots.
+
+    With measured FCounter ``counts`` (the engine's per-row frequency stats,
+    any shard layout — only the distribution matters), the hit ratio is the
+    lookup share of the ``cache_rows`` hottest rows. Without stats we fall
+    back to the paper's warm-skew prior for budgeted groups — except when
+    the tier covers the whole table, where every lookup hits.
+    """
+    cache_rows = min(int(cache_rows), group.rows)
+    if cache_rows <= 0:
+        return 0.0
+    if counts is not None:
+        c = np.asarray(counts, np.float64).reshape(-1)
+        total = float(c.sum())
+        if total > 0:
+            return float(np.sort(c)[::-1][:cache_rows].sum() / total)
+    return 1.0 if cache_rows >= group.rows else DEFAULT_HIT_RATIO
+
+
+def _score_group(group: PackedGroup, world: int, ids_per_shard: int,
+                 cache_rows: int, skew: float, *,
+                 ps_max_rows: int = PS_MAX_ROWS,
+                 skew_min: float = SKEW_MIN) -> GroupScore:
+    """Score one group: comm-volume estimates plus the replicability /
+    skew gates that pick ps for tiny groups, picasso for large skewed
+    ones, and hybrid for the middle."""
+    n, d = float(max(ids_per_shard, 1)), float(group.dim)
+    # ps: all_gather n ids from every shard, psum the [world*n, D] partials.
+    ps = world * n * (d + 1.0)
+    # hybrid: route ids out (n) and rows back (n*D), twice (fwd + bwd), plus
+    # the fixed dispatch overhead of the Shuffle machinery.
+    hybrid = 2.0 * n * (1.0 + d) + ROUTE_OVERHEAD_ELEMS
+    # picasso: only misses ride the Shuffle; hit-grad handling is amortized
+    # over flush_iters (psum mode) or rides a small second a2a (stale mode).
+    picasso = 2.0 * n * (1.0 - skew) * (1.0 + d) + ROUTE_OVERHEAD_ELEMS
+    costs = {"ps": ps, "hybrid": hybrid, "picasso": picasso}
+    if group.rows <= ps_max_rows and ps <= hybrid:
+        choice, reason = "ps", "tiny/replicable: PS transfer under routing overhead"
+    elif cache_rows > 0 and skew >= skew_min:
+        choice, reason = "picasso", f"skew head (hit~{skew:.2f}) pays for the hot tier"
+    else:
+        choice, reason = "hybrid", "too big to replicate, too flat to cache"
+    return GroupScore(gid=group.gid, vparam=group.vparam,
+                      ids_per_shard=ids_per_shard, rows=group.rows, skew=skew,
+                      costs=costs, choice=choice, reason=reason)
+
+
+def _apply_overrides(plan: PicassoPlan, strategy: Dict[int, str],
+                     overrides: Mapping[Union[int, str], str]) -> None:
+    """User override path: keys are gids (int or digit-string) or fnmatch
+    globs over the table names a group packs. Unknown strategy names and
+    globs matching nothing fail fast."""
+    for key, name in overrides.items():
+        _validate_name(name)
+        if isinstance(key, int) or (isinstance(key, str) and key.isdigit()):
+            gid = int(key)
+            plan.group(gid)  # KeyError on unknown gid
+            strategy[gid] = name
+            continue
+        hit = False
+        for g in plan.groups:
+            if any(fnmatchcase(t.name, key) for t in g.tables):
+                strategy[g.gid] = name
+                hit = True
+        if not hit:
+            raise ValueError(
+                f"strategy override {key!r} matches no table; tables: "
+                f"{sorted(t.name for g in plan.groups for t in g.tables)}")
+
+
+def compile_assignment(
+    plan: PicassoPlan,
+    stats: Optional[Dict[int, np.ndarray]] = None,
+    world: Optional[int] = None,
+    *,
+    per_device_batch: Optional[int] = None,
+    overrides: Optional[Mapping[Union[int, str], str]] = None,
+    ps_max_rows: int = PS_MAX_ROWS,
+    skew_min: float = SKEW_MIN,
+    enable_cache: bool = True,
+) -> StrategyAssignment:
+    """Score every packed group and pick its cheapest lookup strategy.
+
+    Parameters
+    ----------
+    plan: the planner output; ``plan.cache_rows`` feeds the hot-tier terms,
+        ``plan.microbatch`` sizes the default per-step id volume.
+    stats: optional gid -> FCounter counts array (measured skew); groups
+        without stats use the structural prior.
+    world: mesh size override (defaults to ``plan.world``).
+    per_device_batch: per-shard batch the id volume is scaled to (defaults
+        to the plan's micro-batch, the unit the engine actually issues).
+    overrides: ``{gid_or_table_glob: name}`` forced picks applied after the
+        cost model (so a glob can pin e.g. ``"user_*": "picasso"``).
+    ps_max_rows/skew_min: replicability and hot-tier profitability gates
+        (see the module constants).
+    enable_cache: pass False when the engine will run with the hot tier
+        disabled (``use_cache=False``), so the model scores groups with
+        skew=0 instead of crediting a tier that never participates.
+    """
+    world = int(world if world is not None else plan.world)
+    batch = int(per_device_batch if per_device_batch is not None
+                else max(plan.microbatch, 1))
+    strategy: Dict[int, str] = {}
+    scores: Dict[int, GroupScore] = {}
+    for g in plan.groups:
+        cache_rows = plan.cache_rows.get(g.gid, 0) if enable_cache else 0
+        counts = stats.get(g.gid) if stats else None
+        skew = estimate_skew(g, cache_rows, counts)
+        sc = _score_group(g, world, batch * g.ids_per_sample, cache_rows, skew,
+                          ps_max_rows=ps_max_rows, skew_min=skew_min)
+        strategy[g.gid] = sc.choice
+        scores[g.gid] = sc
+    if overrides:
+        _apply_overrides(plan, strategy, overrides)
+        scores = {gid: s for gid, s in scores.items()
+                  if strategy[gid] == s.choice}
+    return StrategyAssignment(strategy=strategy, scores=scores)
+
+
+def apply_assignment(plan: PicassoPlan,
+                     assignment: Union[StrategyAssignment, Dict[int, str]]
+                     ) -> PicassoPlan:
+    """Record an assignment on the plan (``plan.strategy``) and return it."""
+    mapping = (assignment.strategy if isinstance(assignment, StrategyAssignment)
+               else dict(assignment))
+    plan.strategy = {int(k): _validate_name(v) for k, v in mapping.items()}
+    return plan
+
+
+# spellings accepted by resolve_assignment for "compile it for me"
+AUTO_NAMES = ("mixed", "auto")
+
+
+def maybe_compile(plan: PicassoPlan, spec: "StrategySpec", *,
+                  per_device_batch: Optional[int] = None,
+                  use_cache: bool = True, log=None) -> "StrategySpec":
+    """Launcher-side 'mixed'/'auto' handling: compile the assignment once,
+    record it on the plan (so every engine built from the plan — train step,
+    host flush, serve — sees the same mixing), and optionally log it.
+    Any other spec passes through untouched.
+
+    ``per_device_batch`` must match the id volume the engine actually issues
+    per step: leave it None (-> ``plan.microbatch``) for training, pass the
+    per-shard batch for serving (no micro pipeline there). ``use_cache``
+    must match the engine flag so the model never credits a disabled tier.
+    """
+    if isinstance(spec, str) and spec in AUTO_NAMES:
+        asg = compile_assignment(plan, per_device_batch=per_device_batch,
+                                 enable_cache=use_cache)
+        apply_assignment(plan, asg)
+        if log is not None:
+            log(f"strategy assignment (cost model):\n{asg.describe()}")
+    return spec
+
+StrategySpec = Union[str, Dict[int, str], "StrategyAssignment"]
+
+
+def resolve_assignment(plan: PicassoPlan, spec: StrategySpec,
+                       world: Optional[int] = None,
+                       use_cache: bool = True) -> Dict[int, str]:
+    """Normalize any user-facing strategy spelling into a full gid -> name map.
+
+    - a registry name broadcasts to every group (the PR 1 constructor sugar);
+    - ``'mixed'`` / ``'auto'`` uses ``plan.strategy`` when the plan carries
+      one, else compiles a fresh assignment from the plan's own statistics
+      (``plan.microbatch`` id volume — the training unit; callers issuing a
+      different per-step volume, e.g. un-pipelined serving, should compile
+      with the right ``per_device_batch`` and record it via
+      ``maybe_compile``/``apply_assignment`` first) and **records it on the
+      plan**, so every later engine built from the same plan — including the
+      host-scheduled flush — sees one consistent mixing;
+    - a ``StrategyAssignment`` or ``{gid: name}`` dict is taken as-is but
+      must cover exactly the plan's gids (typos and gaps fail fast here,
+      not deep inside a shard_map trace).
+
+    ``world``/``use_cache`` are the engine's actual mesh size and cache flag
+    (defaults: ``plan.world``, on); they feed the fallback compile's PS cost
+    term and hot-tier credit.
+    """
+    if isinstance(spec, StrategyAssignment):
+        mapping = dict(spec.strategy)
+    elif isinstance(spec, dict):
+        mapping = {int(k): v for k, v in spec.items()}
+    elif spec in AUTO_NAMES:
+        if plan.strategy:
+            mapping = dict(plan.strategy)
+        else:
+            mapping = compile_assignment(plan, world=world,
+                                         enable_cache=use_cache).strategy
+            apply_assignment(plan, mapping)
+    else:
+        _validate_name(spec)
+        return {g.gid: spec for g in plan.groups}
+
+    gids = {g.gid for g in plan.groups}
+    missing = sorted(gids - set(mapping))
+    extra = sorted(set(mapping) - gids)
+    if missing or extra:
+        raise ValueError(
+            f"strategy assignment must cover exactly the plan's groups; "
+            f"missing gids {missing}, unknown gids {extra}")
+    for name in set(mapping.values()):
+        _validate_name(name)
+    return mapping

@@ -71,13 +71,29 @@ class PicassoPlan:
     cache_rows: Dict[int, int]       # gid -> hot-storage rows (0 = no cache)
     flush_iters: int = 100
     warmup_iters: int = 100
+    # gid -> LookupStrategy registry name. Empty = unassigned: engines built
+    # with a single strategy name broadcast it; engines built with
+    # 'mixed'/'auto' compile an assignment (repro.core.assign) and record
+    # it here so later engines/flushes see the same mixing.
+    strategy: Dict[int, str] = field(default_factory=dict)
+    _by_gid: Dict[int, PackedGroup] = field(init=False, repr=False)
+
+    def __post_init__(self):
+        self._by_gid = {g.gid: g for g in self.groups}
 
     @property
     def n_interleave(self) -> int:
         return len(self.interleave)
 
     def group(self, gid: int) -> PackedGroup:
-        return self.groups[gid]
+        """Resolve a group by its gid (NOT by list position: plans sliced or
+        re-planned per tower may hold non-contiguous gids)."""
+        try:
+            return self._by_gid[gid]
+        except KeyError:
+            raise KeyError(
+                f"no packed group with gid={gid}; plan has "
+                f"{sorted(self._by_gid)}") from None
 
 
 def build_tables(cfg: WDLConfig) -> Tuple[Dict[str, TableSpec], Dict[str, str]]:

@@ -1,8 +1,12 @@
 """Unified embedding engine: one sparse path for train / serve / retrieval.
 
-``EmbeddingEngine`` executes a ``PicassoPlan`` with a pluggable
-``LookupStrategy`` (``'picasso' | 'hybrid' | 'ps'``, see ``strategies``).
+``EmbeddingEngine`` executes a ``PicassoPlan`` with per-group pluggable
+``LookupStrategy``s (``'picasso' | 'hybrid' | 'ps'``, see ``strategies``):
+a single name broadcasts, ``'mixed'``/``'auto'`` uses the plan's assignment
+or compiles one with the ``repro.core.assign`` cost model.
 """
+from repro.core.assign import (StrategyAssignment, apply_assignment,
+                               compile_assignment, resolve_assignment)
 from repro.engine.engine import EmbeddingEngine, EngineContext
 from repro.engine.strategies import (HybridStrategy, LookupStrategy, PicassoStrategy,
                                      PSStrategy, available_strategies, get_strategy,
@@ -15,7 +19,11 @@ __all__ = [
     "LookupStrategy",
     "PSStrategy",
     "PicassoStrategy",
+    "StrategyAssignment",
+    "apply_assignment",
     "available_strategies",
+    "compile_assignment",
     "get_strategy",
     "register_strategy",
+    "resolve_assignment",
 ]

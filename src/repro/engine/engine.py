@@ -7,7 +7,7 @@ Every workload — hybrid MP/DP training, online/bulk serving, two-tower
 retrieval, and the dry-run cells — consumes the *same* engine instead of
 re-implementing the ``pack_group -> lookup -> pool`` loop:
 
-    EmbeddingEngine(plan, axes, world, strategy=<name>)
+    EmbeddingEngine(plan, axes, world, strategy=<spec>)
         .forward(emb, packed)          -> (pooled, ctx)     # K-interleaved
         .backward(emb, ctx, g_pooled)  -> (emb', metrics)   # transposed path
         .flush(emb)                    -> emb'              # HybridHash flush
@@ -17,15 +17,28 @@ re-implementing the ``pack_group -> lookup -> pool`` loop:
 pinned behind a barrier with wave k's outputs, Fig. 8c) and pools each packed
 group into ``pooled[gid]: [B, n_bags, D]``. ``backward`` takes the loss
 gradient w.r.t. those pooled tensors, applies the (linear) SegmentReduction
-transpose to recover per-row gradients, and hands them to the strategy's
-update path; it also folds cache hit / bucket overflow counters into metrics.
-``ctx`` is a pytree, so engine calls compose with ``jax.value_and_grad``,
-``lax.cond`` and the D-Interleaving micro-batch pipeline in the train step.
+transpose to recover per-row gradients, and hands them to each group's
+strategy update path; it also folds cache hit / bucket overflow counters into
+metrics. ``ctx`` is a pytree, so engine calls compose with
+``jax.value_and_grad``, ``lax.cond`` and the D-Interleaving micro-batch
+pipeline in the train step.
 
-The sparse *mechanism* (which collectives move ids and gradients, whether a
-hot tier absorbs the skew head) is a ``LookupStrategy`` selected by name from
-the registry in ``repro.engine.strategies`` — ``'picasso'``, ``'hybrid'``,
-``'ps'``. Scenario PRs add strategies; they do not touch this file's callers.
+Strategy is a **per-packed-group property of the plan**, not an engine-wide
+flag: the engine owns a ``Dict[gid, LookupStrategy]`` and dispatches per
+group in every entry point. The ``strategy=`` argument accepts
+
+- a registry name (``'picasso' | 'hybrid' | 'ps'``) — broadcast to every
+  group (the original single-strategy constructor, kept as sugar);
+- ``'mixed'`` / ``'auto'`` — use ``plan.strategy`` when the planner recorded
+  an assignment, else compile one with the ``repro.core.assign`` cost model
+  (tiny tables PS-replicated, big skewed tables routed + cached);
+- an explicit ``{gid: name}`` dict or a ``StrategyAssignment``.
+
+Cache gating is per group: the HybridHash hot tier participates only where
+the assigned strategy has ``uses_cache`` AND the plan budgets rows for that
+gid; ``flush`` skips every other group. Metrics are per-strategy-class sums
+(``overflow/<name>``, ``cache_hits/<name>``) so overflow and hit counters
+stay meaningful when a plan mixes routed and PS groups.
 
 All shapes are static: the engine runs inside ``shard_map`` on TPU meshes.
 """
@@ -37,6 +50,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import packed_embedding as pe
+from repro.core.assign import StrategySpec, resolve_assignment
 from repro.core.features import PackedBatch
 from repro.core.interleaving import wave_barrier
 from repro.core.packing import PicassoPlan
@@ -58,12 +72,15 @@ class EmbeddingEngine:
 
     Parameters
     ----------
-    plan: the planner output (groups, capacities, waves, cache budget).
+    plan: the planner output (groups, capacities, waves, cache budget, and
+        optionally a per-group strategy assignment).
     axes/world: mesh axes the engine's collectives run over, and their size.
-    strategy: registry name — ``'picasso' | 'hybrid' | 'ps'`` (see
-        ``repro.engine.strategies.available_strategies()``).
-    use_cache: enable the HybridHash hot tier (only honoured by strategies
-        with ``uses_cache=True`` and plans with a non-zero cache budget).
+    strategy: a registry name (broadcast), ``'mixed'``/``'auto'`` (use or
+        compile a per-group assignment), a ``{gid: name}`` dict, or a
+        ``StrategyAssignment`` — see ``repro.core.assign``.
+    use_cache: enable the HybridHash hot tier (honoured per group: only
+        where the assigned strategy has ``uses_cache=True`` and the plan
+        budgets a non-zero cache for that gid).
     use_interleave: issue lookups in the planner's K-Interleaving waves;
         ``False`` collapses to a single wave.
     lr_emb/eps: row-wise adagrad hyperparameters for the sparse update.
@@ -75,31 +92,59 @@ class EmbeddingEngine:
     """
 
     def __init__(self, plan: PicassoPlan, axes: Axes, world: int, *,
-                 strategy: str = "picasso", use_cache: bool = True,
+                 strategy: StrategySpec = "picasso", use_cache: bool = True,
                  use_interleave: bool = True, lr_emb: float = 0.05,
                  eps: float = 1e-8, cache_update: str = "psum",
                  capacity: Optional[Dict[int, int]] = None):
-        cls = get_strategy(strategy)   # raises on unknown names
         self.plan = plan
         self.axes = axes
         self.world = world
-        self.strategy_name = strategy
         self.cache_update = cache_update
-        self.strategy: LookupStrategy = cls(
-            axes=axes, world=world,
-            capacity=dict(capacity if capacity is not None else plan.capacity),
-            lr=lr_emb, eps=eps, cache_update=cache_update)
-        self.cache_on = (use_cache and cls.uses_cache
-                         and any(plan.cache_rows.get(g.gid, 0) > 0
-                                 for g in plan.groups))
+        # gid -> registry name; raises on unknown names / partial coverage
+        # (an auto-compiled assignment is recorded on the plan, so the
+        # host-flush engine and later call sites gate caches identically)
+        self.assignment: Dict[int, str] = resolve_assignment(
+            plan, strategy, world=world, use_cache=use_cache)
+        names = tuple(sorted(set(self.assignment.values())))
+        self.strategy_names = names
+        self.strategy_name = names[0] if len(names) == 1 else "mixed"
+        cap = dict(capacity if capacity is not None else plan.capacity)
+        # one instance per distinct name (they are stateless per-call), one
+        # dispatch-map entry per group
+        insts: Dict[str, LookupStrategy] = {
+            name: get_strategy(name)(
+                axes=axes, world=world, capacity=cap, lr=lr_emb, eps=eps,
+                cache_update=cache_update)
+            for name in names}
+        self.strategies: Dict[int, LookupStrategy] = {
+            gid: insts[name] for gid, name in self.assignment.items()}
+        # per-group cache gating: strategy must use the tier AND the plan
+        # must budget rows for this gid
+        self.cache_on: Dict[int, bool] = {
+            g.gid: bool(use_cache
+                        and self.strategies[g.gid].uses_cache
+                        and plan.cache_rows.get(g.gid, 0) > 0)
+            for g in plan.groups}
+        self.any_cache = any(self.cache_on.values())
         self.waves = (plan.interleave if use_interleave
                       else [[g.gid for g in plan.groups]])
+
+    @property
+    def metric_keys(self) -> Tuple[str, ...]:
+        """Static metric pytree keys ``backward`` emits (callers build
+        shard_map out_specs from this)."""
+        keys = ["overflow", "cache_hits"]
+        if len(self.strategy_names) > 1:
+            keys += [f"overflow/{n}" for n in self.strategy_names]
+            keys += [f"cache_hits/{n}" for n in self.strategy_names]
+        return tuple(keys)
 
     # ------------------------------------------------------------- forward
     def _wave_lookups(self, emb: Dict[str, EmbeddingState],
                       packed: Dict[int, PackedBatch]
                       ) -> Tuple[Dict[int, jnp.ndarray], Dict[int, Any]]:
-        """Per-group lookups in K-Interleaving waves (Fig. 8c)."""
+        """Per-group lookups in K-Interleaving waves (Fig. 8c), each group
+        through its own assigned strategy."""
         rows: Dict[int, jnp.ndarray] = {}
         ctxs: Dict[int, Any] = {}
         ids_in = {g.gid: packed[g.gid].ids for g in self.plan.groups}
@@ -115,8 +160,9 @@ class EmbeddingEngine:
                 for j, g in enumerate(wave):
                     ids_in[g] = flat[len(prev) + j]
             for gid in wave:
-                rows[gid], ctxs[gid] = self.strategy.lookup(
-                    emb[str(gid)], gid, ids_in[gid], cache_on=self.cache_on)
+                rows[gid], ctxs[gid] = self.strategies[gid].lookup(
+                    emb[str(gid)], gid, ids_in[gid],
+                    cache_on=self.cache_on[gid])
         return rows, ctxs
 
     def forward(self, emb: Dict[str, EmbeddingState],
@@ -136,8 +182,8 @@ class EmbeddingEngine:
     def lookup_rows(self, emb: Dict[str, EmbeddingState], gid: int,
                     ids: jnp.ndarray) -> jnp.ndarray:
         """Raw per-id rows ``[n, D]`` for one group (retrieval towers)."""
-        rows_u, ctx = self.strategy.lookup(emb[str(gid)], gid, ids,
-                                           cache_on=self.cache_on)
+        rows_u, ctx = self.strategies[gid].lookup(
+            emb[str(gid)], gid, ids, cache_on=self.cache_on[gid])
         return jnp.take(rows_u, ctx.inv, axis=0)
 
     # ------------------------------------------------------------ backward
@@ -149,31 +195,43 @@ class EmbeddingEngine:
         The SegmentReduction of ``forward`` is linear in the looked-up rows,
         so its transpose is explicit: ``g_rows[u] = sum_{i: inv[i]=u} w[i] *
         g_pooled[seg[i]]``. Metrics are per-shard sums; callers psum them.
+        With a mixed assignment, ``overflow/<name>`` and ``cache_hits/<name>``
+        break the totals down per strategy class (see ``metric_keys``).
         """
         emb = dict(emb)
-        ovf = jnp.zeros((), jnp.int32)
-        hits = jnp.zeros((), jnp.int32)
+        zero = jnp.zeros((), jnp.int32)
+        ovf = {n: zero for n in self.strategy_names}
+        hits = {n: zero for n in self.strategy_names}
         for gid, g_p in g_pooled.items():
             pb = ctx.packed[gid]
             gctx = ctx.ctxs[gid]
+            name = self.assignment[gid]
             g_flat = g_p.reshape(-1, g_p.shape[-1])
             per_id = (jnp.take(g_flat, pb.seg, axis=0)
                       * pb.weights[:, None].astype(g_flat.dtype))
             g_rows = jax.ops.segment_sum(per_id, gctx.inv,
                                          num_segments=pb.ids.shape[0])
-            st2, o, h = self.strategy.apply_grads(
-                emb[str(gid)], gid, gctx, g_rows, cache_on=self.cache_on)
+            st2, o, h = self.strategies[gid].apply_grads(
+                emb[str(gid)], gid, gctx, g_rows, cache_on=self.cache_on[gid])
             emb[str(gid)] = st2
-            ovf = ovf + o
-            hits = hits + h
-        return emb, {"overflow": ovf, "cache_hits": hits}
+            ovf[name] = ovf[name] + o
+            hits[name] = hits[name] + h
+        metrics = {"overflow": sum(ovf.values(), zero),
+                   "cache_hits": sum(hits.values(), zero)}
+        if len(self.strategy_names) > 1:
+            for n in self.strategy_names:
+                metrics[f"overflow/{n}"] = ovf[n]
+                metrics[f"cache_hits/{n}"] = hits[n]
+        return emb, metrics
 
     # --------------------------------------------------------------- flush
     def flush(self, emb: Dict[str, EmbeddingState]) -> Dict[str, EmbeddingState]:
-        """HybridHash flush (Algorithm 1 L23-26) for every cached group."""
+        """HybridHash flush (Algorithm 1 L23-26) for every *cached* group —
+        groups whose assigned strategy never reads the tier are skipped even
+        when the plan budgets rows for them."""
         out = dict(emb)
         for g in self.plan.groups:
-            if self.plan.cache_rows.get(g.gid, 0) == 0:
+            if not self.cache_on.get(g.gid, False):
                 continue
             st = out[str(g.gid)]
             w2, acc2, counts2, cache2 = pe.flush_cache(

@@ -5,6 +5,14 @@ into rows (forward) and how row gradients turn into table updates (backward).
 The engine is strategy-agnostic; everything below the ``lookup`` /
 ``apply_grads`` boundary — collectives, dedup, caching — is a strategy detail.
 
+Strategies bind to *groups*, not to the whole engine: the plan carries a
+``gid -> name`` assignment (``PicassoPlan.strategy``, compiled by the
+``repro.core.assign`` cost model or spelled out by the user) and the engine
+dispatches each packed group to its own instance. A plan can therefore
+PS-replicate its tiny tables while routing + caching the big skewed ones in
+the same step — every strategy here must stay exact under that mixing (the
+parity suite trains mixed and pure engines against each other).
+
 Concrete strategies (selected by name through the registry):
 
 ``picasso``

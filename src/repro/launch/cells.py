@@ -96,9 +96,11 @@ def _wdl_flops(cfg: WDLConfig, plan: PicassoPlan, batch: int, train: bool) -> fl
 
 def build_wdl_cell(arch: str, shape: ShapeSpec, mesh, smoke: bool = False,
                    tcfg: Optional[TrainConfig] = None, plan_kw: Optional[dict] = None,
-                   strategy: str = "picasso") -> Cell:
-    """``strategy`` selects the EmbeddingEngine lookup path by registry name
-    for the serve/retrieval cells; train cells take it from ``tcfg.strategy``."""
+                   strategy: Any = "picasso") -> Cell:
+    """``strategy`` selects the EmbeddingEngine lookup path for the
+    serve/retrieval cells — a registry name (broadcast), ``'mixed'``/
+    ``'auto'`` (per-group cost-model assignment), or a ``{gid: name}`` dict;
+    train cells take the same spec from ``tcfg.strategy``."""
     cfg = get_config(arch, smoke=smoke)
     axes = tuple(mesh.axis_names)
     world = int(mesh.devices.size)

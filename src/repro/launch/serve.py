@@ -9,6 +9,10 @@ import os
 
 
 def main():
+    # jax-importing but backend-lazy (see launch/train.py)
+    from repro.core.assign import AUTO_NAMES
+    from repro.engine.strategies import available_strategies
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="deepfm")
     ap.add_argument("--smoke", action="store_true")
@@ -19,7 +23,9 @@ def main():
     ap.add_argument("--devices", type=int, default=0)
     ap.add_argument("--mesh", default="")
     ap.add_argument("--strategy", default="picasso",
-                    help="EmbeddingEngine lookup strategy registry name")
+                    choices=available_strategies() + AUTO_NAMES,
+                    help="EmbeddingEngine lookup strategy: registry name "
+                         "(broadcast) or mixed/auto (per-group assignment)")
     args = ap.parse_args()
 
     if args.devices:
@@ -34,12 +40,13 @@ def main():
     import numpy as np
 
     from repro.configs import get_config
+    from repro.core.assign import maybe_compile
     from repro.core.packing import make_plan
     from repro.data.synthetic import make_batch
     from repro.dist.sharding import batch_specs, to_named
     from repro.launch.mesh import make_mesh
     from repro.models.wdl import WDLModel
-    from repro.serve.serve_step import make_retrieval_step, make_serve_step
+    from repro.serve.serve_step import ServeConfig, make_retrieval_step, make_serve_step
     from repro.train.train_step import init_state
 
     nd = len(jax.devices())
@@ -48,6 +55,14 @@ def main():
     mesh = make_mesh(shape, axes)
     world = int(np.prod(shape))
 
+    def serve_cfg(plan, per_dev_batch, use_cache=True):
+        # serving has no micro pipeline: the engine issues the full local
+        # batch per step, so that is the id volume the cost model sees
+        spec = maybe_compile(plan, args.strategy, per_device_batch=per_dev_batch,
+                             use_cache=use_cache,
+                             log=lambda s: print(f"[serve] {s}"))
+        return ServeConfig(strategy=spec, use_cache=use_cache)
+
     cfg = get_config(args.arch, smoke=args.smoke)
     if args.retrieval:
         plan = make_plan(cfg, world=world, per_device_batch=1, enable_cache=False,
@@ -55,8 +70,16 @@ def main():
         model = WDLModel(cfg, plan)
         state = init_state(model, plan, jax.random.PRNGKey(0), mesh=mesh, axes=axes)
         nc = (args.candidates // world) * world
+        # the candidate tower dominates retrieval lookups: size the cost
+        # model to its per-shard chunk, not the batch-of-1 user tower
+        from repro.core.features import field_index
+        item_field = next(f.name for f in cfg.fields
+                          if f.pooling == "none" and f.max_len > 1)
+        ips = plan.group(field_index(plan)[item_field].gid).ids_per_sample
+        proxy_batch = max(1, (nc // world) // max(ips, 1))
         step = make_retrieval_step(model, plan, mesh, axes, nc, top_k=10,
-                                   strategy=args.strategy)
+                                   scfg=serve_cfg(plan, proxy_batch,
+                                                  use_cache=False))
         user = make_batch(cfg, 1, np.random.default_rng(1))
         from jax.sharding import NamedSharding, PartitionSpec as P
         cand = jax.device_put(jnp.arange(nc, dtype=jnp.int32) % cfg.fields[0].vocab,
@@ -69,7 +92,7 @@ def main():
     model = WDLModel(cfg, plan)
     state = init_state(model, plan, jax.random.PRNGKey(0), mesh=mesh, axes=axes)
     serve = make_serve_step(model, plan, mesh, axes, args.batch,
-                            strategy=args.strategy)
+                            scfg=serve_cfg(plan, args.batch // world))
     rng = np.random.default_rng(0)
     lat = []
     for i in range(args.n_requests):

@@ -10,6 +10,11 @@ import os
 
 
 def main():
+    # registry import is jax-importing but backend-lazy: XLA_FLAGS set after
+    # parsing (for --devices) is still honoured at first device query.
+    from repro.core.assign import AUTO_NAMES
+    from repro.engine.strategies import available_strategies
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="deepfm")
     ap.add_argument("--smoke", action="store_true")
@@ -18,8 +23,10 @@ def main():
     ap.add_argument("--devices", type=int, default=0, help="force host device count")
     ap.add_argument("--mesh", default="", help="e.g. 4x2 (data x model)")
     ap.add_argument("--strategy", default="picasso",
-                    help="EmbeddingEngine lookup strategy registry name "
-                         "(picasso | hybrid | ps)")
+                    choices=available_strategies() + AUTO_NAMES,
+                    help="EmbeddingEngine lookup strategy: a registry name "
+                         "broadcast to every packed group, or mixed/auto for "
+                         "the per-group cost-model assignment")
     ap.add_argument("--no-cache", action="store_true")
     ap.add_argument("--no-interleave", action="store_true")
     ap.add_argument("--no-packing", action="store_true")
@@ -67,7 +74,11 @@ def main():
                      hot_bytes=1 << 24 if args.smoke else 1 << 30,
                      flush_iters=20, warmup_iters=10)
     model = WDLModel(cfg, plan)
-    tcfg = TrainConfig(strategy=args.strategy, use_cache=not args.no_cache,
+    from repro.core.assign import maybe_compile
+    # per_device_batch=None: training issues plan.microbatch ids per step
+    strategy = maybe_compile(plan, args.strategy, use_cache=not args.no_cache,
+                             log=lambda s: print(f"[train] {s}"))
+    tcfg = TrainConfig(strategy=strategy, use_cache=not args.no_cache,
                        use_interleave=not args.no_interleave,
                        lr_emb=args.lr_emb, lr_dense=args.lr_dense)
     step_fn, _ = make_train_step(model, plan, mesh, axes, args.global_batch, tcfg)

@@ -10,12 +10,16 @@ distributed top-k; pure-CTR archs (deepfm / dcn-v2) run a bulk forward over
 the candidate batch (batched-dot, never a loop).
 
 All sharding specs are built once at trace-construction time — nothing is
-recomputed per call. The lookup strategy is selectable by registry name
-(``'picasso' | 'hybrid' | 'ps'``) so serving benchmarks can A/B the paths.
+recomputed per call. The lookup strategy is selectable per packed group via
+``ServeConfig.strategy``: a registry name (``'picasso' | 'hybrid' | 'ps'``)
+broadcasts, ``'mixed'``/``'auto'`` or a ``{gid: name}`` dict serves each
+group through its own assigned path (see ``repro.core.assign``), so serving
+benchmarks can A/B pure against mixed layouts.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,16 +35,31 @@ from repro.engine import EmbeddingEngine
 from repro.models.wdl import WDLModel
 
 
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Serving-side engine knobs (mirrors TrainConfig for the sparse path)."""
+
+    # registry name, 'mixed'/'auto', {gid: name}, or a StrategyAssignment
+    strategy: Any = "picasso"
+    use_cache: bool = True
+
+
 def _mesh_world(mesh, axes):
     return int(np.prod([mesh.shape[a] for a in axes]))
 
 
 def make_serve_step(model: WDLModel, plan: PicassoPlan, mesh, axes, global_batch: int,
-                    use_cache: bool = True, strategy: str = "picasso"):
-    """Forward-only scoring: batch -> sigmoid probabilities [B, n_tasks]."""
+                    use_cache: bool = True, strategy: Any = "picasso",
+                    scfg: Optional[ServeConfig] = None):
+    """Forward-only scoring: batch -> sigmoid probabilities [B, n_tasks].
+
+    ``scfg`` bundles the engine knobs; the bare ``use_cache``/``strategy``
+    kwargs are kept as sugar and ignored when ``scfg`` is given.
+    """
+    scfg = scfg or ServeConfig(strategy=strategy, use_cache=use_cache)
     world = _mesh_world(mesh, axes)
-    engine = EmbeddingEngine(plan, axes, world, strategy=strategy,
-                             use_cache=use_cache)
+    engine = EmbeddingEngine(plan, axes, world, strategy=scfg.strategy,
+                             use_cache=scfg.use_cache)
 
     # specs are static per (model, plan): build them once, not per trace call
     especs = emb_specs(plan, axes)
@@ -64,7 +83,8 @@ def make_serve_step(model: WDLModel, plan: PicassoPlan, mesh, axes, global_batch
 
 def make_retrieval_step(model: WDLModel, plan: PicassoPlan, mesh, axes,
                         n_candidates: int, top_k: int = 100,
-                        strategy: str = "picasso"):
+                        strategy: Any = "picasso",
+                        scfg: Optional[ServeConfig] = None):
     """Two-tower retrieval: one user -> top-k of 1M candidates.
 
     The user representation is computed from the behaviour sequence
@@ -73,7 +93,12 @@ def make_retrieval_step(model: WDLModel, plan: PicassoPlan, mesh, axes,
     packed-lookup engine (bucket capacity widened to the candidate chunk, so
     no candidate is ever dropped), scores are a batched dot, and top-k is
     local-top-k -> all_gather -> global-top-k.
+
+    Retrieval always runs uncached: only ``scfg.strategy`` is honoured here;
+    ``scfg.use_cache`` is ignored (the candidate chunk has no skew head for
+    the hot tier to absorb, and retrieval plans are built cache-free).
     """
+    scfg = scfg or ServeConfig(strategy=strategy, use_cache=False)
     world = _mesh_world(mesh, axes)
     cand_local = n_candidates // world
     fidx = field_index(model.plan)
@@ -81,11 +106,11 @@ def make_retrieval_step(model: WDLModel, plan: PicassoPlan, mesh, axes,
                       if f.pooling == "none" and f.max_len > 1)
     gid = fidx[item_field].gid
 
-    engine = EmbeddingEngine(plan, axes, world, strategy=strategy,
+    engine = EmbeddingEngine(plan, axes, world, strategy=scfg.strategy,
                              use_cache=False)
-    # candidate tower: same strategy, but buckets sized for cand_local ids
+    # candidate tower: same assignment, but buckets sized for cand_local ids
     cand_engine = EmbeddingEngine(
-        plan, axes, world, strategy=strategy, use_cache=False,
+        plan, axes, world, strategy=scfg.strategy, use_cache=False,
         capacity={**plan.capacity, gid: max(plan.capacity[gid], cand_local)})
 
     especs = emb_specs(plan, axes)

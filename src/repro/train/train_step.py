@@ -12,11 +12,15 @@ One SPMD program under ``shard_map`` over the full mesh:
 
 The whole sparse path lives in ``repro.engine.EmbeddingEngine``; this module
 only owns the micro-batch pipeline, the dense optimizer, and metric psums.
-Strategies (paper §II-C / §IV baselines) are selected by registry name via
+Strategies (paper §II-C / §IV baselines) are selected per packed group via
 ``TrainConfig.strategy``:
   'picasso' — the full system (packed + interleaved + HybridHash);
   'hybrid'  — MP all_to_all per group but no HybridHash tier;
-  'ps'      — PS-style all_gather+psum lookups (the fragmentary baseline).
+  'ps'      — PS-style all_gather+psum lookups (the fragmentary baseline);
+  'mixed'/'auto' — per-group assignment from the plan (or compiled by the
+      ``repro.core.assign`` cost model), also spellable as a {gid: name}
+      dict / ``StrategyAssignment``. Mixed runs emit per-strategy-class
+      ``overflow/<name>`` / ``cache_hits/<name>`` metric breakdowns.
 Unknown names raise at trace-construction time with the registry's menu.
 """
 from __future__ import annotations
@@ -45,7 +49,10 @@ class TrainConfig:
     lr_emb: float = 0.05
     lr_dense: float = 1e-3
     optimizer: str = "adam"        # 'adam' | 'lamb'
-    strategy: str = "picasso"      # registry name: 'picasso' | 'hybrid' | 'ps'
+    # registry name ('picasso' | 'hybrid' | 'ps'), 'mixed'/'auto' (per-group
+    # assignment from the plan / cost model), {gid: name}, or a
+    # StrategyAssignment — anything repro.core.assign.resolve_assignment takes
+    strategy: Any = "picasso"
     pipeline_micro: bool = True    # D-Interleaving pipeline order
     use_cache: bool = True
     use_interleave: bool = True    # K-Interleaving waves (False: one wave)
@@ -114,8 +121,7 @@ def make_train_step(model: WDLModel, plan: PicassoPlan, mesh, axes: Tuple[str, .
 
         loss_acc = jnp.zeros(())
         g_dense_acc = jax.tree.map(jnp.zeros_like, dense)
-        ovf_acc = jnp.zeros((), jnp.int32)
-        hit_acc = jnp.zeros((), jnp.int32)
+        em_acc = {k: jnp.zeros((), jnp.int32) for k in engine.metric_keys}
 
         pending = (engine.forward(emb, packed_micro(0)), batch_micro(0))
         for i in range(n_micro):
@@ -128,8 +134,7 @@ def make_train_step(model: WDLModel, plan: PicassoPlan, mesh, axes: Tuple[str, .
             loss_acc = loss_acc + loss
             g_dense_acc = jax.tree.map(jnp.add, g_dense_acc, g_dense)
             emb, em = engine.backward(emb, ectx, g_pooled)
-            ovf_acc = ovf_acc + em["overflow"]
-            hit_acc = hit_acc + em["cache_hits"]
+            em_acc = {k: em_acc[k] + em[k] for k in em_acc}
             if not (tcfg.pipeline_micro) and i + 1 < n_micro:
                 pending = (engine.forward(emb, packed_micro(i + 1)),
                            batch_micro(i + 1))
@@ -147,28 +152,27 @@ def make_train_step(model: WDLModel, plan: PicassoPlan, mesh, axes: Tuple[str, .
 
         # ---- HybridHash flush (Algorithm 1 L23-26) -------------------------
         step2 = step + 1
-        if engine.cache_on and tcfg.flush_in_step:
+        if engine.any_cache and tcfg.flush_in_step:
             do_flush = (step2 >= plan.warmup_iters) & (step2 % plan.flush_iters == 0)
             emb = lax.cond(do_flush, engine.flush, lambda e: e, emb)
 
         new_state = {"emb": emb, "dense": dense2, "opt": opt2, "step": step2}
-        metrics = {"loss": loss_glob,
-                   "overflow": lax.psum(ovf_acc, axes),
-                   "cache_hits": lax.psum(hit_acc, axes),
-                   "step": step2}
+        metrics = {"loss": loss_glob, "step": step2,
+                   **{k: lax.psum(em_acc[k], axes) for k in engine.metric_keys}}
         return new_state, metrics
 
     # ---------------------------------------------------------------- wrap
     dense0 = jax.eval_shape(lambda k: model.init_dense(k), jax.random.PRNGKey(0))
     opt0 = jax.eval_shape(adam_init, dense0)
     sspecs = state_specs(plan, axes, dense0, opt0)
+    mspecs = {"loss": P(), "step": P(),
+              **{k: P() for k in engine.metric_keys}}
 
     def wrapped(state, batch):
         bspecs = batch_specs(batch, axes)
         f = shard_map(local_step, mesh=mesh,
                       in_specs=(sspecs, bspecs),
-                      out_specs=(sspecs, {"loss": P(), "overflow": P(),
-                                          "cache_hits": P(), "step": P()}),
+                      out_specs=(sspecs, mspecs),
                       check_vma=False)
         return f(state, batch)
 
@@ -177,12 +181,22 @@ def make_train_step(model: WDLModel, plan: PicassoPlan, mesh, axes: Tuple[str, .
 
 
 def make_flush_fn(plan: PicassoPlan, mesh, axes: Tuple[str, ...],
-                  cache_update: str = "psum"):
+                  cache_update: str = "psum", strategy: Any = None):
     """Host-scheduled HybridHash flush: jitted state -> state (called every
     ``plan.flush_iters`` steps by the trainer when flush_in_step=False).
-    Keeps the flush collectives OUT of the hot train step."""
+    Keeps the flush collectives OUT of the hot train step.
+
+    ``strategy=None`` follows the plan: a recorded per-group assignment
+    (``plan.strategy``) gates the flush exactly like the train engine —
+    groups with a budgeted-but-unused cache (e.g. PS-assigned) are skipped,
+    not clobbered with stale hot rows — and unassigned plans keep the
+    original broadcast-'picasso' gating. Pass the training spec explicitly
+    only when it was never recorded on the plan."""
     world = _mesh_world(mesh, axes)
-    engine = EmbeddingEngine(plan, axes, world, cache_update=cache_update)
+    if strategy is None:
+        strategy = "mixed" if plan.strategy else "picasso"
+    engine = EmbeddingEngine(plan, axes, world, cache_update=cache_update,
+                             strategy=strategy)
     especs = emb_specs(plan, axes)
 
     def wrapped(state):

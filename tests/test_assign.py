@@ -1,0 +1,158 @@
+"""Strategy-assignment compiler (repro.core.assign): cost-model picks,
+override path, spec normalization, and launcher-side validation."""
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.configs.base import FeatureField, InteractionSpec, WDLConfig
+from repro.core.assign import (AUTO_NAMES, StrategyAssignment, apply_assignment,
+                               compile_assignment, estimate_skew,
+                               resolve_assignment)
+from repro.core.packing import make_plan
+
+
+def _cfg(fields):
+    return WDLConfig(name="t", fields=tuple(fields), n_dense=0,
+                     interactions=(InteractionSpec("fm"),), mlp_dims=(8,))
+
+
+def _mixed_plan(world=1, per_device_batch=16, **kw):
+    """One tiny group (dim 8) + one large budgeted group (dim 16)."""
+    fields = [FeatureField("tiny", 64, 8, max_len=1, pooling="sum"),
+              FeatureField("big", 50_000, 16, max_len=1, pooling="sum")]
+    kw.setdefault("hot_bytes", 1 << 14)
+    return make_plan(_cfg(fields), world=world,
+                     per_device_batch=per_device_batch, **kw)
+
+
+# ------------------------------------------------------------- cost model
+def test_cost_model_mixes_ps_picasso_hybrid():
+    plan = _mixed_plan()
+    asg = compile_assignment(plan)
+    by_name = {plan.group(g).tables[0].name: s for g, s in asg.strategy.items()}
+    assert by_name["tiny"] == "ps"       # replicable: under routing overhead
+    assert by_name["big"] == "picasso"   # large + budgeted + skewed
+
+    # no cache budget -> the big group degrades to the plain routed path
+    flat = compile_assignment(_mixed_plan(enable_cache=False))
+    by_name = {plan.group(g).tables[0].name: s for g, s in flat.strategy.items()}
+    assert by_name == {"tiny": "ps", "big": "hybrid"}
+
+
+def test_cost_model_reports_scores_and_reasons():
+    asg = compile_assignment(_mixed_plan())
+    for gid, s in asg.scores.items():
+        assert s.choice == asg.strategy[gid]
+        assert {"ps", "hybrid", "picasso"} == set(s.costs)
+        assert s.reason
+    assert "ps" in asg.describe() and "picasso" in asg.describe()
+
+
+def test_measured_stats_override_the_prior():
+    plan = _mixed_plan()
+    gid_big = next(g.gid for g in plan.groups if g.tables[0].name == "big")
+    rows = plan.group(gid_big).rows
+    # perfectly flat counts on a table whose cache covers ~1/8 of the rows
+    # still clear SKEW_MIN; concentrate everything on one row to test the
+    # measured path properly: skew -> 1.0
+    hot = np.zeros(rows)
+    hot[3] = 100.0
+    asg = compile_assignment(plan, stats={gid_big: hot})
+    assert asg.scores[gid_big].skew == pytest.approx(1.0)
+    assert asg.strategy[gid_big] == "picasso"
+
+
+def test_estimate_skew():
+    plan = _mixed_plan()
+    g = plan.groups[0]
+    assert estimate_skew(g, 0) == 0.0                       # no budget, no tier
+    assert estimate_skew(g, 8) > 0.0                        # structural prior
+    counts = np.r_[np.full(8, 10.0), np.zeros(56)]
+    assert estimate_skew(g, 8, counts) == pytest.approx(1.0)
+    assert estimate_skew(g, 4, counts) == pytest.approx(0.5)
+
+
+# -------------------------------------------------------------- overrides
+def test_overrides_by_gid_and_table_glob():
+    plan = _mixed_plan()
+    asg = compile_assignment(plan, overrides={"big": "hybrid", 0: "ps"})
+    by_name = {plan.group(g).tables[0].name: s for g, s in asg.strategy.items()}
+    assert by_name["big"] == "hybrid"
+    asg2 = compile_assignment(plan, overrides={"*i*": "hybrid"})  # both match
+    assert set(asg2.strategy.values()) == {"hybrid"}
+
+
+def test_overrides_fail_fast():
+    plan = _mixed_plan()
+    with pytest.raises(ValueError, match="matches no table"):
+        compile_assignment(plan, overrides={"nope*": "ps"})
+    with pytest.raises(ValueError, match="unknown lookup strategy"):
+        compile_assignment(plan, overrides={"big": "not-a-strategy"})
+    with pytest.raises(KeyError):
+        compile_assignment(plan, overrides={99: "ps"})
+
+
+# ---------------------------------------------------------- normalization
+def test_resolve_broadcast_and_auto():
+    plan = _mixed_plan()
+    gids = {g.gid for g in plan.groups}
+    assert resolve_assignment(plan, "ps") == {g: "ps" for g in gids}
+    assert plan.strategy == {}  # broadcast never records
+    for name in AUTO_NAMES:
+        auto = resolve_assignment(plan, name)
+        assert set(auto) == gids  # compiled on the fly (plan.strategy empty)
+        # ... and recorded, so every later engine/flush sees the same mixing
+        assert plan.strategy == auto
+    # a recorded plan assignment wins over recompilation
+    apply_assignment(plan, {g: "hybrid" for g in gids})
+    assert resolve_assignment(plan, "mixed") == {g: "hybrid" for g in gids}
+
+
+def test_resolve_auto_honours_use_cache():
+    """use_cache=False must reach the fallback compile: no picasso picks
+    (and no hot-tier credit) when the engine disables the tier."""
+    plan = _mixed_plan()
+    auto = resolve_assignment(plan, "mixed", use_cache=False)
+    assert "picasso" not in set(auto.values())
+    assert compile_assignment(_mixed_plan(), enable_cache=False).strategy == auto
+
+
+def test_resolve_validates_coverage_and_names():
+    plan = _mixed_plan()
+    gids = sorted(g.gid for g in plan.groups)
+    with pytest.raises(ValueError, match="unknown lookup strategy"):
+        resolve_assignment(plan, "typo")
+    with pytest.raises(ValueError, match="missing gids"):
+        resolve_assignment(plan, {gids[0]: "ps"})
+    with pytest.raises(ValueError, match="unknown gids"):
+        resolve_assignment(plan, {**{g: "ps" for g in gids}, 99: "ps"})
+    with pytest.raises(ValueError, match="unknown lookup strategy"):
+        resolve_assignment(plan, {g: "typo" for g in gids})
+    asg = StrategyAssignment(strategy={g: "ps" for g in gids})
+    assert resolve_assignment(plan, asg) == {g: "ps" for g in gids}
+
+
+def test_apply_assignment_records_on_plan():
+    plan = _mixed_plan()
+    asg = compile_assignment(plan)
+    assert apply_assignment(plan, asg) is plan
+    assert plan.strategy == asg.strategy
+    with pytest.raises(ValueError, match="unknown lookup strategy"):
+        apply_assignment(plan, {0: "typo"})
+
+
+# ------------------------------------------------------------- launch CLI
+def test_launch_cli_rejects_unknown_strategy():
+    """--strategy is validated at argparse time (choices=), so typos exit 2
+    before any engine construction; mixed/auto are accepted spellings."""
+    root = Path(__file__).resolve().parent.parent
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--strategy", "nope"],
+        capture_output=True, text=True, timeout=300,
+        env={"PYTHONPATH": str(root / "src"), "PATH": "/usr/bin:/bin"},
+        cwd=str(root))
+    assert out.returncode == 2
+    assert "invalid choice" in out.stderr and "mixed" in out.stderr

@@ -9,9 +9,9 @@ except ImportError:
     from hypothesis_fallback import given, settings, st
 
 from repro.configs.base import FeatureField, InteractionSpec, WDLConfig
-from repro.core.packing import (PackedGroup, build_tables, calc_vparam, make_plan,
-                                plan_capacity, plan_interleave, plan_microbatch,
-                                plan_packing)
+from repro.core.packing import (PackedGroup, PicassoPlan, build_tables, calc_vparam,
+                                make_plan, plan_capacity, plan_interleave,
+                                plan_microbatch, plan_packing)
 
 
 def _cfg(fields):
@@ -113,6 +113,28 @@ def test_plan_properties(specs, world):
         assert plan.capacity[g.gid] >= 4
     flat = sorted(g for wave in plan.interleave for g in wave)
     assert flat == sorted(g.gid for g in plan.groups)
+
+
+def test_group_resolves_by_gid_not_list_index():
+    """group(gid) must resolve by the group's actual gid: plans sliced per
+    tower (or re-planned) hold non-contiguous gids, where positional
+    indexing silently returns the wrong group."""
+    fields = [FeatureField("a", 100, 8), FeatureField("b", 300, 16)]
+    plan = make_plan(_cfg(fields), world=1, per_device_batch=4)
+    assert sorted(g.gid for g in plan.groups) == [0, 1]
+    # non-contiguous: drop gid 0, keep gid 1 at list position 0
+    sub = PicassoPlan(groups=[g for g in plan.groups if g.gid == 1],
+                      world=plan.world, capacity=dict(plan.capacity),
+                      interleave=[[1]], microbatch=plan.microbatch,
+                      cache_rows=dict(plan.cache_rows))
+    assert sub.group(1).gid == 1
+    with pytest.raises(KeyError, match="gid=0"):
+        sub.group(0)
+
+
+def test_plan_strategy_field_defaults_empty():
+    plan = make_plan(_cfg([FeatureField("a", 100, 8)]), world=1, per_device_batch=4)
+    assert plan.strategy == {}  # unassigned until compiled / broadcast
 
 
 def test_calc_vparam_monotone():
