@@ -2,11 +2,12 @@
 (DLRM / DeepFM / DIN / DCN-v2) under the EmbeddingEngine's registry
 strategies — 'picasso' vs the 'hybrid' (MP, no cache) and 'ps' baselines,
 plus 'mixed' (the repro.core.assign cost model picking a strategy per packed
-group). CPU-scaled smoke configs; the *ratio* is the reproduced quantity.
+group) and 'picasso_l2' (the L2 host-memory tier behind the hot tier).
+CPU-scaled smoke configs; the *ratio* is the reproduced quantity.
 
 ``--smoke`` runs one model at a reduced batch with fewer timing iters — the
 fast CI pass wired into scripts/ci.sh (and the only place the auto-assignment
-path is executed on every CI run)."""
+and two-tier cache paths are executed on every CI run)."""
 import argparse
 
 from repro.configs import get_config
@@ -39,10 +40,16 @@ def run(smoke: bool = False):
         # per-group cost-model assignment (tiny tables PS, big skewed ones
         # routed + cached); the engine compiles it from the plan on the fly
         mix = bench_train_ips(cfg, gb, TrainConfig(strategy="mixed"), iters=iters)
+        # hierarchical parameter cache: L2 host tier (4x the hot-tier bytes)
+        # behind the hot tier, exercised end-to-end incl. the two-tier flush
+        l2 = bench_train_ips(cfg, gb, TrainConfig(strategy="picasso_l2"),
+                             iters=iters, l2_bytes=1 << 18)
         speedup = ps["us_per_call"] / pic["us_per_call"]
         emit(f"throughput/{name}/picasso", pic["us_per_call"], f"ips={pic['ips']:.0f}")
         emit(f"throughput/{name}/ps", ps["us_per_call"], f"ips={ps['ips']:.0f}")
         emit(f"throughput/{name}/mixed", mix["us_per_call"], f"ips={mix['ips']:.0f}")
+        emit(f"throughput/{name}/picasso_l2", l2["us_per_call"],
+             f"ips={l2['ips']:.0f}")
         emit(f"throughput/{name}/speedup", 0.0, f"x{speedup:.2f}")
         if not smoke:
             # paper §II-C intermediate baseline: MP routing, but neither

@@ -1,0 +1,102 @@
+#!/usr/bin/env python
+"""Docs drift check (wired into scripts/ci.sh).
+
+Fails CI when the user-facing docs fall out of sync with the code:
+
+1. every ``LookupStrategy`` registry name (and the ``mixed``/``auto``
+   spellings) must appear in both ``README.md`` and
+   ``docs/architecture.md`` — a new ``@register_strategy`` class cannot
+   ship undocumented;
+2. every ``python -m <module> ...`` command in README code fences must be
+   ``--help``-valid: the module's ``--help`` exits 0 and mentions every
+   ``--flag`` the quickstart uses, so the quickstart can never advertise a
+   flag that argparse would reject.
+
+Runs with no arguments from anywhere inside the repo.
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+FENCE_RE = re.compile(r"```(?:\w*)\n(.*?)```", re.DOTALL)
+CMD_RE = re.compile(r"python\s+-m\s+([\w.]+)((?:\s+\S+)*)")
+
+
+def fail(msg: str) -> None:
+    print(f"check_docs: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def doc_commands(text: str):
+    """(module, [flags]) for every ``python -m`` line in a code fence."""
+    for fence in FENCE_RE.findall(text):
+        fence = fence.replace("\\\n", " ")  # join shell line continuations
+        for line in fence.splitlines():
+            m = CMD_RE.search(line)
+            if not m:
+                continue
+            module = m.group(1)
+            flags = [t.split("=")[0] for t in m.group(2).split()
+                     if t.startswith("--")]
+            yield module, flags
+
+
+def main() -> None:
+    from repro.engine import AUTO_NAMES, available_strategies
+
+    names = available_strategies() + AUTO_NAMES
+    docs = {p: (ROOT / p).read_text()
+            for p in ("README.md", "docs/architecture.md")
+            if (ROOT / p).exists()}
+    for p in ("README.md", "docs/architecture.md"):
+        if p not in docs:
+            fail(f"{p} is missing")
+    for p, text in docs.items():
+        missing = [n for n in names if n not in text]
+        if missing:
+            fail(f"{p} does not mention registry strategies: {missing}")
+    print(f"check_docs: all {len(names)} strategy names documented in "
+          f"{', '.join(docs)}")
+
+    help_cache: dict = {}
+    checked = 0
+    for module, flags in doc_commands(docs["README.md"]):
+        if not module.startswith(("repro.", "benchmarks.", "pytest")):
+            continue
+        if module not in help_cache:
+            out = subprocess.run(
+                [sys.executable, "-m", module, "--help"],
+                capture_output=True, text=True, timeout=600,
+                cwd=str(ROOT),
+                # inherit the environment: --help must be validated under the
+                # same env (proxies, JAX_PLATFORMS, caches) the documented
+                # command actually runs in
+                env={**os.environ,
+                     "PYTHONPATH": os.pathsep.join(
+                         [str(ROOT / "src")]
+                         + ([os.environ["PYTHONPATH"]]
+                            if os.environ.get("PYTHONPATH") else []))})
+            if out.returncode != 0:
+                fail(f"`python -m {module} --help` exited "
+                     f"{out.returncode}:\n{out.stderr[-2000:]}")
+            help_cache[module] = out.stdout + out.stderr
+        for flag in flags:
+            if flag not in help_cache[module]:
+                fail(f"README quickstart uses {flag} but "
+                     f"`python -m {module} --help` does not list it")
+        checked += 1
+    if checked == 0:
+        fail("README.md has no `python -m ...` quickstart commands to validate")
+    print(f"check_docs: {checked} README quickstart commands --help-validated "
+          f"({len(help_cache)} modules)")
+
+
+if __name__ == "__main__":
+    main()

@@ -28,10 +28,18 @@ echo "== tier-1: pytest =="
 python -m pytest -x -q
 
 echo "== tier-1: benchmark smoke =="
-# the smoke pass must include the 'mixed' per-group assignment row so the
-# repro.core.assign cost-model path is executed on every CI run
+# the smoke pass must include the 'mixed' per-group assignment row (so the
+# repro.core.assign cost-model path is executed on every CI run) and the
+# 'picasso_l2' row (so the two-tier L1/L2 cache path is executed end-to-end)
 bench_out=$(python -m benchmarks.bench_throughput --smoke | tee /dev/stderr)
 echo "$bench_out" | grep -q "/mixed" \
     || { echo "ci.sh: bench smoke missing the 'mixed' strategy row" >&2; exit 1; }
+echo "$bench_out" | grep -q "/picasso_l2" \
+    || { echo "ci.sh: bench smoke missing the 'picasso_l2' strategy row" >&2; exit 1; }
+
+echo "== tier-1: docs sync =="
+# every registry strategy must be documented in README.md +
+# docs/architecture.md, and README quickstart commands must be --help-valid
+python scripts/check_docs.py
 
 echo "== ci.sh: all green =="

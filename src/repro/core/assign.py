@@ -23,10 +23,22 @@ volume under every registered strategy and emits a ``StrategyAssignment``:
 ``hybrid``
     MP routing, no cache — the middle ground when a group is too big to
     replicate but too flat (or unbudgeted) to cache.
+``picasso_l2``
+    The picasso path with an L2 host-memory tier behind the hot tier
+    (HugeCTR-style hierarchical parameter cache). Scored only for groups the
+    plan gives an ``l2_rows`` budget: the candidate wins over plain picasso
+    when the frequency mass ranked just below the L1 set (the working set
+    that *overflows* the device-resident budget) clears the same
+    profitability gate as the hot tier itself — a host read is charged at
+    ``L2_HOST_FACTOR`` of a network element, so L2 pays off exactly where
+    skew extends past the constricted L1.
 
 The engine consumes the result through ``resolve_assignment``, which also
-normalizes the user-facing spellings: a single registry name broadcasts, a
-``{gid_or_table_glob: name}`` dict overrides, ``'mixed'``/``'auto'`` compiles.
+normalizes the user-facing spellings (the **assignment resolution order**):
+an explicit ``StrategyAssignment`` / ``{gid: name}`` dict is taken as-is
+(validated for exact coverage), ``'mixed'``/``'auto'`` uses the plan's
+recorded assignment or compiles one and records it, and any other single
+registry name broadcasts.
 """
 from __future__ import annotations
 
@@ -55,6 +67,11 @@ PS_MAX_ROWS = 8192
 # Minimum hot-tier hit ratio for the cache's psum/flush machinery to pay
 # for itself; flatter groups stay on the plain routed path.
 SKEW_MIN = 0.05
+
+# Cost of serving one row element from the L2 host tier, relative to moving
+# it over the network: a pinned-host DMA is cheaper than an all_to_all round
+# trip but not free (PCIe/DMA bandwidth + the probe).
+L2_HOST_FACTOR = 0.5
 
 
 @dataclass(frozen=True)
@@ -101,8 +118,17 @@ def _validate_name(name: str) -> str:
     return name
 
 
+def _ranked(counts: Optional[np.ndarray], ranked: bool) -> Optional[np.ndarray]:
+    """Counts as a descending frequency ranking (sorted once per caller)."""
+    if counts is None:
+        return None
+    c = np.asarray(counts, np.float64).reshape(-1)
+    return c if ranked else np.sort(c)[::-1]
+
+
 def estimate_skew(group: PackedGroup, cache_rows: int,
-                  counts: Optional[np.ndarray] = None) -> float:
+                  counts: Optional[np.ndarray] = None, *,
+                  ranked: bool = False) -> float:
     """Expected hot-tier hit ratio for ``group`` given ``cache_rows`` slots.
 
     With measured FCounter ``counts`` (the engine's per-row frequency stats,
@@ -110,25 +136,60 @@ def estimate_skew(group: PackedGroup, cache_rows: int,
     lookup share of the ``cache_rows`` hottest rows. Without stats we fall
     back to the paper's warm-skew prior for budgeted groups — except when
     the tier covers the whole table, where every lookup hits.
+    ``ranked=True`` promises ``counts`` is already sorted descending (so a
+    caller scoring several tiers sorts the multi-million-row array once).
     """
     cache_rows = min(int(cache_rows), group.rows)
     if cache_rows <= 0:
         return 0.0
-    if counts is not None:
-        c = np.asarray(counts, np.float64).reshape(-1)
+    c = _ranked(counts, ranked)
+    if c is not None:
         total = float(c.sum())
         if total > 0:
-            return float(np.sort(c)[::-1][:cache_rows].sum() / total)
+            return float(c[:cache_rows].sum() / total)
     return 1.0 if cache_rows >= group.rows else DEFAULT_HIT_RATIO
+
+
+def estimate_l2_gain(group: PackedGroup, cache_rows: int, l2_rows: int,
+                     counts: Optional[np.ndarray] = None, *,
+                     ranked: bool = False) -> float:
+    """Extra hit ratio an L2 tier of ``l2_rows`` slots adds behind an L1 of
+    ``cache_rows`` slots.
+
+    With measured FCounter ``counts`` this is exact: the lookup share of the
+    rows frequency-ranked in ``[cache_rows, cache_rows + l2_rows)`` — the
+    band the two-tier flush actually loads into L2 (``ranked=True`` as in
+    ``estimate_skew``). Without stats: full coverage (L1+L2 >= the whole
+    table) absorbs everything L1 misses; else the warm-skew prior scaled by
+    how much the host tier out-sizes the (constricted) device tier — an L2
+    smaller than L1 adds proportionally less, matching the zipf tail
+    flattening past the head.
+    """
+    cache_rows = min(int(cache_rows), group.rows)
+    l2_rows = min(int(l2_rows), group.rows - cache_rows)
+    if l2_rows <= 0:
+        return 0.0
+    c = _ranked(counts, ranked)
+    if c is not None:
+        total = float(c.sum())
+        if total > 0:
+            return float(c[cache_rows:cache_rows + l2_rows].sum() / total)
+    l1 = estimate_skew(group, cache_rows)
+    if cache_rows + l2_rows >= group.rows:
+        return 1.0 - l1
+    return (1.0 - l1) * DEFAULT_HIT_RATIO * min(
+        1.0, l2_rows / max(cache_rows, 1))
 
 
 def _score_group(group: PackedGroup, world: int, ids_per_shard: int,
                  cache_rows: int, skew: float, *,
+                 l2_rows: int = 0, l2_gain: float = 0.0,
                  ps_max_rows: int = PS_MAX_ROWS,
                  skew_min: float = SKEW_MIN) -> GroupScore:
     """Score one group: comm-volume estimates plus the replicability /
     skew gates that pick ps for tiny groups, picasso for large skewed
-    ones, and hybrid for the middle."""
+    ones, hybrid for the middle — and picasso_l2 where an L2 budget
+    captures working set that overflows the hot tier."""
     n, d = float(max(ids_per_shard, 1)), float(group.dim)
     # ps: all_gather n ids from every shard, psum the [world*n, D] partials.
     ps = world * n * (d + 1.0)
@@ -139,10 +200,28 @@ def _score_group(group: PackedGroup, world: int, ids_per_shard: int,
     # over flush_iters (psum mode) or rides a small second a2a (stale mode).
     picasso = 2.0 * n * (1.0 - skew) * (1.0 + d) + ROUTE_OVERHEAD_ELEMS
     costs = {"ps": ps, "hybrid": hybrid, "picasso": picasso}
+    if l2_rows > 0:
+        # picasso_l2: L2 hits leave the network entirely but pay a host-DMA
+        # read charged at L2_HOST_FACTOR of a network element, plus the
+        # tier's exact-update maintenance in 'psum' mode — the cheaper of
+        # the dense tier psum (O(H2*D)) and the gathered hit-grad update
+        # (O((world-1)*n*D)); see packed_embedding.apply_sparse_grads_l2.
+        l2_maint = min((world - 1) * n * (1.0 + d), float(l2_rows) * d)
+        costs["picasso_l2"] = (
+            2.0 * n * (1.0 - skew - l2_gain) * (1.0 + d)
+            + L2_HOST_FACTOR * 2.0 * n * l2_gain * (1.0 + d)
+            + l2_maint
+            + ROUTE_OVERHEAD_ELEMS)
     if group.rows <= ps_max_rows and ps <= hybrid:
         choice, reason = "ps", "tiny/replicable: PS transfer under routing overhead"
     elif cache_rows > 0 and skew >= skew_min:
-        choice, reason = "picasso", f"skew head (hit~{skew:.2f}) pays for the hot tier"
+        if (l2_rows > 0 and l2_gain >= skew_min
+                and costs["picasso_l2"] <= costs["picasso"]):
+            choice = "picasso_l2"
+            reason = (f"working set overflows L1 (hit~{skew:.2f}); host tier "
+                      f"absorbs ~{l2_gain:.2f} more")
+        else:
+            choice, reason = "picasso", f"skew head (hit~{skew:.2f}) pays for the hot tier"
     else:
         choice, reason = "hybrid", "too big to replicate, too flat to cache"
     return GroupScore(gid=group.gid, vparam=group.vparam,
@@ -189,6 +268,9 @@ def compile_assignment(
     Parameters
     ----------
     plan: the planner output; ``plan.cache_rows`` feeds the hot-tier terms,
+        ``plan.l2_rows`` the host-tier (picasso_l2) candidate — groups
+        without an L2 budget are never offered that candidate, so plans
+        built with ``l2_bytes=0`` score exactly as before — and
         ``plan.microbatch`` sizes the default per-step id volume.
     stats: optional gid -> FCounter counts array (measured skew); groups
         without stats use the structural prior.
@@ -210,9 +292,15 @@ def compile_assignment(
     scores: Dict[int, GroupScore] = {}
     for g in plan.groups:
         cache_rows = plan.cache_rows.get(g.gid, 0) if enable_cache else 0
-        counts = stats.get(g.gid) if stats else None
-        skew = estimate_skew(g, cache_rows, counts)
+        # the L2 tier sits behind L1, so a disabled hot tier disables it too
+        l2_rows = plan.l2_rows.get(g.gid, 0) if (enable_cache and cache_rows) else 0
+        # rank the (potentially multi-million-row) stats once per group,
+        # shared by both tier estimators
+        counts = _ranked(stats.get(g.gid) if stats else None, False)
+        skew = estimate_skew(g, cache_rows, counts, ranked=True)
+        l2_gain = estimate_l2_gain(g, cache_rows, l2_rows, counts, ranked=True)
         sc = _score_group(g, world, batch * g.ids_per_sample, cache_rows, skew,
+                          l2_rows=l2_rows, l2_gain=l2_gain,
                           ps_max_rows=ps_max_rows, skew_min=skew_min)
         strategy[g.gid] = sc.choice
         scores[g.gid] = sc

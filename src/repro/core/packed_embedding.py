@@ -99,7 +99,12 @@ def _a2a(x: jnp.ndarray, axes: Axes) -> jnp.ndarray:
 
 
 class LookupCtx(NamedTuple):
-    """Everything the backward/statistics passes need (all static shapes)."""
+    """Everything the backward/statistics passes need (all static shapes).
+
+    ``l2_hit``/``l2_slot`` are ``None`` unless the lookup probed an L2 host
+    tier (``mp_lookup(..., l2_keys=, l2_rows=)``); ``None`` collapses to an
+    empty pytree node, so plain-picasso contexts keep their PR-2 structure.
+    """
 
     uniq: jnp.ndarray
     inv: jnp.ndarray
@@ -110,6 +115,8 @@ class LookupCtx(NamedTuple):
     recv_ids: jnp.ndarray   # [world, cap] ids this shard served (owner side)
     recv_local: jnp.ndarray  # [world, cap] local row idx (clamped)
     recv_valid: jnp.ndarray  # [world, cap]
+    l2_hit: Optional[jnp.ndarray] = None   # [n] served by L2 host tier
+    l2_slot: Optional[jnp.ndarray] = None  # [n] clamped position in l2_keys
 
 
 def cache_probe(uniq: jnp.ndarray, uvalid: jnp.ndarray,
@@ -132,15 +139,33 @@ def mp_lookup(
     capacity: int,
     hot_keys: Optional[jnp.ndarray] = None,   # [H] replicated, sorted
     hot_rows: Optional[jnp.ndarray] = None,   # [H, D] replicated
+    l2_keys: Optional[jnp.ndarray] = None,    # [H2] L2 host tier, sorted
+    l2_rows: Optional[jnp.ndarray] = None,    # [H2, D] L2 host tier
 ) -> Tuple[jnp.ndarray, LookupCtx]:
-    """Forward packed lookup. Returns unique rows [n, D] + routing context."""
+    """Forward packed lookup. Returns unique rows [n, D] + routing context.
+
+    Probe order is strictly tiered: L1 (``hot_keys``, device-resident hot
+    tier) first, then — only for L1 misses — the L2 host tier (``l2_keys``),
+    and only the remaining misses ride the all_to_all Shuffle. The two tiers
+    are disjoint by flush construction (top-H1 / next-H2 by frequency), and
+    the L2 probe additionally masks out L1 hits so an overlapping user-built
+    tier can never serve one id twice. With ``l2_keys=None`` (no L2 tier)
+    the math — including every intermediate — is bitwise-identical to the
+    PR-2 path, and ``ctx.l2_hit`` stays ``None``.
+    """
     rps, d = table_shard.shape
     rows_padded = rps * world
     n = ids.shape[0]
 
     u = fixed_unique(ids, sentinel=rows_padded)
     hit, cache_slot = cache_probe(u.uniq, u.uvalid, hot_keys)
-    miss = u.uvalid & ~hit
+    use_l2 = l2_keys is not None and l2_keys.shape[0] > 0
+    if use_l2:
+        l2_hit, l2_slot = cache_probe(u.uniq, u.uvalid & ~hit, l2_keys)
+        miss = u.uvalid & ~hit & ~l2_hit
+    else:
+        l2_hit, l2_slot = None, None
+        miss = u.uvalid & ~hit
     r = partition(u.uniq, miss, rps, world, capacity)
 
     # ---- Shuffle: route miss ids to owners --------------------------------
@@ -162,6 +187,9 @@ def mp_lookup(
     take_idx = jnp.minimum(r.send_slot, world * capacity - 1)
     miss_rows = jnp.take(back, take_idx, axis=0) * r.kept[:, None].astype(served.dtype)
 
+    if use_l2:
+        l2 = jnp.take(l2_rows, l2_slot, axis=0)
+        miss_rows = jnp.where(l2_hit[:, None], l2.astype(miss_rows.dtype), miss_rows)
     if hot_rows is not None and hot_rows.shape[0] > 0:
         hot = jnp.take(hot_rows, cache_slot, axis=0)
         rows_u = jnp.where(hit[:, None], hot.astype(miss_rows.dtype), miss_rows)
@@ -171,6 +199,7 @@ def mp_lookup(
     ctx = LookupCtx(
         uniq=u.uniq, inv=u.inv, uvalid=u.uvalid, hit=hit, cache_slot=cache_slot,
         routing=r, recv_ids=recv_ids, recv_local=recv_local, recv_valid=recv_valid,
+        l2_hit=l2_hit, l2_slot=l2_slot,
     )
     return rows_u, ctx
 
@@ -252,50 +281,154 @@ def apply_sparse_grads(
               flushes (paper Algorithm 1 semantics: bounded read staleness of
               flush_iters, master always exact).
     """
-    d = w_shard.shape[1]
-    rps = w_shard.shape[0]
-    cap = ctx.recv_ids.shape[1]  # static block shape
-
     # ---- miss gradients: transposed Shuffle --------------------------------
-    send_g = jnp.zeros((world * cap, d), g_u.dtype)
-    send_g = send_g.at[ctx.routing.send_slot].set(
-        g_u * ctx.routing.kept[:, None].astype(g_u.dtype), mode="drop")
-    recv_g = _a2a(send_g.reshape(world, cap, d), axes).reshape(world * cap, d)
-    w_shard, acc_shard = _dedup_apply(
-        w_shard, acc_shard,
-        ctx.recv_local.reshape(-1), recv_g, ctx.recv_valid.reshape(-1), lr, eps)
+    w_shard, acc_shard = _apply_miss_grads(w_shard, acc_shard, ctx, g_u,
+                                           axes, world, lr, eps)
 
     if cache is None or cache.keys.shape[0] == 0:
         return w_shard, acc_shard, cache
 
     if cache_update == "stale":
         # ---- hit gradients: route to owners (cache stays read-only) --------
-        r = partition(ctx.uniq, ctx.hit, rps, world, cap)
-        send_ids = jnp.full((world * cap,), -1, jnp.int32)
-        send_ids = send_ids.at[r.send_slot].set(ctx.uniq.astype(jnp.int32), mode="drop")
-        send_hg = jnp.zeros((world * cap, d), g_u.dtype)
-        send_hg = send_hg.at[r.send_slot].set(
-            g_u * r.kept[:, None].astype(g_u.dtype), mode="drop")
-        recv_ids = _a2a(send_ids.reshape(world, cap), axes).reshape(-1)
-        recv_hg = _a2a(send_hg.reshape(world, cap, d), axes).reshape(world * cap, d)
-        my = lax.axis_index(axes).astype(jnp.int32)
-        local = jnp.clip(recv_ids - my * rps, 0, rps - 1)
-        w_shard, acc_shard = _dedup_apply(
-            w_shard, acc_shard, local, recv_hg, recv_ids >= 0, lr, eps)
+        w_shard, acc_shard = _route_hit_grads(w_shard, acc_shard, ctx, ctx.hit,
+                                              g_u, axes, world, lr, eps)
         return w_shard, acc_shard, cache
 
     # ---- 'psum': hit grads into the replicated hot tier --------------------
-    h = cache.keys.shape[0]
-    g_hit = g_u * ctx.hit[:, None].astype(g_u.dtype)
-    g_hot = jnp.zeros((h, d), g_u.dtype).at[ctx.cache_slot].add(g_hit)
-    g_hot = lax.psum(g_hot, axes)
+    cache = _psum_into_tier(cache, ctx.hit, ctx.cache_slot, g_u, axes, lr, eps)
+    return w_shard, acc_shard, cache
+
+
+def _apply_miss_grads(w_shard, acc_shard, ctx: LookupCtx, g_u, axes: Axes,
+                      world: int, lr: float, eps: float):
+    """Transposed Shuffle: route miss grads to owner shards and apply."""
+    d = w_shard.shape[1]
+    cap = ctx.recv_ids.shape[1]  # static block shape
+    send_g = jnp.zeros((world * cap, d), g_u.dtype)
+    send_g = send_g.at[ctx.routing.send_slot].set(
+        g_u * ctx.routing.kept[:, None].astype(g_u.dtype), mode="drop")
+    recv_g = _a2a(send_g.reshape(world, cap, d), axes).reshape(world * cap, d)
+    return _dedup_apply(
+        w_shard, acc_shard,
+        ctx.recv_local.reshape(-1), recv_g, ctx.recv_valid.reshape(-1), lr, eps)
+
+
+def _route_hit_grads(w_shard, acc_shard, ctx: LookupCtx, hit_mask, g_u,
+                     axes: Axes, world: int, lr: float, eps: float):
+    """'stale' mode: grads of tier-served ids ride a second small all_to_all
+    to the owner shards; the tier itself stays read-only between flushes."""
+    rps, d = w_shard.shape
+    cap = ctx.recv_ids.shape[1]
+    r = partition(ctx.uniq, hit_mask, rps, world, cap)
+    send_ids = jnp.full((world * cap,), -1, jnp.int32)
+    send_ids = send_ids.at[r.send_slot].set(ctx.uniq.astype(jnp.int32), mode="drop")
+    send_hg = jnp.zeros((world * cap, d), g_u.dtype)
+    send_hg = send_hg.at[r.send_slot].set(
+        g_u * r.kept[:, None].astype(g_u.dtype), mode="drop")
+    recv_ids = _a2a(send_ids.reshape(world, cap), axes).reshape(-1)
+    recv_hg = _a2a(send_hg.reshape(world, cap, d), axes).reshape(world * cap, d)
+    my = lax.axis_index(axes).astype(jnp.int32)
+    local = jnp.clip(recv_ids - my * rps, 0, rps - 1)
+    return _dedup_apply(
+        w_shard, acc_shard, local, recv_hg, recv_ids >= 0, lr, eps)
+
+
+def _tier_adagrad(tier: CacheState, g_hot: jnp.ndarray, lr: float,
+                  eps: float) -> CacheState:
+    """Row-wise adagrad on a replicated tier from a replica-consistent
+    per-slot gradient (rows without gradient stay bit-identical)."""
     gsq = jnp.mean(jnp.square(g_hot), axis=-1, keepdims=True)
     touched = (jnp.abs(g_hot).max(axis=-1, keepdims=True) > 0).astype(gsq.dtype)
-    acc_new = cache.acc + gsq * touched
+    acc_new = tier.acc + gsq * touched
     upd = lr * g_hot / jnp.sqrt(acc_new + eps)
-    cache = CacheState(cache.keys, cache.rows - upd.astype(cache.rows.dtype),
-                       acc_new.astype(cache.acc.dtype))
-    return w_shard, acc_shard, cache
+    return CacheState(tier.keys, tier.rows - upd.astype(tier.rows.dtype),
+                      acc_new.astype(tier.acc.dtype))
+
+
+def _psum_into_tier(tier: CacheState, hit_mask, slot, g_u, axes: Axes,
+                    lr: float, eps: float) -> CacheState:
+    """'psum' mode: all-reduce tier-hit grads and adagrad the replicated tier
+    in place (replicas stay bit-identical; the tier is authoritative for its
+    rows between flushes). Comm is O(H*D) per step — right for the small
+    device-resident hot tier."""
+    h = tier.keys.shape[0]
+    d = g_u.shape[1]
+    g_hit = g_u * hit_mask[:, None].astype(g_u.dtype)
+    g_hot = jnp.zeros((h, d), g_u.dtype).at[slot].add(g_hit)
+    g_hot = lax.psum(g_hot, axes)
+    return _tier_adagrad(tier, g_hot, lr, eps)
+
+
+def _allgather_into_tier(tier: CacheState, hit_mask, slot, g_u, axes: Axes,
+                         lr: float, eps: float) -> CacheState:
+    """Exact replicated-tier update with comm independent of the tier size:
+    all_gather every shard's (masked) hit grads + slots, scatter-add them
+    locally on each replica. The gathered order is identical everywhere, so
+    replicas stay consistent like the psum path, but the wire cost is
+    O(world * n * D) instead of O(H * D) — the right trade for the L2 host
+    tier, whose H2 is 10-100x the hot tier while n stays batch-sized."""
+    h = tier.keys.shape[0]
+    d = g_u.shape[1]
+    g_hit = g_u * hit_mask[:, None].astype(g_u.dtype)
+    slots = jnp.where(hit_mask, slot, h).astype(jnp.int32)  # h = drop
+    all_slots = lax.all_gather(slots, axes, tiled=True)      # [world*n]
+    all_g = lax.all_gather(g_hit, axes, tiled=True)          # [world*n, D]
+    g_hot = jnp.zeros((h, d), g_u.dtype).at[all_slots].add(all_g, mode="drop")
+    return _tier_adagrad(tier, g_hot, lr, eps)
+
+
+def apply_sparse_grads_l2(
+    w_shard: jnp.ndarray,
+    acc_shard: jnp.ndarray,
+    cache: Optional[CacheState],
+    l2: CacheState,
+    ctx: LookupCtx,
+    g_u: jnp.ndarray,
+    *,
+    axes: Axes,
+    world: int,
+    lr: float,
+    eps: float = 1e-8,
+    cache_update: str = "psum",
+) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[CacheState], CacheState]:
+    """Two-tier transposed path (L1 hot tier + L2 host tier).
+
+    Misses (neither tier) ride the transposed Shuffle exactly as in
+    ``apply_sparse_grads``. Tier-hit grads follow ``cache_update``:
+
+    'psum'  — both tiers stay authoritative between flushes (exact). L1 hit
+              grads are psum'd as usual (O(H1*D), small tier). For L2 the
+              update picks the cheaper of two exact, replica-consistent
+              reductions by *static* shapes: the dense O(H2*D) psum, or an
+              all_gather of the batch's hit grads + slots applied locally
+              (O(world*n*D)) — for a host tier 10-100x the hot tier, the
+              gather is what keeps per-step comm proportional to the batch
+              rather than the tier.
+    'stale' — the union of L1 and L2 hits rides one second all_to_all to the
+              owner shards; both tiers are read-only between flushes
+              (Algorithm 1 bounded-staleness, master always exact).
+
+    ``ctx`` must come from an L2-probing ``mp_lookup`` (``ctx.l2_hit`` set).
+    """
+    w_shard, acc_shard = _apply_miss_grads(w_shard, acc_shard, ctx, g_u,
+                                           axes, world, lr, eps)
+    if cache_update == "stale":
+        both = ctx.hit | ctx.l2_hit
+        w_shard, acc_shard = _route_hit_grads(w_shard, acc_shard, ctx, both,
+                                              g_u, axes, world, lr, eps)
+        return w_shard, acc_shard, cache, l2
+    if cache is not None and cache.keys.shape[0] > 0:
+        cache = _psum_into_tier(cache, ctx.hit, ctx.cache_slot, g_u, axes, lr, eps)
+    h2 = l2.keys.shape[0]
+    if h2 > 0:
+        n, d = g_u.shape
+        gather_elems = (world - 1) * n * (d + 1)   # hit grads + slots
+        if gather_elems < h2 * d:
+            l2 = _allgather_into_tier(l2, ctx.l2_hit, ctx.l2_slot, g_u,
+                                      axes, lr, eps)
+        else:
+            l2 = _psum_into_tier(l2, ctx.l2_hit, ctx.l2_slot, g_u, axes, lr, eps)
+    return w_shard, acc_shard, cache, l2
 
 
 # ---------------------------------------------------------------------------
@@ -306,16 +439,48 @@ def apply_sparse_grads(
 def count_frequencies(counts_shard: jnp.ndarray, ctx: LookupCtx) -> jnp.ndarray:
     """Owner-side FCounter update from the ids received this step.
 
-    Counts *routed* queries; cache hits are counted via their last routed
-    appearance before entering the hot set (good enough for top-k drift, and
-    the decay in ``flush_cache`` re-ranks over time).
+    Counts *routed* queries; for the single-tier path, cache hits are counted
+    via their last routed appearance before entering the hot set (good enough
+    for top-k drift on a small L1, and the decay in ``flush_cache`` re-ranks
+    over time). Two-tier strategies must additionally count tier hits
+    (``count_hit_frequencies``): with an L2 covering a large table fraction,
+    the uncounted resident mass would otherwise decay below the routed tail
+    and the flush would churn-evict genuinely hot rows.
     """
     return counts_shard.at[ctx.recv_local.reshape(-1)].add(
         ctx.recv_valid.reshape(-1).astype(counts_shard.dtype))
 
 
+def count_hit_frequencies(counts_shard: jnp.ndarray, ctx: LookupCtx,
+                          hit_mask: jnp.ndarray, *, axes: Axes,
+                          world: int) -> jnp.ndarray:
+    """FCounter update for tier-served lookups, with zero communication.
+
+    Tier hits never ride the Shuffle, so the owner shard does not observe
+    them. Instead of psum'ing per-slot hit counts (O(H) ints per step — the
+    very cost the tier avoids), each shard scatters the hits *it* issued into
+    its own slice of the FCounter, weighted by ``world``: a shard owns a
+    scrambled row with probability 1/world, so the weighted local sample is
+    an unbiased (Horvitz-Thompson) estimate of the global hit count — exact
+    at world=1, ranking-preserving in expectation at scale.
+    """
+    rps = counts_shard.shape[0]
+    my = lax.axis_index(axes).astype(jnp.int32)
+    local = ctx.uniq.astype(jnp.int32) - my * rps
+    ok = hit_mask & (local >= 0) & (local < rps)
+    safe = jnp.where(ok, jnp.clip(local, 0, rps - 1), rps)
+    inc = jnp.asarray(world, counts_shard.dtype) * ok.astype(counts_shard.dtype)
+    return counts_shard.at[safe].add(inc, mode="drop")
+
+
 def cache_hit_count(ctx: LookupCtx) -> jnp.ndarray:
     return jnp.sum(ctx.hit)
+
+
+def l2_hit_count(ctx: LookupCtx) -> jnp.ndarray:
+    if ctx.l2_hit is None:
+        return jnp.zeros((), jnp.int32)
+    return jnp.sum(ctx.l2_hit)
 
 
 def flush_cache(
@@ -344,12 +509,8 @@ def flush_cache(
 
     # ---- 1. write back ------------------------------------------------------
     if write_back:
-        local = cache.keys - base
-        mine = (local >= 0) & (local < rps) & (cache.keys < rows_padded)
-        lclip = jnp.clip(local, 0, rps - 1)
-        safe_idx = jnp.where(mine, lclip, rps)
-        w_shard = w_shard.at[safe_idx].set(cache.rows.astype(w_shard.dtype), mode="drop")
-        acc_shard = acc_shard.at[safe_idx].set(cache.acc.astype(acc_shard.dtype), mode="drop")
+        w_shard, acc_shard = _write_back_tier(w_shard, acc_shard, cache,
+                                              base, rps, rows_padded)
 
     # ---- 2. global top-H ----------------------------------------------------
     # scrambled ids spread the hot set ~uniformly over shards, so the global
@@ -361,20 +522,94 @@ def flush_cache(
     all_vals = lax.all_gather(lvals, axes, tiled=True)   # [world*k_local]
     all_ids = lax.all_gather(gids, axes, tiled=True)
     tvals, tidx = lax.top_k(all_vals, h)
-    new_keys = jnp.where(tvals > 0, all_ids[tidx], rows_padded)
-    new_keys = jnp.sort(new_keys)
+    new_keys = jnp.sort(jnp.where(tvals > 0, all_ids[tidx], rows_padded))
 
     # ---- 3. load new hot set ------------------------------------------------
-    nlocal = new_keys - base
-    nmine = (nlocal >= 0) & (nlocal < rps) & (new_keys < rows_padded)
+    new_cache = _load_tier(w_shard, acc_shard, new_keys, base, rps,
+                           rows_padded, axes)
+
+    counts_shard = (counts_shard.astype(jnp.float32) * decay).astype(counts_shard.dtype)
+    return w_shard, acc_shard, counts_shard, new_cache
+
+
+def _write_back_tier(w_shard, acc_shard, tier: CacheState, base, rps: int,
+                     rows_padded: int):
+    """Owner shards take their slice of a replicated tier (no comm)."""
+    local = tier.keys - base
+    mine = (local >= 0) & (local < rps) & (tier.keys < rows_padded)
+    safe_idx = jnp.where(mine, jnp.clip(local, 0, rps - 1), rps)
+    w_shard = w_shard.at[safe_idx].set(tier.rows.astype(w_shard.dtype), mode="drop")
+    acc_shard = acc_shard.at[safe_idx].set(tier.acc.astype(acc_shard.dtype), mode="drop")
+    return w_shard, acc_shard
+
+
+def _load_tier(w_shard, acc_shard, keys, base, rps: int, rows_padded: int,
+               axes: Axes) -> CacheState:
+    """psum of owner contributions: master rows -> a fresh replicated tier."""
+    nlocal = keys - base
+    nmine = (nlocal >= 0) & (nlocal < rps) & (keys < rows_padded)
     nclip = jnp.clip(nlocal, 0, rps - 1)
     contrib_w = jnp.take(w_shard, nclip, axis=0) * nmine[:, None].astype(w_shard.dtype)
     contrib_a = jnp.take(acc_shard, nclip, axis=0) * nmine[:, None].astype(acc_shard.dtype)
-    new_rows = lax.psum(contrib_w, axes)
-    new_acc = lax.psum(contrib_a, axes)
+    return CacheState(keys, lax.psum(contrib_w, axes), lax.psum(contrib_a, axes))
+
+
+def flush_cache_l2(
+    w_shard: jnp.ndarray,
+    acc_shard: jnp.ndarray,
+    counts_shard: jnp.ndarray,
+    cache: CacheState,
+    l2: CacheState,
+    *,
+    axes: Axes,
+    world: int,
+    decay: float = 0.5,
+    write_back: bool = True,   # False for cache_update='stale'
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, CacheState, CacheState]:
+    """Two-tier HybridHash flush: one global frequency ranking fills both tiers.
+
+    1. write back L1 and L2 rows + optimizer state to owner shards ('psum'
+       mode only — in 'stale' mode the master is already exact);
+    2. select the global top-(H1+H2) rows by FCounter frequency; the hottest
+       H1 become the new L1 hot tier, the next H2 the new L2 host tier — so
+       the tiers are disjoint by construction and L2 holds exactly the skew
+       tail that overflows the device-resident budget;
+    3. reload both tiers from the (just-synced) master shards.
+
+    Degenerate tiers (0 rows) are handled: an empty L1 makes this equivalent
+    to a single-tier flush of L2 and vice versa.
+    """
+    rps, d = w_shard.shape
+    h1, h2 = cache.keys.shape[0], l2.keys.shape[0]
+    h = h1 + h2
+    rows_padded = rps * world
+    my = lax.axis_index(axes).astype(jnp.int32)
+    base = my * rps
+
+    # ---- 1. write back ------------------------------------------------------
+    if write_back:
+        w_shard, acc_shard = _write_back_tier(w_shard, acc_shard, cache,
+                                              base, rps, rows_padded)
+        w_shard, acc_shard = _write_back_tier(w_shard, acc_shard, l2,
+                                              base, rps, rows_padded)
+
+    # ---- 2. one global top-(H1+H2), split by rank ---------------------------
+    k_local = min(rps, max(32, (4 * h + world - 1) // world))
+    lvals, lidx = lax.top_k(counts_shard, k_local)
+    gids = base + lidx.astype(jnp.int32)
+    all_vals = lax.all_gather(lvals, axes, tiled=True)
+    all_ids = lax.all_gather(gids, axes, tiled=True)
+    tvals, tidx = lax.top_k(all_vals, h)
+    keys_ranked = jnp.where(tvals > 0, all_ids[tidx], rows_padded)
+    keys1 = jnp.sort(keys_ranked[:h1])   # hottest H1 -> device tier
+    keys2 = jnp.sort(keys_ranked[h1:])   # next H2    -> host tier
+
+    # ---- 3. reload both tiers from master -----------------------------------
+    new_l1 = _load_tier(w_shard, acc_shard, keys1, base, rps, rows_padded, axes)
+    new_l2 = _load_tier(w_shard, acc_shard, keys2, base, rps, rows_padded, axes)
 
     counts_shard = (counts_shard.astype(jnp.float32) * decay).astype(counts_shard.dtype)
-    return w_shard, acc_shard, counts_shard, CacheState(new_keys, new_rows, new_acc)
+    return w_shard, acc_shard, counts_shard, new_l1, new_l2
 
 
 # ---------------------------------------------------------------------------

@@ -71,6 +71,11 @@ class PicassoPlan:
     cache_rows: Dict[int, int]       # gid -> hot-storage rows (0 = no cache)
     flush_iters: int = 100
     warmup_iters: int = 100
+    # gid -> L2 host-memory tier rows (0 = no L2). The L2 tier sits *behind*
+    # the hot tier: it only ever participates for groups that also have a
+    # cache_rows budget, and the flush keeps the two key sets disjoint
+    # (top-H1 rows device-resident, next-H2 host-resident).
+    l2_rows: Dict[int, int] = field(default_factory=dict)
     # gid -> LookupStrategy registry name. Empty = unassigned: engines built
     # with a single strategy name broadcast it; engines built with
     # 'mixed'/'auto' compile an assignment (repro.core.assign) and record
@@ -301,6 +306,35 @@ def plan_cache(
     return out
 
 
+def plan_l2(
+    groups: Sequence[PackedGroup],
+    l2_bytes: int,
+    cache_rows: Dict[int, int],
+    dtype_bytes: int = 4,
+) -> Dict[int, int]:
+    """Split the L2 host-memory budget across packed groups ∝ vparam share.
+
+    The L2 tier backs the hot tier with host (CPU/pinned) memory, so its
+    budget is typically 10-100x ``hot_bytes``. Per group the tier is capped
+    at the rows *not* already covered by the hot tier (the flush assigns the
+    top-H1 rows to L1 and the next H2 to L2, so overlapping budget would be
+    dead memory), and rounded down to the 8-row sublane multiple. Groups
+    without a hot-tier budget get no L2: the tier sits strictly behind L1.
+    """
+    total_v = sum(g.vparam for g in groups) or 1.0
+    out: Dict[int, int] = {}
+    for g in groups:
+        h1 = cache_rows.get(g.gid, 0)
+        if l2_bytes <= 0 or h1 <= 0:
+            out[g.gid] = 0
+            continue
+        budget = l2_bytes * (g.vparam / total_v)
+        rows = int(budget / ((g.dim + 1) * dtype_bytes))  # +1 for adagrad acc
+        rows = min(rows, max(g.rows - h1, 0))
+        out[g.gid] = (rows // 8) * 8
+    return out
+
+
 def make_plan(
     cfg: WDLConfig,
     world: int,
@@ -311,6 +345,7 @@ def make_plan(
     n_interleave: Optional[int] = None,
     n_micro: Optional[int] = None,
     hot_bytes: int = 1 << 30,
+    l2_bytes: int = 0,
     capacity_slack: float = 2.0,
     exact_capacity: bool = False,
     freq_share: Optional[Dict[str, float]] = None,
@@ -320,6 +355,7 @@ def make_plan(
 ) -> PicassoPlan:
     groups = plan_packing(cfg, world, freq_share=freq_share, enable_packing=enable_packing)
     cache_rows = plan_cache(groups, hot_bytes, world) if enable_cache else {g.gid: 0 for g in groups}
+    l2_rows = plan_l2(groups, l2_bytes if enable_cache else 0, cache_rows)
     capacity = {}
     for g in groups:
         local_ids = per_device_batch * g.ids_per_sample
@@ -338,4 +374,5 @@ def make_plan(
         cache_rows=cache_rows,
         flush_iters=flush_iters,
         warmup_iters=warmup_iters,
+        l2_rows=l2_rows,
     )

@@ -48,19 +48,29 @@ def batch_specs(batch: Any, axes: Axes) -> Any:
         lambda x: P(axes, *((None,) * (len(x.shape) - 1))), batch)
 
 
-def emb_state_specs(axes: Axes) -> EmbeddingState:
-    """Specs for one packed group's EmbeddingState (table MP, hot tier DP)."""
+def emb_state_specs(axes: Axes, with_l2: bool = False) -> EmbeddingState:
+    """Specs for one packed group's EmbeddingState (table MP, tiers DP).
+
+    ``with_l2`` mirrors whether the group's state carries an L2 host tier
+    (``plan.l2_rows[gid] > 0``); like the hot tier it is replicated across
+    the mesh — on TPU its leaves additionally live in pinned host memory
+    (see ``repro.embedding.state.pin_l2_to_host``), which PartitionSpecs do
+    not express.
+    """
     return EmbeddingState(
         w=P(axes, None),
         acc=P(axes, None),
         counts=P(axes),
         cache=CacheState(keys=P(), rows=P(), acc=P()),
+        l2=CacheState(keys=P(), rows=P(), acc=P()) if with_l2 else None,
     )
 
 
 def emb_specs(plan: PicassoPlan, axes: Axes) -> Dict[str, EmbeddingState]:
     """Specs for the full per-group embedding dict (the ``"emb"`` subtree)."""
-    return {str(g.gid): emb_state_specs(axes) for g in plan.groups}
+    return {str(g.gid): emb_state_specs(axes,
+                                        with_l2=plan.l2_rows.get(g.gid, 0) > 0)
+            for g in plan.groups}
 
 
 def state_specs(plan: PicassoPlan, axes: Axes, dense: Any,

@@ -1,4 +1,19 @@
-"""Per-group embedding state (table shard + adagrad acc + FCounter + cache)."""
+"""Per-group embedding state (table shard + adagrad acc + FCounter + caches).
+
+``l2`` is the optional host-memory cache tier behind the replicated hot tier
+(``cache``): same ``CacheState`` container, more rows, filled by the flush
+with the frequency ranks just below the L1 set. It is ``None`` whenever the
+plan budgets no L2 rows for the group — ``None`` is an empty pytree node, so
+plans without an L2 budget keep the exact pre-L2 state structure (sharding
+specs, checkpoints, and donation all line up with older runs).
+
+On a real TPU deployment the L2 leaves are *intended* to live in pinned host
+memory (``memory_kind='pinned_host'``): ``pin_l2_to_host`` is the
+experimental placement hook, but the jitted step shardings do not carry
+memory kinds yet, so the repro keeps the tier as ordinary replicated arrays
+— the math is identical, only the placement differs (see its docstring and
+ROADMAP for the remaining follow-up).
+"""
 from __future__ import annotations
 
 from typing import Any, Dict, NamedTuple, Optional
@@ -14,11 +29,12 @@ class EmbeddingState(NamedTuple):
     w: jnp.ndarray       # [rows, D]   (sharded over the whole mesh)
     acc: jnp.ndarray     # [rows, 1]   adagrad accumulator
     counts: jnp.ndarray  # [rows]      FCounter (warm-up + running stats)
-    cache: CacheState    # replicated hot tier
+    cache: CacheState    # replicated hot tier (L1)
+    l2: Optional[CacheState] = None  # host-memory tier (L2), None = no tier
 
 
 def init_group_state(key: jax.Array, group: PackedGroup, hot_rows: int,
-                     dtype=jnp.float32) -> EmbeddingState:
+                     dtype=jnp.float32, l2_rows: int = 0) -> EmbeddingState:
     scale = 1.0 / jnp.sqrt(jnp.asarray(max(group.dim, 1), jnp.float32))
     w = jax.random.normal(key, (group.rows, group.dim), dtype) * scale
     return EmbeddingState(
@@ -26,6 +42,8 @@ def init_group_state(key: jax.Array, group: PackedGroup, hot_rows: int,
         acc=jnp.zeros((group.rows, 1), dtype),
         counts=jnp.zeros((group.rows,), jnp.int32),
         cache=init_cache(hot_rows, group.dim, group.rows, dtype),
+        l2=(init_cache(l2_rows, group.dim, group.rows, dtype)
+            if l2_rows > 0 else None),
     )
 
 
@@ -33,7 +51,8 @@ def init_embedding_state(key: jax.Array, plan: PicassoPlan,
                          dtype=jnp.float32) -> Dict[int, EmbeddingState]:
     keys = jax.random.split(key, len(plan.groups))
     return {
-        g.gid: init_group_state(keys[i], g, plan.cache_rows.get(g.gid, 0), dtype)
+        g.gid: init_group_state(keys[i], g, plan.cache_rows.get(g.gid, 0),
+                                dtype, l2_rows=plan.l2_rows.get(g.gid, 0))
         for i, g in enumerate(plan.groups)
     }
 
@@ -43,6 +62,7 @@ def abstract_embedding_state(plan: PicassoPlan, dtype=jnp.float32) -> Dict[int, 
     out = {}
     for g in plan.groups:
         h = plan.cache_rows.get(g.gid, 0)
+        h2 = plan.l2_rows.get(g.gid, 0)
         out[g.gid] = EmbeddingState(
             w=jax.ShapeDtypeStruct((g.rows, g.dim), dtype),
             acc=jax.ShapeDtypeStruct((g.rows, 1), dtype),
@@ -52,5 +72,49 @@ def abstract_embedding_state(plan: PicassoPlan, dtype=jnp.float32) -> Dict[int, 
                 rows=jax.ShapeDtypeStruct((h, g.dim), dtype),
                 acc=jax.ShapeDtypeStruct((h, 1), dtype),
             ),
+            l2=(CacheState(
+                keys=jax.ShapeDtypeStruct((h2,), jnp.int32),
+                rows=jax.ShapeDtypeStruct((h2, g.dim), dtype),
+                acc=jax.ShapeDtypeStruct((h2, 1), dtype),
+            ) if h2 > 0 else None),
         )
     return out
+
+
+def pin_l2_to_host(state: Any, mesh=None) -> Any:
+    """Best effort: move every L2 tier leaf to pinned host memory.
+
+    EXPERIMENTAL placement utility, not yet wired into the launchers (see
+    ROADMAP). On backends that expose ``memory_kind='pinned_host'`` the L2
+    leaves are re-placed replicated-over-``mesh`` in host memory (so the
+    mesh-wide replication the sharding specs declare is preserved — this
+    requires ``mesh``; without one, or on backends without host memory kinds
+    such as the CPU test rig, the state is returned unchanged). Caveat: the
+    jitted train/serve steps build their in-shardings from
+    ``repro.dist.sharding`` specs, which carry no memory kind yet — entering
+    a step re-stages the tier into device memory until those specs also
+    carry ``pinned_host`` for L2 leaves (the remaining follow-up for true
+    host residency on TPU).
+    """
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    if mesh is None:
+        return state
+    try:
+        dev = jax.local_devices()[0]
+        kind = dev.memory("pinned_host").kind  # raises if unsupported
+        host = NamedSharding(mesh, PartitionSpec(), memory_kind=kind)
+    except Exception:
+        return state
+
+    def move(st):
+        if not isinstance(st, EmbeddingState) or st.l2 is None:
+            return st
+        return st._replace(
+            l2=jax.tree.map(lambda x: jax.device_put(x, host), st.l2))
+
+    if isinstance(state, dict) and "emb" in state:
+        return {**state, "emb": {k: move(v) for k, v in state["emb"].items()}}
+    if isinstance(state, dict):
+        return {k: move(v) for k, v in state.items()}
+    return move(state)

@@ -1,29 +1,43 @@
 """Unified embedding engine: one sparse path for train / serve / retrieval.
 
 ``EmbeddingEngine`` executes a ``PicassoPlan`` with per-group pluggable
-``LookupStrategy``s (``'picasso' | 'hybrid' | 'ps'``, see ``strategies``):
-a single name broadcasts, ``'mixed'``/``'auto'`` uses the plan's assignment
-or compiles one with the ``repro.core.assign`` cost model.
+``LookupStrategy``s (``'picasso' | 'hybrid' | 'ps' | 'picasso_l2'``, see
+``strategies``): a single name broadcasts, ``'mixed'``/``'auto'`` uses the
+plan's assignment or compiles one with the ``repro.core.assign`` cost model.
+
+This package re-exports the full public surface of the subsystem — the
+engine, every registry strategy class and helper, and the assignment
+compiler — so launchers, benchmarks, and docs examples import from one
+place (``from repro.engine import ...``).
 """
-from repro.core.assign import (StrategyAssignment, apply_assignment,
-                               compile_assignment, resolve_assignment)
+from repro.core.assign import (AUTO_NAMES, GroupScore, StrategyAssignment,
+                               apply_assignment, compile_assignment,
+                               estimate_l2_gain, estimate_skew, maybe_compile,
+                               resolve_assignment)
 from repro.engine.engine import EmbeddingEngine, EngineContext
-from repro.engine.strategies import (HybridStrategy, LookupStrategy, PicassoStrategy,
-                                     PSStrategy, available_strategies, get_strategy,
-                                     register_strategy)
+from repro.engine.strategies import (HybridStrategy, LookupStrategy,
+                                     PicassoL2Strategy, PicassoStrategy,
+                                     PSStrategy, available_strategies,
+                                     get_strategy, register_strategy)
 
 __all__ = [
+    "AUTO_NAMES",
     "EmbeddingEngine",
     "EngineContext",
+    "GroupScore",
     "HybridStrategy",
     "LookupStrategy",
     "PSStrategy",
+    "PicassoL2Strategy",
     "PicassoStrategy",
     "StrategyAssignment",
     "apply_assignment",
     "available_strategies",
     "compile_assignment",
+    "estimate_l2_gain",
+    "estimate_skew",
     "get_strategy",
+    "maybe_compile",
     "register_strategy",
     "resolve_assignment",
 ]

@@ -27,18 +27,37 @@ Strategy is a **per-packed-group property of the plan**, not an engine-wide
 flag: the engine owns a ``Dict[gid, LookupStrategy]`` and dispatches per
 group in every entry point. The ``strategy=`` argument accepts
 
-- a registry name (``'picasso' | 'hybrid' | 'ps'``) — broadcast to every
-  group (the original single-strategy constructor, kept as sugar);
+- a registry name (``'picasso' | 'hybrid' | 'ps' | 'picasso_l2'``) —
+  broadcast to every group (the original single-strategy constructor, kept
+  as sugar);
 - ``'mixed'`` / ``'auto'`` — use ``plan.strategy`` when the planner recorded
   an assignment, else compile one with the ``repro.core.assign`` cost model
   (tiny tables PS-replicated, big skewed tables routed + cached);
 - an explicit ``{gid: name}`` dict or a ``StrategyAssignment``.
 
-Cache gating is per group: the HybridHash hot tier participates only where
-the assigned strategy has ``uses_cache`` AND the plan budgets rows for that
-gid; ``flush`` skips every other group. Metrics are per-strategy-class sums
-(``overflow/<name>``, ``cache_hits/<name>``) so overflow and hit counters
-stay meaningful when a plan mixes routed and PS groups.
+Invariants the engine maintains (and the tests pin down):
+
+* **Per-group cache gating.** The HybridHash hot tier (L1) participates only
+  where the assigned strategy has ``uses_cache`` AND the plan budgets
+  ``cache_rows`` for that gid. The L2 host tier sits strictly *behind* L1:
+  it participates only where the strategy has ``uses_l2``, the plan budgets
+  ``l2_rows``, the engine's ``use_l2`` flag is on, AND L1 itself is active
+  for the group (``--no-cache`` therefore disables both tiers).
+* **Flush skips uncached groups.** ``flush`` touches exactly the groups
+  whose tiers participate: L1+L2 groups get the two-tier flush (one global
+  frequency ranking split top-H1 / next-H2), L1-only groups the single-tier
+  flush, and every other group — including PS-assigned groups whose budgeted
+  tier the training path never populated — passes through untouched.
+* **Assignment resolution order** (``repro.core.assign.resolve_assignment``):
+  an explicit ``StrategyAssignment``/dict is taken as-is (validated for
+  exact gid coverage); ``'mixed'``/``'auto'`` uses ``plan.strategy`` when
+  the plan carries one, else compiles a fresh assignment and records it on
+  the plan; any other registry name broadcasts to every group.
+
+Metrics are per-strategy-class sums (``overflow/<name>``,
+``cache_hits/<name>``) when a plan mixes classes, plus any strategy-declared
+per-tier keys (``cache_hits/l1`` / ``cache_hits/l2`` for ``picasso_l2``) —
+``metric_keys`` is static so callers can build shard_map out_specs from it.
 
 All shapes are static: the engine runs inside ``shard_map`` on TPU meshes.
 """
@@ -81,6 +100,9 @@ class EmbeddingEngine:
     use_cache: enable the HybridHash hot tier (honoured per group: only
         where the assigned strategy has ``uses_cache=True`` and the plan
         budgets a non-zero cache for that gid).
+    use_l2: enable the L2 host-memory tier behind the hot tier (honoured
+        per group: strategy has ``uses_l2=True``, the plan budgets
+        ``l2_rows``, and the group's L1 tier is itself active).
     use_interleave: issue lookups in the planner's K-Interleaving waves;
         ``False`` collapses to a single wave.
     lr_emb/eps: row-wise adagrad hyperparameters for the sparse update.
@@ -93,8 +115,9 @@ class EmbeddingEngine:
 
     def __init__(self, plan: PicassoPlan, axes: Axes, world: int, *,
                  strategy: StrategySpec = "picasso", use_cache: bool = True,
-                 use_interleave: bool = True, lr_emb: float = 0.05,
-                 eps: float = 1e-8, cache_update: str = "psum",
+                 use_l2: bool = True, use_interleave: bool = True,
+                 lr_emb: float = 0.05, eps: float = 1e-8,
+                 cache_update: str = "psum",
                  capacity: Optional[Dict[int, int]] = None):
         self.plan = plan
         self.axes = axes
@@ -125,7 +148,16 @@ class EmbeddingEngine:
                         and self.strategies[g.gid].uses_cache
                         and plan.cache_rows.get(g.gid, 0) > 0)
             for g in plan.groups}
+        # L2 sits strictly behind L1: an inactive hot tier turns it off too
+        self.l2_on: Dict[int, bool] = {
+            g.gid: bool(use_l2
+                        and self.cache_on[g.gid]
+                        and self.strategies[g.gid].uses_l2
+                        and plan.l2_rows.get(g.gid, 0) > 0)
+            for g in plan.groups}
         self.any_cache = any(self.cache_on.values())
+        self._extra_keys = tuple(sorted(
+            {k for n in names for k in get_strategy(n).extra_metric_keys}))
         self.waves = (plan.interleave if use_interleave
                       else [[g.gid for g in plan.groups]])
 
@@ -137,6 +169,7 @@ class EmbeddingEngine:
         if len(self.strategy_names) > 1:
             keys += [f"overflow/{n}" for n in self.strategy_names]
             keys += [f"cache_hits/{n}" for n in self.strategy_names]
+        keys += list(self._extra_keys)
         return tuple(keys)
 
     # ------------------------------------------------------------- forward
@@ -162,7 +195,7 @@ class EmbeddingEngine:
             for gid in wave:
                 rows[gid], ctxs[gid] = self.strategies[gid].lookup(
                     emb[str(gid)], gid, ids_in[gid],
-                    cache_on=self.cache_on[gid])
+                    cache_on=self.cache_on[gid], l2_on=self.l2_on[gid])
         return rows, ctxs
 
     def forward(self, emb: Dict[str, EmbeddingState],
@@ -183,7 +216,8 @@ class EmbeddingEngine:
                     ids: jnp.ndarray) -> jnp.ndarray:
         """Raw per-id rows ``[n, D]`` for one group (retrieval towers)."""
         rows_u, ctx = self.strategies[gid].lookup(
-            emb[str(gid)], gid, ids, cache_on=self.cache_on[gid])
+            emb[str(gid)], gid, ids, cache_on=self.cache_on[gid],
+            l2_on=self.l2_on[gid])
         return jnp.take(rows_u, ctx.inv, axis=0)
 
     # ------------------------------------------------------------ backward
@@ -202,6 +236,7 @@ class EmbeddingEngine:
         zero = jnp.zeros((), jnp.int32)
         ovf = {n: zero for n in self.strategy_names}
         hits = {n: zero for n in self.strategy_names}
+        extra = {k: zero for k in self._extra_keys}
         for gid, g_p in g_pooled.items():
             pb = ctx.packed[gid]
             gctx = ctx.ctxs[gid]
@@ -212,30 +247,45 @@ class EmbeddingEngine:
             g_rows = jax.ops.segment_sum(per_id, gctx.inv,
                                          num_segments=pb.ids.shape[0])
             st2, o, h = self.strategies[gid].apply_grads(
-                emb[str(gid)], gid, gctx, g_rows, cache_on=self.cache_on[gid])
+                emb[str(gid)], gid, gctx, g_rows, cache_on=self.cache_on[gid],
+                l2_on=self.l2_on[gid])
             emb[str(gid)] = st2
             ovf[name] = ovf[name] + o
             hits[name] = hits[name] + h
+            for k, v in self.strategies[gid].tier_metrics(gctx).items():
+                extra[k] = extra[k] + v
         metrics = {"overflow": sum(ovf.values(), zero),
                    "cache_hits": sum(hits.values(), zero)}
         if len(self.strategy_names) > 1:
             for n in self.strategy_names:
                 metrics[f"overflow/{n}"] = ovf[n]
                 metrics[f"cache_hits/{n}"] = hits[n]
+        metrics.update(extra)
         return emb, metrics
 
     # --------------------------------------------------------------- flush
     def flush(self, emb: Dict[str, EmbeddingState]) -> Dict[str, EmbeddingState]:
         """HybridHash flush (Algorithm 1 L23-26) for every *cached* group —
-        groups whose assigned strategy never reads the tier are skipped even
-        when the plan budgets rows for them."""
+        groups whose assigned strategy never reads a tier are skipped even
+        when the plan budgets rows for them. Groups with an active L2 host
+        tier get the two-tier flush: both tiers written back (psum mode),
+        then one global frequency ranking refills L1 (top-H1) and L2
+        (next-H2) disjointly."""
         out = dict(emb)
         for g in self.plan.groups:
             if not self.cache_on.get(g.gid, False):
                 continue
             st = out[str(g.gid)]
-            w2, acc2, counts2, cache2 = pe.flush_cache(
-                st.w, st.acc, st.counts, st.cache, axes=self.axes,
-                world=self.world, write_back=self.cache_update == "psum")
-            out[str(g.gid)] = EmbeddingState(w2, acc2, counts2, cache2)
+            wb = self.cache_update == "psum"
+            if self.l2_on.get(g.gid, False) and st.l2 is not None:
+                w2, acc2, counts2, cache2, l22 = pe.flush_cache_l2(
+                    st.w, st.acc, st.counts, st.cache, st.l2, axes=self.axes,
+                    world=self.world, write_back=wb)
+                out[str(g.gid)] = EmbeddingState(w2, acc2, counts2, cache2, l22)
+            else:
+                w2, acc2, counts2, cache2 = pe.flush_cache(
+                    st.w, st.acc, st.counts, st.cache, axes=self.axes,
+                    world=self.world, write_back=wb)
+                out[str(g.gid)] = EmbeddingState(w2, acc2, counts2, cache2,
+                                                 st.l2)
         return out

@@ -27,9 +27,21 @@ Concrete strategies (selected by name through the registry):
 ``ps``
     PS-style all_gather + psum lookups (the fragmentary baseline): no routing,
     no dedup, no cache; communication O(world * n * D).
+``picasso_l2``
+    The picasso path with a second, host-memory cache tier (HugeCTR-style
+    hierarchical parameter cache) behind the hot tier: unique ids probe L1
+    (device-resident top-H1 rows), then L2 (host-resident next-H2 rows), and
+    only the remainder rides the all_to_all Shuffle. Write-back and re-rank
+    happen at flush time for both tiers at once. Cold or absent L2 is
+    bitwise-identical to ``picasso``.
 
 New workloads (multi-task serving, frequency-adaptive dims, other baselines)
 land as one ``@register_strategy`` class instead of a new copy of the loop.
+A strategy advertises its cache behaviour through class attributes the
+engine gates on per group: ``uses_cache`` (L1 participates where the plan
+budgets ``cache_rows``), ``uses_l2`` (L2 participates where the plan budgets
+``l2_rows`` *and* L1 is active), and ``extra_metric_keys`` (extra static
+metric names ``tier_metrics`` reports, e.g. per-tier hit counters).
 """
 from __future__ import annotations
 
@@ -82,7 +94,9 @@ class LookupStrategy:
 
     name = "base"
     uses_cache = False        # whether the HybridHash hot tier participates
+    uses_l2 = False           # whether the L2 host tier participates
     uses_routing_ctx = True   # ctx carries Shuffle routing (MP strategies)
+    extra_metric_keys: Tuple[str, ...] = ()  # keys tier_metrics reports
 
     def __init__(self, *, axes: Axes, world: int, capacity: Dict[int, int],
                  lr: float = 0.05, eps: float = 1e-8,
@@ -96,16 +110,32 @@ class LookupStrategy:
 
     # ----------------------------------------------------------------- fwd
     def lookup(self, st: EmbeddingState, gid: int, ids: jnp.ndarray,
-               *, cache_on: bool = False) -> Tuple[jnp.ndarray, Any]:
+               *, cache_on: bool = False, l2_on: bool = False
+               ) -> Tuple[jnp.ndarray, Any]:
         """ids [n] -> (rows [n, D], ctx). ``ctx.inv`` maps positions to rows."""
         raise NotImplementedError
 
     # ----------------------------------------------------------------- bwd
     def apply_grads(self, st: EmbeddingState, gid: int, ctx: Any,
-                    g_rows: jnp.ndarray, *, cache_on: bool = False
+                    g_rows: jnp.ndarray, *, cache_on: bool = False,
+                    l2_on: bool = False
                     ) -> Tuple[EmbeddingState, jnp.ndarray, jnp.ndarray]:
-        """Row grads -> updated state. Returns (state, overflow, cache_hits)."""
+        """Row grads -> updated state. Returns (state, overflow, cache_hits).
+
+        ``cache_hits`` counts ids served by *any* cache tier (L1 + L2 for
+        two-tier strategies); ``tier_metrics`` breaks it down.
+        """
         raise NotImplementedError
+
+    # ------------------------------------------------------------- metrics
+    def tier_metrics(self, ctx: Any) -> Dict[str, jnp.ndarray]:
+        """Per-tier counters for this lookup, keyed by ``extra_metric_keys``.
+
+        Must return exactly ``extra_metric_keys`` (int32 scalars) for every
+        ctx this strategy produced — the keys are static metric pytree
+        entries, so they cannot depend on whether a tier was warm.
+        """
+        return {}
 
 
 @register_strategy("picasso")
@@ -121,21 +151,22 @@ class PicassoStrategy(LookupStrategy):
 
     uses_cache = True
 
-    def lookup(self, st, gid, ids, *, cache_on=False):
+    def lookup(self, st, gid, ids, *, cache_on=False, l2_on=False):
         return pe.mp_lookup(
             st.w, ids, axes=self.axes, world=self.world,
             capacity=self.capacity[gid],
             hot_keys=st.cache.keys if cache_on else None,
             hot_rows=st.cache.rows if cache_on else None)
 
-    def apply_grads(self, st, gid, ctx, g_rows, *, cache_on=False):
+    def apply_grads(self, st, gid, ctx, g_rows, *, cache_on=False, l2_on=False):
         w2, acc2, cache2 = pe.apply_sparse_grads(
             st.w, st.acc, st.cache if cache_on else None, ctx, g_rows,
             axes=self.axes, world=self.world, lr=self.lr, eps=self.eps,
             cache_update=self.cache_update)
         counts2 = pe.count_frequencies(st.counts, ctx)
         st2 = EmbeddingState(w=w2, acc=acc2, counts=counts2,
-                             cache=cache2 if cache2 is not None else st.cache)
+                             cache=cache2 if cache2 is not None else st.cache,
+                             l2=st.l2)  # preserve an (unused) L2 tier as-is
         return (st2, ctx.routing.overflow.astype(jnp.int32),
                 pe.cache_hit_count(ctx).astype(jnp.int32))
 
@@ -153,11 +184,77 @@ class HybridStrategy(PicassoStrategy):
 
     uses_cache = False
 
-    def lookup(self, st, gid, ids, *, cache_on=False):
+    def lookup(self, st, gid, ids, *, cache_on=False, l2_on=False):
         return super().lookup(st, gid, ids, cache_on=False)
 
-    def apply_grads(self, st, gid, ctx, g_rows, *, cache_on=False):
+    def apply_grads(self, st, gid, ctx, g_rows, *, cache_on=False, l2_on=False):
         return super().apply_grads(st, gid, ctx, g_rows, cache_on=False)
+
+
+@register_strategy("picasso_l2")
+class PicassoL2Strategy(PicassoStrategy):
+    """PICASSO with a hierarchical parameter cache: L1 hot tier + L2 host tier.
+
+    HugeCTR-style multi-level caching behind the replicated hot tier: the
+    fixed-shape unique set probes the device-resident L1 first, L1 misses
+    probe the (much larger) host-memory L2, and only ids absent from both
+    tiers ride the all_to_all Shuffle. On TPU the L2 leaves live in pinned
+    host memory (``pin_l2_to_host``) — a hit costs one host DMA instead of
+    an ICI round trip; the repro keeps the arrays replicated so the math is
+    identical either way.
+
+    Backward follows ``cache_update`` exactly like the L1 tier: 'psum' keeps
+    both replicated tiers authoritative between flushes (tier-hit grads are
+    all-reduced into their own tier); 'stale' routes the union of tier hits
+    to the owner shards and leaves both tiers read-only. The two-tier flush
+    (``pe.flush_cache_l2``) writes both tiers back (psum mode), re-ranks one
+    global frequency top-(H1+H2), and splits it: hottest H1 rows -> L1,
+    next H2 -> L2 — the tiers stay disjoint by construction.
+
+    With ``l2_on=False`` (no plan budget / ``use_l2=False`` / L1 disabled)
+    every path is bitwise-identical to ``picasso``. With the tier on but
+    cold, lookups, pooled outputs, and sparse updates are still bitwise
+    identical — but the FCounter is intentionally NOT: this strategy also
+    counts tier-served hits (``count_hit_frequencies``, the anti-churn
+    correction), so once L1 warms, flush rankings — and through them later
+    numerics — may diverge from plain picasso by design.
+    """
+
+    uses_l2 = True
+    extra_metric_keys = ("cache_hits/l1", "cache_hits/l2")
+
+    def lookup(self, st, gid, ids, *, cache_on=False, l2_on=False):
+        if not l2_on or st.l2 is None:
+            return super().lookup(st, gid, ids, cache_on=cache_on)
+        return pe.mp_lookup(
+            st.w, ids, axes=self.axes, world=self.world,
+            capacity=self.capacity[gid],
+            hot_keys=st.cache.keys if cache_on else None,
+            hot_rows=st.cache.rows if cache_on else None,
+            l2_keys=st.l2.keys, l2_rows=st.l2.rows)
+
+    def apply_grads(self, st, gid, ctx, g_rows, *, cache_on=False, l2_on=False):
+        if not l2_on or st.l2 is None or ctx.l2_hit is None:
+            return super().apply_grads(st, gid, ctx, g_rows, cache_on=cache_on)
+        w2, acc2, cache2, l22 = pe.apply_sparse_grads_l2(
+            st.w, st.acc, st.cache if cache_on else None, st.l2, ctx, g_rows,
+            axes=self.axes, world=self.world, lr=self.lr, eps=self.eps,
+            cache_update=self.cache_update)
+        counts2 = pe.count_frequencies(st.counts, ctx)
+        # tier-served ids never route, so they must be counted explicitly or
+        # the flush ranking churn-evicts the resident (hottest) rows
+        counts2 = pe.count_hit_frequencies(counts2, ctx, ctx.hit | ctx.l2_hit,
+                                           axes=self.axes, world=self.world)
+        st2 = EmbeddingState(w=w2, acc=acc2, counts=counts2,
+                             cache=cache2 if cache2 is not None else st.cache,
+                             l2=l22)
+        hits = pe.cache_hit_count(ctx) + pe.l2_hit_count(ctx)
+        return (st2, ctx.routing.overflow.astype(jnp.int32),
+                hits.astype(jnp.int32))
+
+    def tier_metrics(self, ctx):
+        return {"cache_hits/l1": pe.cache_hit_count(ctx).astype(jnp.int32),
+                "cache_hits/l2": pe.l2_hit_count(ctx).astype(jnp.int32)}
 
 
 class PSCtx(NamedTuple):
@@ -178,12 +275,12 @@ class PSStrategy(LookupStrategy):
     uses_cache = False
     uses_routing_ctx = False
 
-    def lookup(self, st, gid, ids, *, cache_on=False):
+    def lookup(self, st, gid, ids, *, cache_on=False, l2_on=False):
         rows = pe.ps_lookup(st.w, ids, axes=self.axes, world=self.world)
         n = ids.shape[0]
         return rows, PSCtx(inv=jnp.arange(n, dtype=jnp.int32), ids=ids)
 
-    def apply_grads(self, st, gid, ctx, g_rows, *, cache_on=False):
+    def apply_grads(self, st, gid, ctx, g_rows, *, cache_on=False, l2_on=False):
         rps = st.w.shape[0]
         my = lax.axis_index(self.axes).astype(jnp.int32)
         base = my * rps

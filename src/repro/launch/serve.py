@@ -10,9 +10,9 @@ import os
 
 def main():
     # jax-importing but backend-lazy (see launch/train.py)
-    from repro.core.assign import AUTO_NAMES
-    from repro.engine.strategies import available_strategies
+    from repro.engine import AUTO_NAMES, available_strategies
 
+    names = available_strategies()
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="deepfm")
     ap.add_argument("--smoke", action="store_true")
@@ -23,9 +23,15 @@ def main():
     ap.add_argument("--devices", type=int, default=0)
     ap.add_argument("--mesh", default="")
     ap.add_argument("--strategy", default="picasso",
-                    choices=available_strategies() + AUTO_NAMES,
-                    help="EmbeddingEngine lookup strategy: registry name "
-                         "(broadcast) or mixed/auto (per-group assignment)")
+                    choices=names + AUTO_NAMES,
+                    help="EmbeddingEngine lookup strategy: one of "
+                         f"{', '.join(names)} (broadcast to every packed "
+                         f"group), or {'/'.join(AUTO_NAMES)} for the "
+                         "per-group cost-model assignment")
+    ap.add_argument("--l2-budget", type=int, default=0, metavar="BYTES",
+                    help="host-memory L2 cache budget in bytes (0 disables; "
+                         ">0 budgets an L2 tier behind the hot tier for the "
+                         "scoring path)")
     args = ap.parse_args()
 
     if args.devices:
@@ -40,8 +46,8 @@ def main():
     import numpy as np
 
     from repro.configs import get_config
-    from repro.core.assign import maybe_compile
     from repro.core.packing import make_plan
+    from repro.engine import maybe_compile
     from repro.data.synthetic import make_batch
     from repro.dist.sharding import batch_specs, to_named
     from repro.launch.mesh import make_mesh
@@ -88,7 +94,8 @@ def main():
         print("top-10:", np.asarray(ids), np.round(np.asarray(scores), 3))
         return
 
-    plan = make_plan(cfg, world=world, per_device_batch=args.batch // world)
+    plan = make_plan(cfg, world=world, per_device_batch=args.batch // world,
+                     l2_bytes=args.l2_budget)
     model = WDLModel(cfg, plan)
     state = init_state(model, plan, jax.random.PRNGKey(0), mesh=mesh, axes=axes)
     serve = make_serve_step(model, plan, mesh, axes, args.batch,

@@ -12,9 +12,9 @@ import os
 def main():
     # registry import is jax-importing but backend-lazy: XLA_FLAGS set after
     # parsing (for --devices) is still honoured at first device query.
-    from repro.core.assign import AUTO_NAMES
-    from repro.engine.strategies import available_strategies
+    from repro.engine import AUTO_NAMES, available_strategies
 
+    names = available_strategies()
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="deepfm")
     ap.add_argument("--smoke", action="store_true")
@@ -23,10 +23,15 @@ def main():
     ap.add_argument("--devices", type=int, default=0, help="force host device count")
     ap.add_argument("--mesh", default="", help="e.g. 4x2 (data x model)")
     ap.add_argument("--strategy", default="picasso",
-                    choices=available_strategies() + AUTO_NAMES,
-                    help="EmbeddingEngine lookup strategy: a registry name "
-                         "broadcast to every packed group, or mixed/auto for "
-                         "the per-group cost-model assignment")
+                    choices=names + AUTO_NAMES,
+                    help="EmbeddingEngine lookup strategy: one of "
+                         f"{', '.join(names)} (broadcast to every packed "
+                         f"group), or {'/'.join(AUTO_NAMES)} for the "
+                         "per-group cost-model assignment")
+    ap.add_argument("--l2-budget", type=int, default=0, metavar="BYTES",
+                    help="host-memory L2 cache budget in bytes (0 disables; "
+                         ">0 budgets an L2 tier behind the hot tier, used by "
+                         "picasso_l2 and offered to the mixed/auto cost model)")
     ap.add_argument("--no-cache", action="store_true")
     ap.add_argument("--no-interleave", action="store_true")
     ap.add_argument("--no-packing", action="store_true")
@@ -72,9 +77,10 @@ def main():
                      enable_cache=not args.no_cache,
                      n_micro=args.n_micro,
                      hot_bytes=1 << 24 if args.smoke else 1 << 30,
+                     l2_bytes=args.l2_budget,
                      flush_iters=20, warmup_iters=10)
     model = WDLModel(cfg, plan)
-    from repro.core.assign import maybe_compile
+    from repro.engine import maybe_compile
     # per_device_batch=None: training issues plan.microbatch ids per step
     strategy = maybe_compile(plan, args.strategy, use_cache=not args.no_cache,
                              log=lambda s: print(f"[train] {s}"))

@@ -11,8 +11,8 @@ the candidate batch (batched-dot, never a loop).
 
 All sharding specs are built once at trace-construction time — nothing is
 recomputed per call. The lookup strategy is selectable per packed group via
-``ServeConfig.strategy``: a registry name (``'picasso' | 'hybrid' | 'ps'``)
-broadcasts, ``'mixed'``/``'auto'`` or a ``{gid: name}`` dict serves each
+``ServeConfig.strategy``: a registry name (``'picasso' | 'hybrid' | 'ps' |
+'picasso_l2'``) broadcasts, ``'mixed'``/``'auto'`` or a ``{gid: name}`` dict serves each
 group through its own assigned path (see ``repro.core.assign``), so serving
 benchmarks can A/B pure against mixed layouts.
 """
@@ -42,6 +42,7 @@ class ServeConfig:
     # registry name, 'mixed'/'auto', {gid: name}, or a StrategyAssignment
     strategy: Any = "picasso"
     use_cache: bool = True
+    use_l2: bool = True   # L2 host tier (plan-budgeted, behind L1)
 
 
 def _mesh_world(mesh, axes):
@@ -59,7 +60,7 @@ def make_serve_step(model: WDLModel, plan: PicassoPlan, mesh, axes, global_batch
     scfg = scfg or ServeConfig(strategy=strategy, use_cache=use_cache)
     world = _mesh_world(mesh, axes)
     engine = EmbeddingEngine(plan, axes, world, strategy=scfg.strategy,
-                             use_cache=scfg.use_cache)
+                             use_cache=scfg.use_cache, use_l2=scfg.use_l2)
 
     # specs are static per (model, plan): build them once, not per trace call
     especs = emb_specs(plan, axes)

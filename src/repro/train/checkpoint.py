@@ -32,6 +32,8 @@ def _flatten(tree) -> Dict[str, Any]:
     flat = {}
 
     def rec(prefix, node):
+        if node is None:  # optional subtree (e.g. a group without an L2 tier)
+            return
         if isinstance(node, dict):
             for k, v in node.items():
                 rec(f"{prefix}{_SEP}{k}" if prefix else str(k), v)
@@ -47,6 +49,8 @@ def _flatten(tree) -> Dict[str, Any]:
 
 def _unflatten_into(template, flat: Dict[str, Any]):
     def rec(prefix, node):
+        if node is None:
+            return None
         if isinstance(node, dict):
             return {k: rec(f"{prefix}{_SEP}{k}" if prefix else str(k), v)
                     for k, v in node.items()}
@@ -126,7 +130,12 @@ def restore_checkpoint(ckpt_dir: str, template: Any, step: Optional[int] = None,
     tflat = _flatten(template)
     out = {}
     for name, t in tflat.items():
-        info = manifest[name]
+        info = manifest.get(name)
+        if info is None:
+            raise KeyError(
+                f"checkpoint step_{step:08d} has no leaf {name!r} — the "
+                "template enables state the run that wrote it did not "
+                "(e.g. an L2 tier turned on after checkpointing)")
         raw = (d / info["file"]).read_bytes()
         if info["file"].endswith(".zst"):
             if dctx is None:

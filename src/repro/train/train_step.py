@@ -15,6 +15,9 @@ only owns the micro-batch pipeline, the dense optimizer, and metric psums.
 Strategies (paper §II-C / §IV baselines) are selected per packed group via
 ``TrainConfig.strategy``:
   'picasso' — the full system (packed + interleaved + HybridHash);
+  'picasso_l2' — picasso plus an L2 host-memory cache tier behind the hot
+      tier (requires a plan built with ``l2_bytes > 0``; emits per-tier
+      ``cache_hits/l1`` / ``cache_hits/l2`` counters);
   'hybrid'  — MP all_to_all per group but no HybridHash tier;
   'ps'      — PS-style all_gather+psum lookups (the fragmentary baseline);
   'mixed'/'auto' — per-group assignment from the plan (or compiled by the
@@ -55,6 +58,8 @@ class TrainConfig:
     strategy: Any = "picasso"
     pipeline_micro: bool = True    # D-Interleaving pipeline order
     use_cache: bool = True
+    use_l2: bool = True            # L2 host tier (only where the plan
+                                   # budgets l2_rows AND L1 is active)
     use_interleave: bool = True    # K-Interleaving waves (False: one wave)
     cache_update: str = "psum"     # 'psum' (exact) | 'stale' (Algorithm 1)
     flush_in_step: bool = True     # False: host calls make_flush_fn() instead
@@ -83,8 +88,8 @@ def make_train_step(model: WDLModel, plan: PicassoPlan, mesh, axes: Tuple[str, .
     # the strategy name is validated against the registry right here.
     engine = EmbeddingEngine(
         plan, axes, world, strategy=tcfg.strategy, use_cache=tcfg.use_cache,
-        use_interleave=tcfg.use_interleave, lr_emb=tcfg.lr_emb, eps=tcfg.eps,
-        cache_update=tcfg.cache_update)
+        use_l2=tcfg.use_l2, use_interleave=tcfg.use_interleave,
+        lr_emb=tcfg.lr_emb, eps=tcfg.eps, cache_update=tcfg.cache_update)
 
     # -------------------------------------------------------- loss closure
     def micro_loss(dense, pooled, mb):
@@ -181,7 +186,8 @@ def make_train_step(model: WDLModel, plan: PicassoPlan, mesh, axes: Tuple[str, .
 
 
 def make_flush_fn(plan: PicassoPlan, mesh, axes: Tuple[str, ...],
-                  cache_update: str = "psum", strategy: Any = None):
+                  cache_update: str = "psum", strategy: Any = None,
+                  use_cache: bool = True, use_l2: bool = True):
     """Host-scheduled HybridHash flush: jitted state -> state (called every
     ``plan.flush_iters`` steps by the trainer when flush_in_step=False).
     Keeps the flush collectives OUT of the hot train step.
@@ -191,12 +197,18 @@ def make_flush_fn(plan: PicassoPlan, mesh, axes: Tuple[str, ...],
     groups with a budgeted-but-unused cache (e.g. PS-assigned) are skipped,
     not clobbered with stale hot rows — and unassigned plans keep the
     original broadcast-'picasso' gating. Pass the training spec explicitly
-    only when it was never recorded on the plan."""
+    only when it was never recorded on the plan.
+
+    ``use_cache``/``use_l2`` MUST mirror the TrainConfig flags the train
+    engine ran with: a flush engine gating a tier ON that training gated OFF
+    would write a never-updated (stale) tier snapshot back over master rows
+    the training path has been updating directly."""
     world = _mesh_world(mesh, axes)
     if strategy is None:
         strategy = "mixed" if plan.strategy else "picasso"
     engine = EmbeddingEngine(plan, axes, world, cache_update=cache_update,
-                             strategy=strategy)
+                             strategy=strategy, use_cache=use_cache,
+                             use_l2=use_l2)
     especs = emb_specs(plan, axes)
 
     def wrapped(state):

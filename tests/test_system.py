@@ -36,13 +36,17 @@ def _setup(mesh1, axes, arch="deepfm", **plan_kw):
 def test_loss_decreases_on_learnable_task(mesh1, axes):
     cfg, state, step = _setup(mesh1, axes)
     losses = []
-    for i, batch in zip(range(40), batch_stream(cfg, GB, seed=0, learnable=True)):
+    # 100 steps, not 40: XLA-CPU reduction ordering is nondeterministic, and
+    # over a 40-step horizon the adagrad trajectory's run-to-run spread was
+    # as large as the learning signal (observed end/start ratios 0.80-1.02
+    # across identical runs). At 100 steps the signal dominates (0.79-0.90).
+    for i, batch in zip(range(100), batch_stream(cfg, GB, seed=0, learnable=True)):
         state, m = step(state, _put(mesh1, axes, batch))
         losses.append(float(m["loss"]))
     assert np.isfinite(losses).all()
     # medians: a single adagrad spike in either window must not flip the test
-    first, last = np.median(losses[:10]), np.median(losses[-10:])
-    assert last < first * 0.98, (first, last)
+    first, last = np.median(losses[:10]), np.median(losses[-20:])
+    assert last < first * 0.95, (first, last)
 
 
 def test_checkpoint_resume_exact(mesh1, axes, tmp_path):
