@@ -14,7 +14,7 @@ from repro.configs import get_config
 from repro.configs.paper_models import din, dlrm
 from repro.train.train_step import TrainConfig
 
-from benchmarks.common import bench_train_ips, emit
+from benchmarks.common import bench_replan_ips, bench_train_ips, emit
 
 GB = 128
 
@@ -44,12 +44,20 @@ def run(smoke: bool = False):
         # behind the hot tier, exercised end-to-end incl. the two-tier flush
         l2 = bench_train_ips(cfg, gb, TrainConfig(strategy="picasso_l2"),
                              iters=iters, l2_bytes=1 << 18)
+        # adaptive replanning: warm steps under 'auto', then one full
+        # harvest -> recompile -> migrate -> rebuild cycle; the halved L2
+        # envelope forces a tier-resize migration so the row exercises the
+        # whole runtime path on every CI run
+        rep = bench_replan_ips(cfg, gb, iters=iters, l2_bytes=1 << 18,
+                               replan_l2_bytes=1 << 17)
         speedup = ps["us_per_call"] / pic["us_per_call"]
         emit(f"throughput/{name}/picasso", pic["us_per_call"], f"ips={pic['ips']:.0f}")
         emit(f"throughput/{name}/ps", ps["us_per_call"], f"ips={ps['ips']:.0f}")
         emit(f"throughput/{name}/mixed", mix["us_per_call"], f"ips={mix['ips']:.0f}")
         emit(f"throughput/{name}/picasso_l2", l2["us_per_call"],
              f"ips={l2['ips']:.0f}")
+        emit(f"throughput/{name}/auto+replan", rep["us_per_call"],
+             f"ips={rep['ips']:.0f},rev={rep['rev']},migrated={rep['migrated']}")
         emit(f"throughput/{name}/speedup", 0.0, f"x{speedup:.2f}")
         if not smoke:
             # paper §II-C intermediate baseline: MP routing, but neither

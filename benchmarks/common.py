@@ -73,5 +73,54 @@ def bench_train_ips(cfg: WDLConfig, gb: int, tcfg: Optional[TrainConfig] = None,
             "hits": int(m["cache_hits"]), "overflow": int(m["overflow"])}
 
 
+def bench_replan_ips(cfg: WDLConfig, gb: int, iters: int = 5,
+                     warm_steps: int = 6,
+                     replan_hot_bytes: Optional[int] = None,
+                     replan_l2_bytes: Optional[int] = None,
+                     **plan_kw) -> Dict[str, float]:
+    """The 'auto+replan' row: train under the auto (cost model) assignment,
+    then run one full replan cycle — harvest the measured FCounter, recompile
+    budgets + assignment, migrate live state, rebuild the jitted step — and
+    time the post-replan plan revision. ``replan_hot_bytes``/``replan_l2_bytes``
+    retune the tier envelopes at replan time (pass values different from the
+    plan's to force a migration, exercising the full path)."""
+    from repro.runtime import Replanner
+
+    mesh = mesh1()
+    world = int(mesh.devices.size)
+    plan_kw.setdefault("hot_bytes", 1 << 16)
+    plan_kw.setdefault("flush_iters", 10)
+    plan_kw.setdefault("warmup_iters", 5)
+    plan = make_plan(cfg, world=world, per_device_batch=gb // world, **plan_kw)
+    model = WDLModel(cfg, plan)
+    state = init_state(model, plan, jax.random.PRNGKey(0), mesh=mesh, axes=AXES)
+    step, _ = make_train_step(model, plan, mesh, AXES, gb,
+                              TrainConfig(strategy="auto"))
+    batch = make_batch(cfg, gb, np.random.default_rng(0))
+    batch = jax.device_put(batch, to_named(mesh, batch_specs(batch, AXES)))
+    rp = Replanner(plan, mesh, AXES, strategy="auto",
+                   hot_bytes=replan_hot_bytes, l2_bytes=replan_l2_bytes)
+    for _ in range(warm_steps):
+        state, m = step(state, batch)
+        rp.observe(m)
+    out = rp.maybe_replan(state, step=warm_steps)
+    migrated = int(out is not None)
+    if out is not None:
+        plan, state = out
+        step, _ = make_train_step(model, plan, mesh, AXES, gb,
+                                  TrainConfig(strategy="mixed"))
+    state, m = step(state, batch)  # compile + warm the (possibly new) step
+    state, m = step(state, batch)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        state, m = step(state, batch)
+        jax.block_until_ready(m["loss"])
+        ts.append(time.perf_counter() - t0)
+    us = float(np.median(ts) * 1e6)
+    return {"us_per_call": us, "ips": gb / (us / 1e6),
+            "migrated": migrated, "rev": int(plan.rev)}
+
+
 def emit(name: str, us: float, derived: str) -> None:
     print(f"{name},{us:.1f},{derived}", flush=True)

@@ -36,6 +36,33 @@ echo "$bench_out" | grep -q "/mixed" \
     || { echo "ci.sh: bench smoke missing the 'mixed' strategy row" >&2; exit 1; }
 echo "$bench_out" | grep -q "/picasso_l2" \
     || { echo "ci.sh: bench smoke missing the 'picasso_l2' strategy row" >&2; exit 1; }
+# the adaptive-replanning row (harvest -> recompile -> migrate -> rebuild)
+# must run — and actually migrate — on every CI pass
+echo "$bench_out" | grep -q "/auto+replan.*migrated=1" \
+    || { echo "ci.sh: bench smoke missing a migrated 'auto+replan' row" >&2; exit 1; }
+
+echo "== tier-1: replan smoke =="
+# a short training run that triggers >=1 live plan migration (the halved L2
+# envelope guarantees a tier resize at the first replan) and keeps learning
+# across it: loss must decrease from the first logged window to the last
+replan_out=$(python -m repro.launch.train --arch deepfm --smoke --steps 120 \
+    --global-batch 64 --strategy picasso_l2 --l2-budget 65536 \
+    --replan-iters 40 --replan-l2-bytes 32768 --learnable \
+    --lr-emb 0.1 --lr-dense 3e-3 --log-every 1)
+echo "$replan_out" | grep -v "^  step" >&2   # replan events, not 120 loss lines
+echo "$replan_out" | grep -q "plan rev 0 -> 1" \
+    || { echo "ci.sh: replan smoke never migrated (no 'plan rev 0 -> 1' event)" >&2; exit 1; }
+REPLAN_OUT="$replan_out" python - <<'PY'
+import os, re, statistics as st
+losses = [float(m) for m in re.findall(r"loss=([0-9.]+)", os.environ["REPLAN_OUT"])]
+assert len(losses) >= 60, f"too few logged losses: {len(losses)}"
+# same criterion test_system validated against XLA-CPU run-to-run noise:
+# pre-convergence median (steps 1-10) vs the converged tail (last 20)
+first, last = st.median(losses[:10]), st.median(losses[-20:])
+assert last < first * 0.95, \
+    f"loss did not decrease across the replan: {first:.4f} -> {last:.4f}"
+print(f"replan smoke: loss {first:.4f} -> {last:.4f} across >=1 migration")
+PY
 
 echo "== tier-1: docs sync =="
 # every registry strategy must be documented in README.md +

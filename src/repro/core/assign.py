@@ -326,24 +326,36 @@ AUTO_NAMES = ("mixed", "auto")
 
 
 def maybe_compile(plan: PicassoPlan, spec: "StrategySpec", *,
+                  stats: Optional[Dict[int, np.ndarray]] = None,
                   per_device_batch: Optional[int] = None,
-                  use_cache: bool = True, log=None) -> "StrategySpec":
+                  use_cache: bool = True,
+                  overrides: Optional[Mapping[Union[int, str], str]] = None,
+                  log=None) -> "StrategySpec":
     """Launcher-side 'mixed'/'auto' handling: compile the assignment once,
     record it on the plan (so every engine built from the plan — train step,
     host flush, serve — sees the same mixing), and optionally log it.
     Any other spec passes through untouched.
 
+    ``stats`` is the optional gid -> measured FCounter counts map: the
+    compile-time call passes None (structural prior); the runtime Replanner
+    passes the harvested live counters so the re-mix scores *measured* skew
+    (the full stats path: harvest -> revise_plan -> maybe_compile(stats=)).
     ``per_device_batch`` must match the id volume the engine actually issues
     per step: leave it None (-> ``plan.microbatch``) for training, pass the
     per-shard batch for serving (no micro pipeline there). ``use_cache``
     must match the engine flag so the model never credits a disabled tier.
+    ``overrides`` forwards user ``{gid_or_glob: name}`` pins.
     """
     if isinstance(spec, str) and spec in AUTO_NAMES:
-        asg = compile_assignment(plan, per_device_batch=per_device_batch,
+        asg = compile_assignment(plan, stats=stats,
+                                 per_device_batch=per_device_batch,
+                                 overrides=overrides,
                                  enable_cache=use_cache)
         apply_assignment(plan, asg)
         if log is not None:
-            log(f"strategy assignment (cost model):\n{asg.describe()}")
+            src = "measured skew" if stats else "cost model"
+            log(f"strategy assignment ({src}, plan rev {plan.rev}):\n"
+                f"{asg.describe()}")
     return spec
 
 StrategySpec = Union[str, Dict[int, str], "StrategyAssignment"]

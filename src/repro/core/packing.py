@@ -11,6 +11,7 @@ warm-up frequency statistics to a ``PicassoPlan`` the engine executes.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -71,6 +72,19 @@ class PicassoPlan:
     cache_rows: Dict[int, int]       # gid -> hot-storage rows (0 = no cache)
     flush_iters: int = 100
     warmup_iters: int = 100
+    # ---- plan revision ----------------------------------------------------
+    # A plan is a *versioned* artifact, not a compile-once constant: the
+    # runtime Replanner (repro.runtime) recompiles tier budgets and the
+    # strategy assignment from measured FCounter skew and hands live state
+    # across revisions (embedding.state.migrate_state). ``rev`` counts
+    # revisions of one structural plan (groups / capacity / interleave /
+    # microbatch never change across revisions — only cache_rows, l2_rows,
+    # and strategy do); ``hot_bytes``/``l2_bytes`` record the byte budgets
+    # the current tier split was computed from, so a re-budget without an
+    # explicit override re-splits the same envelope by measured mass.
+    rev: int = 0
+    hot_bytes: int = 0
+    l2_bytes: int = 0
     # gid -> L2 host-memory tier rows (0 = no L2). The L2 tier sits *behind*
     # the hot tier: it only ever participates for groups that also have a
     # cache_rows budget, and the flush keeps the two key sets disjoint
@@ -280,22 +294,49 @@ def plan_interleave(groups: Sequence[PackedGroup], n_groups: Optional[int] = Non
     return [sorted(b) for b in buckets if b]
 
 
+def _budget_weights(groups: Sequence[PackedGroup],
+                    stats: Optional[Dict[int, np.ndarray]] = None
+                    ) -> Dict[int, float]:
+    """Per-group tier-budget weight: measured traffic volume when FCounter
+    ``stats`` are given (total lookups served x dim — the byte volume the
+    tier can actually absorb), else the structural ``vparam`` prior.
+
+    Falls back to vparam wholesale when stats are missing or empty for every
+    group (a cold counter carries no signal), so a warm-start replan before
+    any step behaves exactly like the compile-time split.
+    """
+    if stats:
+        w = {g.gid: float(np.asarray(stats[g.gid], np.float64).sum()) * g.dim
+             for g in groups if g.gid in stats}
+        if len(w) == len(list(groups)) and sum(w.values()) > 0:
+            return w
+    return {g.gid: g.vparam for g in groups}
+
+
 def plan_cache(
     groups: Sequence[PackedGroup],
     hot_bytes: int,
     world: int,
     dtype_bytes: int = 4,
+    stats: Optional[Dict[int, np.ndarray]] = None,
 ) -> Dict[int, int]:
-    """Split the hot-storage budget across packed groups ∝ vparam share.
+    """Split the hot-storage budget across packed groups ∝ vparam share —
+    or, with measured FCounter ``stats``, ∝ measured lookup mass x dim
+    (the runtime re-budget path: skew the tier toward the groups that are
+    actually being queried, not the ones the structural prior expected).
 
     Returns rows per group, padded to a multiple of 8 (sublane) with a small
     floor so tiny-but-hot tables (e.g. vocab<=64 fields queried every sample)
-    are always resident.
+    are always resident. A non-positive ``hot_bytes`` drops the tier outright
+    (no floor): that is how a runtime re-budget turns the cache path off.
     """
-    total_v = sum(g.vparam for g in groups) or 1.0
+    if hot_bytes <= 0:
+        return {g.gid: 0 for g in groups}
+    weights = _budget_weights(groups, stats)
+    total_v = sum(weights.values()) or 1.0
     out: Dict[int, int] = {}
     for g in groups:
-        budget = hot_bytes * (g.vparam / total_v)
+        budget = hot_bytes * (weights[g.gid] / total_v)
         rows = int(budget / ((g.dim + 1) * dtype_bytes))  # +1 for adagrad acc
         tiny = sum(t.vocab for t in g.tables if t.vocab <= 64)
         rows = max(rows, tiny, 8)
@@ -311,8 +352,12 @@ def plan_l2(
     l2_bytes: int,
     cache_rows: Dict[int, int],
     dtype_bytes: int = 4,
+    stats: Optional[Dict[int, np.ndarray]] = None,
 ) -> Dict[int, int]:
-    """Split the L2 host-memory budget across packed groups ∝ vparam share.
+    """Split the L2 host-memory budget across packed groups ∝ vparam share —
+    or ∝ measured lookup mass x dim when FCounter ``stats`` are given (the
+    same re-budget rule as ``plan_cache``, so one replan re-splits both
+    tiers consistently).
 
     The L2 tier backs the hot tier with host (CPU/pinned) memory, so its
     budget is typically 10-100x ``hot_bytes``. Per group the tier is capped
@@ -321,14 +366,15 @@ def plan_l2(
     dead memory), and rounded down to the 8-row sublane multiple. Groups
     without a hot-tier budget get no L2: the tier sits strictly behind L1.
     """
-    total_v = sum(g.vparam for g in groups) or 1.0
+    weights = _budget_weights(groups, stats)
+    total_v = sum(weights.values()) or 1.0
     out: Dict[int, int] = {}
     for g in groups:
         h1 = cache_rows.get(g.gid, 0)
         if l2_bytes <= 0 or h1 <= 0:
             out[g.gid] = 0
             continue
-        budget = l2_bytes * (g.vparam / total_v)
+        budget = l2_bytes * (weights[g.gid] / total_v)
         rows = int(budget / ((g.dim + 1) * dtype_bytes))  # +1 for adagrad acc
         rows = min(rows, max(g.rows - h1, 0))
         out[g.gid] = (rows // 8) * 8
@@ -375,4 +421,60 @@ def make_plan(
         flush_iters=flush_iters,
         warmup_iters=warmup_iters,
         l2_rows=l2_rows,
+        hot_bytes=hot_bytes if enable_cache else 0,
+        l2_bytes=l2_bytes if enable_cache else 0,
+    )
+
+
+def revise_plan(
+    plan: PicassoPlan,
+    stats: Optional[Dict[int, np.ndarray]] = None,
+    *,
+    hot_bytes: Optional[int] = None,
+    l2_bytes: Optional[int] = None,
+    enable_cache: bool = True,
+) -> PicassoPlan:
+    """Recompile the plan's *revisable* decisions into revision ``rev+1``.
+
+    The structural plan — groups, all_to_all capacities, interleave waves,
+    micro-batch — is carried over untouched (it derives from the config and
+    mesh, which do not change at runtime). What gets recompiled is the tier
+    split: ``cache_rows``/``l2_rows`` are re-budgeted by ``plan_cache``/
+    ``plan_l2`` with the measured FCounter ``stats`` (∝ measured lookup
+    mass) instead of the structural warm prior.
+
+    ``hot_bytes``/``l2_bytes``: byte envelopes for the re-split; ``None``
+    re-splits the envelope recorded on the plan (``plan.hot_bytes`` /
+    ``plan.l2_bytes``) — pass an explicit value to retune tier *capacity*
+    at runtime (HugeCTR-style), including 0 to drop a tier.
+
+    ``enable_cache=False`` (the engine runs with ``use_cache=False``)
+    zeroes both tiers like ``make_plan``.
+
+    The returned plan carries **no strategy assignment**: callers re-run
+    ``repro.core.assign.compile_assignment(new_plan, stats=...)`` so the
+    strategy mix is scored against the *new* budgets, then record it with
+    ``apply_assignment``. ``repro.runtime.Replanner`` packages that loop,
+    plus the live-state migration between revisions.
+    """
+    hb = int(plan.hot_bytes if hot_bytes is None else hot_bytes)
+    lb = int(plan.l2_bytes if l2_bytes is None else l2_bytes)
+    if enable_cache:
+        cache_rows = plan_cache(plan.groups, hb, plan.world, stats=stats)
+        l2_rows = plan_l2(plan.groups, lb, cache_rows, stats=stats)
+    else:
+        cache_rows = {g.gid: 0 for g in plan.groups}
+        l2_rows = {g.gid: 0 for g in plan.groups}
+    # dataclasses.replace: any future PicassoPlan field is carried over by
+    # construction instead of silently resetting to its default here
+    return dataclasses.replace(
+        plan,
+        capacity=dict(plan.capacity),
+        interleave=[list(w) for w in plan.interleave],
+        cache_rows=cache_rows,
+        l2_rows=l2_rows,
+        rev=plan.rev + 1,
+        hot_bytes=hb,
+        l2_bytes=lb,
+        strategy={},  # deliberately unassigned: callers re-compile vs stats
     )

@@ -32,7 +32,18 @@ class Prefetcher:
         for item in self.gen:
             if self._stop:
                 return
-            self.q.put(self.put_fn(item))
+            out = self.put_fn(item)
+            # bounded put that stays responsive to close(): a blocking
+            # q.put() on a full queue would never observe _stop and the
+            # worker thread would hang forever after close()
+            while not self._stop:
+                try:
+                    self.q.put(out, timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            if self._stop:
+                return
             self.stats["produced"] += 1
 
     def __iter__(self):
@@ -49,8 +60,19 @@ class Prefetcher:
                 return self.backup
             raise StopIteration
 
-    def close(self):
+    def close(self, join_timeout_s: float = 5.0):
+        """Stop the worker and reap it: raise the stop flag, then drain the
+        queue until the (possibly put-blocked) worker observes the flag and
+        exits. Idempotent; the thread is daemonic, so a generator stuck
+        inside ``next()`` past the timeout cannot wedge interpreter exit."""
         self._stop = True
+        deadline = time.monotonic() + join_timeout_s
+        while self._thread.is_alive() and time.monotonic() < deadline:
+            try:  # make room so a blocked put() can complete and re-check
+                self.q.get_nowait()
+            except queue.Empty:
+                pass
+            self._thread.join(timeout=0.05)
 
 
 def device_put_stream(gen: Iterator, mesh, specs_fn: Callable, depth: int = 2

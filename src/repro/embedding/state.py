@@ -8,18 +8,19 @@ plans without an L2 budget keep the exact pre-L2 state structure (sharding
 specs, checkpoints, and donation all line up with older runs).
 
 On a real TPU deployment the L2 leaves are *intended* to live in pinned host
-memory (``memory_kind='pinned_host'``): ``pin_l2_to_host`` is the
-experimental placement hook, but the jitted step shardings do not carry
-memory kinds yet, so the repro keeps the tier as ordinary replicated arrays
-— the math is identical, only the placement differs (see its docstring and
-ROADMAP for the remaining follow-up).
+memory (``memory_kind='pinned_host'``): ``pin_l2_to_host`` is the placement
+hook, wired into both launchers behind ``--pin-l2``. The jitted step
+shardings do not carry memory kinds yet, so the repro keeps the tier as
+ordinary replicated arrays — the math is identical, only the placement
+differs (see its docstring and ROADMAP for that remaining limitation).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Optional
+from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.packed_embedding import CacheState, init_cache
 from repro.core.packing import PackedGroup, PicassoPlan
@@ -84,8 +85,9 @@ def abstract_embedding_state(plan: PicassoPlan, dtype=jnp.float32) -> Dict[int, 
 def pin_l2_to_host(state: Any, mesh=None) -> Any:
     """Best effort: move every L2 tier leaf to pinned host memory.
 
-    EXPERIMENTAL placement utility, not yet wired into the launchers (see
-    ROADMAP). On backends that expose ``memory_kind='pinned_host'`` the L2
+    Wired into both launchers behind ``--pin-l2`` (the trainer re-applies it
+    after every replan migration). On backends that expose
+    ``memory_kind='pinned_host'`` the L2
     leaves are re-placed replicated-over-``mesh`` in host memory (so the
     mesh-wide replication the sharding specs declare is preserved — this
     requires ``mesh``; without one, or on backends without host memory kinds
@@ -118,3 +120,181 @@ def pin_l2_to_host(state: Any, mesh=None) -> Any:
     if isinstance(state, dict):
         return {k: move(v) for k, v in state.items()}
     return move(state)
+
+
+# ---------------------------------------------------------------------------
+# plan-revision state migration (repro.runtime replanning loop)
+# ---------------------------------------------------------------------------
+
+
+def tier_gates(plan: PicassoPlan, gid: int, *, use_cache: bool = True,
+               use_l2: bool = True) -> Tuple[bool, bool]:
+    """(cache_on, l2_on) for one group — the exact gating rule the engine
+    applies (strategy class attrs x plan budgets x engine flags), recomputed
+    from the plan's recorded assignment. Groups without a recorded strategy
+    default to 'picasso', mirroring ``make_flush_fn``'s broadcast default.
+    """
+    # lazy import: engine.strategies imports this module (EmbeddingState)
+    from repro.engine.strategies import get_strategy
+
+    cls = get_strategy(plan.strategy.get(gid, "picasso"))
+    cache_on = bool(use_cache and cls.uses_cache
+                    and plan.cache_rows.get(gid, 0) > 0)
+    l2_on = bool(use_l2 and cache_on and cls.uses_l2
+                 and plan.l2_rows.get(gid, 0) > 0)
+    return cache_on, l2_on
+
+
+def _np_tier(st) -> CacheState:
+    return CacheState(*(np.asarray(jax.device_get(x)) for x in st))
+
+
+def _np_write_back(w: np.ndarray, acc: np.ndarray, tier: CacheState) -> None:
+    """Owner write-back of a replicated tier into the (host-copy) master
+    arrays: authoritative tier rows + optimizer slots land on their row ids.
+    Sentinel keys (>= rows_padded, i.e. empty slots) are skipped."""
+    keys = np.asarray(tier.keys)
+    mine = keys < w.shape[0]
+    w[keys[mine]] = np.asarray(tier.rows)[mine].astype(w.dtype)
+    acc[keys[mine]] = np.asarray(tier.acc)[mine].astype(acc.dtype)
+
+
+def _np_empty_tier(h: int, d: int, rows_padded: int, dtype) -> CacheState:
+    return CacheState(keys=np.full((h,), rows_padded, np.int32),
+                      rows=np.zeros((h, d), dtype),
+                      acc=np.zeros((h, 1), dtype))
+
+
+def _np_load_tier(w: np.ndarray, acc: np.ndarray, keys: np.ndarray,
+                  rows_padded: int, dtype) -> CacheState:
+    tier = _np_empty_tier(keys.shape[0], w.shape[1], rows_padded, dtype)
+    tier.keys[:] = keys
+    mine = keys < rows_padded
+    tier.rows[mine] = w[keys[mine]].astype(dtype)
+    tier.acc[mine] = acc[keys[mine]].astype(dtype)
+    return tier
+
+
+def _rank_tier_keys(counts: np.ndarray, h1: int, h2: int, rows_padded: int
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """Top-(h1+h2) row ids by measured frequency, split hottest-h1 / next-h2
+    (the host-side analogue of the two-tier flush ranking). Rows with zero
+    counts never enter a tier (sentinel instead), matching ``flush_cache``'s
+    ``tvals > 0`` guard."""
+    h = h1 + h2
+    c = np.asarray(counts).astype(np.int64, copy=False).reshape(-1)
+    order = np.argsort(-c, kind="stable")[:h]
+    ranked = np.where(c[order] > 0, order, rows_padded)
+    if ranked.shape[0] < h:  # tier larger than the table (degenerate)
+        ranked = np.concatenate(
+            [ranked, np.full((h - ranked.shape[0],), rows_padded, np.int64)])
+    keys1 = np.sort(ranked[:h1]).astype(np.int32)
+    keys2 = np.sort(ranked[h1:]).astype(np.int32)
+    return keys1, keys2
+
+
+def _migrate_group(group: PackedGroup, st: EmbeddingState,
+                   gates_old: Tuple[bool, bool], gates_new: Tuple[bool, bool],
+                   h1_new: int, h2_new: int, cache_update: str
+                   ) -> EmbeddingState:
+    """Move one group's live state onto new tier budgets/gating (host numpy).
+
+    1. In 'psum' mode, active tiers are authoritative for their rows between
+       flushes: write both back into the master shard first, so no update is
+       lost when the tier shrinks or disappears. ('stale' mode: the master
+       is already exact; tiers are read-only snapshots — no write-back.)
+    2. Re-rank tier residency from the measured FCounter: the hottest
+       ``h1_new`` rows seed the new L1 and the next ``h2_new`` the new L2
+       (disjoint, like the two-tier flush), loaded from the just-synced
+       master so rows and adagrad slots migrate together.
+    3. Master rows, optimizer slots, and FCounter mass are preserved exactly
+       (modulo the write-back, which *restores* authoritative values).
+    """
+    cache_on_old, l2_on_old = gates_old
+    cache_on_new, l2_on_new = gates_new
+    w = np.array(jax.device_get(st.w))      # mutable host copies
+    acc = np.array(jax.device_get(st.acc))
+    counts = np.asarray(jax.device_get(st.counts))
+    dtype = w.dtype
+    rows_padded = group.rows
+
+    if cache_update == "psum":
+        if cache_on_old:
+            _np_write_back(w, acc, _np_tier(st.cache))
+        if l2_on_old and st.l2 is not None:
+            _np_write_back(w, acc, _np_tier(st.l2))
+
+    keys1, keys2 = _rank_tier_keys(counts,
+                                   h1_new if cache_on_new else 0,
+                                   h2_new if l2_on_new else 0, rows_padded)
+    if cache_on_new:
+        cache = _np_load_tier(w, acc, keys1, rows_padded, dtype)
+    else:  # allocated (plan budgets rows) but inert under the new strategy
+        cache = _np_empty_tier(h1_new, group.dim, rows_padded, dtype)
+    l2: Optional[CacheState] = None
+    if h2_new > 0:
+        l2 = (_np_load_tier(w, acc, keys2, rows_padded, dtype) if l2_on_new
+              else _np_empty_tier(h2_new, group.dim, rows_padded, dtype))
+    return EmbeddingState(w=w, acc=acc, counts=counts, cache=cache, l2=l2)
+
+
+def migrate_state(old_plan: PicassoPlan, new_plan: PicassoPlan, state: Any, *,
+                  use_cache: bool = True, use_l2: bool = True,
+                  cache_update: str = "psum") -> Any:
+    """Carry live embedding state from ``old_plan`` to ``new_plan``.
+
+    The two plans must be revisions of one structural plan (same gids, same
+    packed rows/dims — ``revise_plan`` guarantees this); what may differ is
+    ``cache_rows``/``l2_rows`` and the per-group strategy assignment.
+
+    Per group:
+
+    - **no-change pass-through** — identical tier shapes *and* identical
+      gating return the group's arrays untouched (bitwise: a replan that
+      recompiles to the same plan is a no-op);
+    - otherwise the group is migrated on host (``_migrate_group``): 'psum'
+      tiers are written back so every master row and adagrad slot survives
+      exactly, then the new tiers are re-seeded with the measured top-(H1+H2)
+      rows split hottest-H1 -> L1 / next-H2 -> L2.
+
+    ``use_cache``/``use_l2``/``cache_update`` MUST mirror the engine flags
+    the state was trained under (same contract as ``make_flush_fn``).
+    Accepts the full train/serve state dict (``{"emb": ...}``) or the bare
+    per-group emb dict; returns the same shape of structure. Migrated groups
+    come back as host (numpy) arrays — callers re-place them on the mesh
+    (``repro.runtime.Replanner`` does) before stepping.
+    """
+    if isinstance(state, dict) and "emb" in state:
+        return {**state, "emb": migrate_state(
+            old_plan, new_plan, state["emb"], use_cache=use_cache,
+            use_l2=use_l2, cache_update=cache_update)}
+
+    old_gids = sorted(g.gid for g in old_plan.groups)
+    new_gids = sorted(g.gid for g in new_plan.groups)
+    if old_gids != new_gids:
+        raise ValueError(
+            f"migrate_state needs revisions of one structural plan; group "
+            f"sets differ: {old_gids} vs {new_gids}")
+    out: Dict[str, EmbeddingState] = {}
+    for g in new_plan.groups:
+        og = old_plan.group(g.gid)
+        if (og.rows, og.dim) != (g.rows, g.dim):
+            raise ValueError(
+                f"g{g.gid}: packed shape changed across revisions "
+                f"({og.rows}x{og.dim} -> {g.rows}x{g.dim}); only tier "
+                "budgets and strategy may change")
+        h_old = (old_plan.cache_rows.get(g.gid, 0),
+                 old_plan.l2_rows.get(g.gid, 0))
+        h_new = (new_plan.cache_rows.get(g.gid, 0),
+                 new_plan.l2_rows.get(g.gid, 0))
+        gates_old = tier_gates(old_plan, g.gid, use_cache=use_cache,
+                               use_l2=use_l2)
+        gates_new = tier_gates(new_plan, g.gid, use_cache=use_cache,
+                               use_l2=use_l2)
+        st = state[str(g.gid)]
+        if h_old == h_new and gates_old == gates_new:
+            out[str(g.gid)] = st  # bitwise pass-through
+        else:
+            out[str(g.gid)] = _migrate_group(g, st, gates_old, gates_new,
+                                             h_new[0], h_new[1], cache_update)
+    return out

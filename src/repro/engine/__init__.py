@@ -14,7 +14,7 @@ from repro.core.assign import (AUTO_NAMES, GroupScore, StrategyAssignment,
                                apply_assignment, compile_assignment,
                                estimate_l2_gain, estimate_skew, maybe_compile,
                                resolve_assignment)
-from repro.engine.engine import EmbeddingEngine, EngineContext
+from repro.engine.engine import EmbeddingEngine, EngineContext, export_stats
 from repro.engine.strategies import (HybridStrategy, LookupStrategy,
                                      PicassoL2Strategy, PicassoStrategy,
                                      PSStrategy, available_strategies,
@@ -36,6 +36,7 @@ __all__ = [
     "compile_assignment",
     "estimate_l2_gain",
     "estimate_skew",
+    "export_stats",
     "get_strategy",
     "maybe_compile",
     "register_strategy",

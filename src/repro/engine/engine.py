@@ -67,6 +67,7 @@ from typing import Any, Dict, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import packed_embedding as pe
 from repro.core.assign import StrategySpec, resolve_assignment
@@ -77,6 +78,22 @@ from repro.embedding.state import EmbeddingState
 from repro.engine.strategies import LookupStrategy, get_strategy
 
 Axes = Union[str, Tuple[str, ...]]
+
+
+def export_stats(plan: PicassoPlan, emb: Dict[str, EmbeddingState]
+                 ) -> Dict[int, np.ndarray]:
+    """Harvest the live FCounter off-device: ``gid -> counts`` (full logical
+    array, host numpy).
+
+    This is the measurement half of the replanning loop (repro.runtime):
+    the counts feed ``compile_assignment(plan, stats=...)`` and the
+    stats-driven ``plan_cache``/``plan_l2`` re-budget. Reading a sharded
+    array through ``device_get`` materializes the logical (mesh-wide) value,
+    so the result is shard-layout independent — exactly what the planners
+    expect. Call between steps (off the jitted hot path).
+    """
+    return {g.gid: np.asarray(jax.device_get(emb[str(g.gid)].counts))
+            for g in plan.groups}
 
 
 class EngineContext(NamedTuple):
@@ -160,6 +177,11 @@ class EmbeddingEngine:
             {k for n in names for k in get_strategy(n).extra_metric_keys}))
         self.waves = (plan.interleave if use_interleave
                       else [[g.gid for g in plan.groups]])
+
+    def export_stats(self, emb: Dict[str, EmbeddingState]
+                     ) -> Dict[int, np.ndarray]:
+        """Module-level ``export_stats`` bound to this engine's plan."""
+        return export_stats(self.plan, emb)
 
     @property
     def metric_keys(self) -> Tuple[str, ...]:

@@ -32,6 +32,10 @@ def main():
                     help="host-memory L2 cache budget in bytes (0 disables; "
                          ">0 budgets an L2 tier behind the hot tier for the "
                          "scoring path)")
+    ap.add_argument("--pin-l2", action="store_true",
+                    help="place L2 host-tier leaves in pinned host memory "
+                         "(pin_l2_to_host; no-op on backends without "
+                         "pinned_host, e.g. the CPU rig)")
     args = ap.parse_args()
 
     if args.devices:
@@ -98,6 +102,9 @@ def main():
                      l2_bytes=args.l2_budget)
     model = WDLModel(cfg, plan)
     state = init_state(model, plan, jax.random.PRNGKey(0), mesh=mesh, axes=axes)
+    if args.pin_l2:
+        from repro.embedding.state import pin_l2_to_host
+        state = pin_l2_to_host(state, mesh)
     serve = make_serve_step(model, plan, mesh, axes, args.batch,
                             scfg=serve_cfg(plan, args.batch // world))
     rng = np.random.default_rng(0)

@@ -32,10 +32,32 @@ def main():
                     help="host-memory L2 cache budget in bytes (0 disables; "
                          ">0 budgets an L2 tier behind the hot tier, used by "
                          "picasso_l2 and offered to the mixed/auto cost model)")
+    ap.add_argument("--replan-iters", type=int, default=0, metavar="N",
+                    help="adaptive replanning: every N steps harvest the live "
+                         "FCounter, recompile tier budgets + the strategy "
+                         "assignment from measured skew, and migrate state to "
+                         "the new plan revision (0 disables)")
+    ap.add_argument("--replan-hot-bytes", type=int, default=None,
+                    metavar="BYTES",
+                    help="hot-tier byte envelope for replan re-budgets "
+                         "(default: keep the plan's compile-time envelope; "
+                         "an explicit value retunes tier capacity at runtime)")
+    ap.add_argument("--replan-l2-bytes", type=int, default=None,
+                    metavar="BYTES",
+                    help="L2 byte envelope for replan re-budgets (default: "
+                         "keep the plan's compile-time envelope)")
+    ap.add_argument("--pin-l2", action="store_true",
+                    help="place L2 host-tier leaves in pinned host memory "
+                         "(pin_l2_to_host; no-op on backends without "
+                         "pinned_host, e.g. the CPU rig)")
     ap.add_argument("--no-cache", action="store_true")
     ap.add_argument("--no-interleave", action="store_true")
     ap.add_argument("--no-packing", action="store_true")
     ap.add_argument("--n-micro", type=int, default=None)
+    ap.add_argument("--learnable", action="store_true",
+                    help="synthetic stream with a learnable CTR signal "
+                         "(default: random labels) — smoke/CI runs assert "
+                         "loss decrease on this")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
@@ -43,6 +65,8 @@ def main():
     ap.add_argument("--lr-dense", type=float, default=1e-3)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.replan_iters < 0:
+        ap.error("--replan-iters must be >= 0 (0 disables replanning)")
 
     if args.devices:
         os.environ["XLA_FLAGS"] = (
@@ -57,8 +81,11 @@ def main():
     from repro.data.pipeline import device_put_stream
     from repro.data.synthetic import batch_stream
     from repro.dist.sharding import batch_specs
+    from repro.embedding.state import pin_l2_to_host
     from repro.launch.mesh import make_mesh
     from repro.models.wdl import WDLModel
+    from repro.runtime import Replanner, apply_plan_meta, plan_meta
+    from repro.train.checkpoint import load_checkpoint_meta
     from repro.train.fault_tolerance import Supervisor
     from repro.train.train_step import TrainConfig, init_state, make_train_step
 
@@ -79,37 +106,126 @@ def main():
                      hot_bytes=1 << 24 if args.smoke else 1 << 30,
                      l2_bytes=args.l2_budget,
                      flush_iters=20, warmup_iters=10)
-    model = WDLModel(cfg, plan)
+    if args.ckpt_dir:
+        # a checkpointed run may have replanned: revise the structural plan
+        # back to the checkpointed revision BEFORE shaping state/templates
+        meta = load_checkpoint_meta(args.ckpt_dir)
+        if meta is not None:
+            plan = apply_plan_meta(plan, meta)
+            print(f"[train] resumed plan rev {plan.rev} from checkpoint meta "
+                  f"(strategy: {sorted(set(plan.strategy.values()))})")
     from repro.engine import maybe_compile
-    # per_device_batch=None: training issues plan.microbatch ids per step
-    strategy = maybe_compile(plan, args.strategy, use_cache=not args.no_cache,
-                             log=lambda s: print(f"[train] {s}"))
-    tcfg = TrainConfig(strategy=strategy, use_cache=not args.no_cache,
-                       use_interleave=not args.no_interleave,
-                       lr_emb=args.lr_emb, lr_dense=args.lr_dense)
-    step_fn, _ = make_train_step(model, plan, mesh, axes, args.global_batch, tcfg)
+    if plan.strategy:
+        # the plan already carries an assignment (checkpoint meta) — 'mixed'
+        # makes every engine follow it instead of recompiling from priors
+        strategy = "mixed"
+    else:
+        # per_device_batch=None: training issues plan.microbatch ids per step
+        strategy = maybe_compile(plan, args.strategy,
+                                 use_cache=not args.no_cache,
+                                 log=lambda s: print(f"[train] {s}"))
+
+    def build_step(plan):
+        """(Re)build the jitted step against a plan revision."""
+        model = WDLModel(cfg, plan)
+        spec = "mixed" if plan.strategy else strategy
+        tcfg = TrainConfig(strategy=spec, use_cache=not args.no_cache,
+                           use_interleave=not args.no_interleave,
+                           lr_emb=args.lr_emb, lr_dense=args.lr_dense)
+        return model, tcfg, make_train_step(model, plan, mesh, axes,
+                                            args.global_batch, tcfg)[0]
+
+    model, tcfg, step_fn = build_step(plan)
     state = init_state(model, plan, jax.random.PRNGKey(args.seed), mesh=mesh, axes=axes)
+    if args.pin_l2:
+        state = pin_l2_to_host(state, mesh)
+
+    replanner = None
+    if args.replan_iters:
+        replanner = Replanner(
+            plan, mesh, axes, strategy=args.strategy,
+            hot_bytes=args.replan_hot_bytes, l2_bytes=args.replan_l2_bytes,
+            use_cache=not args.no_cache, cache_update=tcfg.cache_update,
+            log=lambda s: print(f"[train] replan {s}", flush=True))
 
     print(f"[train] {cfg.name}: {len(plan.groups)} packed groups, "
-          f"micro={plan.microbatch}, ilv={len(plan.interleave)} waves, world={world}")
+          f"micro={plan.microbatch}, ilv={len(plan.interleave)} waves, "
+          f"world={world}, plan rev={plan.rev}")
 
-    stream = device_put_stream(batch_stream(cfg, args.global_batch, seed=args.seed),
+    stream = device_put_stream(batch_stream(cfg, args.global_batch, seed=args.seed,
+                                            learnable=args.learnable),
                                mesh, lambda b: batch_specs(b, axes))
 
     def on_metrics(step, m):
+        if replanner is not None:
+            replanner.observe(m)
         if step % args.log_every == 0:
             print(f"  step {step:5d} loss={float(m['loss']):.4f} "
                   f"hits={int(m['cache_hits'])} ovf={int(m['overflow'])}", flush=True)
 
+    def next_boundary(step):
+        """Next replan step strictly after ``step`` (multiples of the knob)."""
+        ri = args.replan_iters
+        return min(args.steps, (step // ri + 1) * ri) if ri else args.steps
+
+    def do_replan(state, step):
+        """Harvest + recompile; on a real change, migrate + rebuild the step.
+        Returns (state, migrated?)."""
+        nonlocal plan, model, tcfg, step_fn
+        out = replanner.maybe_replan(state, step=step)
+        if out is None:
+            return state, False
+        plan, state = out
+        model, tcfg, step_fn = build_step(plan)
+        if args.pin_l2:
+            state = pin_l2_to_host(state, mesh)
+        return state, True
+
     if args.ckpt_dir:
         sup = Supervisor(args.ckpt_dir, ckpt_every=args.ckpt_every)
+        if replanner is not None or plan.rev > 0:
+            # keep the plan-revision sidecar on every checkpoint — including
+            # resumed runs that replan no further: dropping it would make the
+            # NEXT resume restore revision-shaped tiers into the seed-plan
+            # template (silent truncate/zero-pad)
+            sup.meta = plan_meta(plan)
         state, start = sup.maybe_restore(state)
-        state = sup.run(state, step_fn, stream, args.steps, start_step=start,
-                        on_metrics=on_metrics)
+        step = start
+        # known limitation: a failure-restore *inside* a segment replays the
+        # restored window without re-hitting an already-passed replan
+        # boundary (the plan itself stays consistent — post-migration
+        # checkpoints are written eagerly — but the replayed steps are folded
+        # into the Replanner's metric window a second time, and the next
+        # replan happens at the segment end rather than mid-replay)
+        while step < args.steps:
+            seg_end = next_boundary(step)
+            state = sup.run(state, step_fn, stream, seg_end, start_step=step,
+                            on_metrics=on_metrics)
+            step = seg_end
+            if replanner is not None and step < args.steps:
+                state, migrated = do_replan(state, step)
+                if migrated:
+                    # durable, plan-consistent restore point: a mid-segment
+                    # failure must not restore pre-migration tier shapes
+                    sup.meta = plan_meta(plan)
+                    sup.ckpt.save(step, state, meta=sup.meta)
+                    sup.ckpt.wait()
     else:
-        for i, batch in zip(range(args.steps), stream):
+        it = iter(stream)
+        for i in range(1, args.steps + 1):
+            try:
+                batch = next(it)
+            except StopIteration:  # stream ended/stalled: finish gracefully,
+                break              # matching the Supervisor path's semantics
             state, m = step_fn(state, batch)
-            on_metrics(i + 1, m)
+            on_metrics(i, m)
+            if (replanner is not None and i % args.replan_iters == 0
+                    and i < args.steps):
+                state, _ = do_replan(state, i)
+    if replanner is not None:
+        n_mig = sum(1 for e in replanner.events if e.migrated)
+        print(f"[train] replans: {len(replanner.events)} attempted, "
+              f"{n_mig} migrated, final plan rev={plan.rev}")
     print("[train] done")
 
 

@@ -1,0 +1,18 @@
+"""Runtime adaptation subsystem: the plan in motion.
+
+``repro.core`` compiles a ``PicassoPlan`` once from structural priors;
+``repro.runtime`` closes the loop at runtime — harvest the engine's live
+frequency statistics, recompile the plan's revisable decisions (tier
+budgets, per-group strategy mix), and migrate live training state across
+plan revisions. See ``replanner`` for the full loop contract.
+"""
+from repro.runtime.replanner import (ReplanEvent, Replanner, apply_plan_meta,
+                                     plan_delta, plan_meta)
+
+__all__ = [
+    "ReplanEvent",
+    "Replanner",
+    "apply_plan_meta",
+    "plan_delta",
+    "plan_meta",
+]

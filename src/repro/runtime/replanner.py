@@ -1,0 +1,289 @@
+"""Adaptive replanning runtime: close the measure -> recompile -> migrate loop.
+
+PICASSO's packing/caching decisions (paper §III) are frequency-driven, but a
+plan compiled once from the structural warm prior freezes a mis-sized hot
+tier or a wrong per-group strategy pick for the whole run — while access
+popularity drifts across the training window (Acun et al.) and systems like
+HugeCTR treat embedding-cache capacity as a runtime-tuned quantity. This
+module makes the plan a *versioned* artifact in motion:
+
+    every --replan-iters steps the trainer calls ``Replanner.maybe_replan``:
+      1. **harvest**  — pull the engine's live FCounter counts off-device
+         (``repro.engine.export_stats``) plus the window's ``overflow/*`` /
+         ``cache_hits/*`` metric sums (``observe``);
+      2. **recompile** — ``revise_plan`` re-budgets ``cache_rows``/``l2_rows``
+         from the measured mass (``plan_cache``/``plan_l2`` with ``stats=``)
+         and ``compile_assignment(plan, stats=...)`` re-mixes the per-group
+         strategy against measured skew -> plan revision ``rev+1``;
+      3. **migrate**  — if anything changed, ``embedding.state.migrate_state``
+         carries the live state across revisions (write-back, measured
+         top-(H1+H2) tier re-split, master rows / adagrad slots / FCounter
+         preserved exactly) and the state is re-placed on the mesh under the
+         new plan's sharding specs.
+
+    The *caller* then rebuilds the jitted step / flush fn against the new
+    plan (the Replanner is deliberately jit-free: it owns planning and state,
+    not tracing).
+
+A recompile that lands on an identical plan returns ``None`` — no migration,
+no rebuild, and training is bitwise-identical to never having replanned
+(pinned by tests/test_replan.py).
+
+Checkpoint contract: ``plan_meta(plan)`` is the JSON-serializable revision
+record (rev, tier budgets, strategy) the trainer persists next to the state
+(``save_checkpoint(..., meta=...)``); on resume ``apply_plan_meta`` revises
+the freshly-compiled structural plan back to the checkpointed revision
+*before* the state template is built, so restore sees matching tier shapes.
+The harvested FCounter itself rides in the state (``counts`` leaves), so a
+resumed run replans from exactly the statistics it had measured.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple, Union
+
+import jax
+import numpy as np
+
+from repro.core.assign import apply_assignment, compile_assignment, resolve_assignment
+from repro.core.packing import PicassoPlan, revise_plan
+from repro.dist.sharding import emb_specs, to_named
+from repro.embedding.state import migrate_state, tier_gates
+from repro.engine.engine import export_stats
+
+
+# ---------------------------------------------------------------------------
+# plan deltas + checkpoint meta
+# ---------------------------------------------------------------------------
+
+
+def plan_delta(old: PicassoPlan, new: PicassoPlan) -> Dict[int, str]:
+    """gid -> human-readable description of what changed between revisions.
+
+    Empty dict == the revision is a no-op (same tier budgets, same strategy
+    for every group): no migration and no step rebuild are needed.
+    """
+    changed: Dict[int, str] = {}
+    for g in new.groups:
+        h1o, h1n = old.cache_rows.get(g.gid, 0), new.cache_rows.get(g.gid, 0)
+        h2o, h2n = old.l2_rows.get(g.gid, 0), new.l2_rows.get(g.gid, 0)
+        so = old.strategy.get(g.gid, "picasso")
+        sn = new.strategy.get(g.gid, "picasso")
+        parts = []
+        if so != sn:
+            parts.append(f"{so}->{sn}")
+        if h1o != h1n:
+            parts.append(f"L1 {h1o}->{h1n}")
+        if h2o != h2n:
+            parts.append(f"L2 {h2o}->{h2n}")
+        if parts:
+            changed[g.gid] = " ".join(parts)
+    return changed
+
+
+def plan_meta(plan: PicassoPlan) -> Dict[str, Any]:
+    """JSON-serializable record of a plan revision (checkpoint sidecar).
+
+    Only the *revisable* decisions are recorded — groups/capacity/interleave
+    re-derive deterministically from the config and mesh via ``make_plan``;
+    what resume cannot re-derive is which revision the checkpointed state
+    was shaped by.
+    """
+    return {
+        "plan_rev": int(plan.rev),
+        "hot_bytes": int(plan.hot_bytes),
+        "l2_bytes": int(plan.l2_bytes),
+        "cache_rows": {str(gid): int(r) for gid, r in plan.cache_rows.items()},
+        "l2_rows": {str(gid): int(r) for gid, r in plan.l2_rows.items()},
+        "strategy": {str(gid): name for gid, name in plan.strategy.items()},
+    }
+
+
+def apply_plan_meta(plan: PicassoPlan, meta: Mapping[str, Any]) -> PicassoPlan:
+    """Revise a freshly-compiled structural ``plan`` back to a checkpointed
+    revision: tier budgets and strategy come from ``meta``, everything
+    structural from ``plan``. Call *before* building the state template so
+    restore sees the tier shapes the checkpoint was written with."""
+    gids = {g.gid for g in plan.groups}
+    meta_gids = {int(k) for k in meta.get("cache_rows", {})}
+    if meta_gids and meta_gids != gids:
+        raise ValueError(
+            f"checkpoint plan meta covers gids {sorted(meta_gids)} but the "
+            f"compiled plan has {sorted(gids)} — config/mesh changed under "
+            "a resumed run")
+    # dataclasses.replace: future PicassoPlan fields carry over structurally
+    return dataclasses.replace(
+        plan,
+        capacity=dict(plan.capacity),
+        interleave=[list(w) for w in plan.interleave],
+        cache_rows={int(k): int(v) for k, v in meta["cache_rows"].items()},
+        l2_rows={int(k): int(v) for k, v in meta["l2_rows"].items()},
+        rev=int(meta.get("plan_rev", 0)),
+        hot_bytes=int(meta.get("hot_bytes", plan.hot_bytes)),
+        l2_bytes=int(meta.get("l2_bytes", plan.l2_bytes)),
+        strategy={int(k): v for k, v in meta.get("strategy", {}).items()},
+    )
+
+
+# ---------------------------------------------------------------------------
+# the Replanner
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ReplanEvent:
+    """One replan attempt (kept in ``Replanner.events``; launchers log it)."""
+
+    step: int
+    old_rev: int
+    new_rev: int                  # == old_rev when the recompile was a no-op
+    changed: Dict[int, str]       # gid -> delta description (empty = no-op)
+    window: Dict[str, int]        # metric sums observed since the last replan
+
+    @property
+    def migrated(self) -> bool:
+        return bool(self.changed)
+
+    def describe(self) -> str:
+        w = " ".join(f"{k}={v}" for k, v in sorted(self.window.items()))
+        if not self.changed:
+            return (f"step {self.step}: plan rev {self.old_rev} unchanged "
+                    f"(recompile is a no-op){'  [' + w + ']' if w else ''}")
+        ch = "; ".join(f"g{gid}: {d}" for gid, d in sorted(self.changed.items()))
+        return (f"step {self.step}: plan rev {self.old_rev} -> {self.new_rev}, "
+                f"migrated {len(self.changed)} group(s) [{ch}]"
+                f"{'  [' + w + ']' if w else ''}")
+
+
+class Replanner:
+    """Owns the adaptive replanning loop for one training run.
+
+    Parameters
+    ----------
+    plan: the live plan (revision the engine currently executes). If it does
+        not yet carry a per-group strategy assignment, the ``strategy`` spec
+        is resolved and recorded — migration gating needs to know each
+        group's strategy class.
+    mesh/axes: where migrated state is re-placed (``emb_specs`` sharding).
+    strategy: the training strategy spec; ``'mixed'``/``'auto'`` lets every
+        replan re-mix from measured skew, any other spec is re-resolved
+        against each new revision (a broadcast name stays broadcast — the
+        replan then only retunes tier budgets).
+    hot_bytes/l2_bytes: byte envelopes for the re-budget; ``None`` re-splits
+        the envelope recorded on the plan. Pass explicit values to retune
+        tier capacity at runtime.
+    rebudget: ``False`` keeps ``cache_rows``/``l2_rows`` exactly (the replan
+        then only re-mixes strategy) — with pinned ``overrides`` this forces
+        the recompile to be a no-op, which the parity tests exploit.
+    use_cache/use_l2/cache_update: MUST mirror the TrainConfig flags the
+        train engine runs with (same contract as ``make_flush_fn``).
+    per_device_batch/overrides: forwarded to ``compile_assignment``.
+    """
+
+    def __init__(self, plan: PicassoPlan, mesh, axes, *,
+                 strategy: Any = "auto",
+                 hot_bytes: Optional[int] = None,
+                 l2_bytes: Optional[int] = None,
+                 rebudget: bool = True,
+                 use_cache: bool = True, use_l2: bool = True,
+                 cache_update: str = "psum",
+                 per_device_batch: Optional[int] = None,
+                 overrides: Optional[Mapping[Union[int, str], str]] = None,
+                 log: Optional[Callable[[str], None]] = None):
+        self.plan = plan
+        self.mesh = mesh
+        self.axes = axes
+        self.strategy = strategy
+        self.hot_bytes = hot_bytes
+        self.l2_bytes = l2_bytes
+        self.rebudget = rebudget
+        self.use_cache = use_cache
+        self.use_l2 = use_l2
+        self.cache_update = cache_update
+        self.per_device_batch = per_device_batch
+        self.overrides = overrides
+        self.log = log or (lambda s: None)
+        self.events: List[ReplanEvent] = []
+        self._window: Dict[str, Any] = {}  # device-scalar running sums
+        self._auto = isinstance(strategy, str) and strategy in ("mixed", "auto")
+        if not plan.strategy:
+            # record the run's assignment so tier gating (migration + the
+            # host flush) sees the same per-group strategy classes the train
+            # engine dispatches on
+            apply_assignment(plan, resolve_assignment(
+                plan, strategy, use_cache=use_cache))
+
+    # ------------------------------------------------------------- observe
+    def observe(self, metrics: Mapping[str, Any]) -> None:
+        """Fold one step's engine metrics into the current replan window
+        (``overflow*`` / ``cache_hits*`` counters).
+
+        The running sums stay as device scalars (an async add per step, no
+        host sync — ``int()`` here would block the dispatch pipeline every
+        step); they are materialized once per window in ``maybe_replan``.
+        """
+        for k, v in metrics.items():
+            if k.startswith("overflow") or k.startswith("cache_hits"):
+                self._window[k] = self._window.get(k, 0) + v
+
+    def _close_window(self) -> Dict[str, int]:
+        window = {k: int(v) for k, v in self._window.items()}
+        self._window = {}
+        return window
+
+    # -------------------------------------------------------------- replan
+    def _recompile(self, stats: Dict[int, np.ndarray]) -> PicassoPlan:
+        """Measured stats -> candidate plan revision (budgets + assignment)."""
+        new_plan = revise_plan(
+            self.plan, stats if self.rebudget else None,
+            hot_bytes=(self.hot_bytes if self.rebudget else self.plan.hot_bytes),
+            l2_bytes=(self.l2_bytes if self.rebudget else self.plan.l2_bytes),
+            enable_cache=self.use_cache)
+        if not self.rebudget:
+            # keep the current split bit-for-bit (only the strategy re-mixes)
+            new_plan.cache_rows = dict(self.plan.cache_rows)
+            new_plan.l2_rows = dict(self.plan.l2_rows)
+        if self._auto:
+            asg = compile_assignment(
+                new_plan, stats=stats,
+                per_device_batch=self.per_device_batch,
+                overrides=self.overrides, enable_cache=self.use_cache)
+            apply_assignment(new_plan, asg)
+        else:
+            apply_assignment(new_plan, resolve_assignment(
+                new_plan, self.strategy, use_cache=self.use_cache))
+        return new_plan
+
+    def maybe_replan(self, state: Dict[str, Any], step: int = -1
+                     ) -> Optional[Tuple[PicassoPlan, Dict[str, Any]]]:
+        """Harvest -> recompile -> (maybe) migrate.
+
+        Returns ``None`` when the recompiled revision equals the live plan
+        (state untouched — training continues bitwise-identically on the
+        existing jitted step), else ``(new_plan, new_state)`` with the state
+        migrated and re-placed on the mesh; the caller must rebuild its
+        jitted step/flush against ``new_plan`` and adopt both.
+        """
+        stats = export_stats(self.plan, state["emb"])
+        new_plan = self._recompile(stats)
+        changed = plan_delta(self.plan, new_plan)
+        window = self._close_window()
+        if not changed:
+            ev = ReplanEvent(step=step, old_rev=self.plan.rev,
+                             new_rev=self.plan.rev, changed={}, window=window)
+            self.events.append(ev)
+            self.log(ev.describe())
+            return None
+        migrated = migrate_state(self.plan, new_plan, state,
+                                 use_cache=self.use_cache, use_l2=self.use_l2,
+                                 cache_update=self.cache_update)
+        shardings = to_named(self.mesh, emb_specs(new_plan, self.axes))
+        new_state = {**migrated,
+                     "emb": jax.device_put(migrated["emb"], shardings)}
+        ev = ReplanEvent(step=step, old_rev=self.plan.rev,
+                         new_rev=new_plan.rev, changed=changed, window=window)
+        self.events.append(ev)
+        self.log(ev.describe())
+        self.plan = new_plan
+        return new_plan, new_state

@@ -63,8 +63,16 @@ def _unflatten_into(template, flat: Dict[str, Any]):
     return rec("", template)
 
 
-def save_checkpoint(ckpt_dir: str, step: int, state: Any, keep: int = 3) -> str:
-    """Atomic checkpoint: write to tmp, fsync, rename."""
+def save_checkpoint(ckpt_dir: str, step: int, state: Any, keep: int = 3,
+                    meta: Optional[Dict[str, Any]] = None) -> str:
+    """Atomic checkpoint: write to tmp, fsync, rename.
+
+    ``meta`` is an optional JSON-serializable sidecar stored in the manifest
+    — the trainer records the live plan revision there
+    (``repro.runtime.plan_meta``) so a resume can rebuild the *current*
+    (possibly replanned) plan before shaping the restore template, instead
+    of the seed plan the run started from.
+    """
     ckpt_dir = Path(ckpt_dir)
     ckpt_dir.mkdir(parents=True, exist_ok=True)
     final = ckpt_dir / f"step_{step:08d}"
@@ -79,7 +87,10 @@ def save_checkpoint(ckpt_dir: str, step: int, state: Any, keep: int = 3) -> str:
         with open(tmp / fn, "wb") as f:
             f.write(cctx.compress(payload) if cctx else payload)
         manifest[name] = {"file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype)}
-    (tmp / "manifest.json").write_text(json.dumps({"step": step, "leaves": manifest}))
+    doc = {"step": step, "leaves": manifest}
+    if meta is not None:
+        doc["meta"] = meta
+    (tmp / "manifest.json").write_text(json.dumps(doc))
     if final.exists():
         shutil.rmtree(final)
     os.rename(tmp, final)
@@ -112,6 +123,22 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     steps = sorted(int(p.name.split("_")[1]) for p in d.iterdir()
                    if p.name.startswith("step_") and (p / "manifest.json").exists())
     return steps[-1] if steps else None
+
+
+def load_checkpoint_meta(ckpt_dir: str, step: Optional[int] = None
+                         ) -> Optional[Dict[str, Any]]:
+    """The ``meta`` sidecar of a checkpoint (``None`` if absent — e.g. a
+    checkpoint written before replanning existed, or with replanning off).
+
+    Callers that revise the plan from it must do so *before* building the
+    restore template: tier shapes in the stored state follow the plan
+    revision recorded here, not the seed plan.
+    """
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        return None
+    d = Path(ckpt_dir) / f"step_{step:08d}"
+    return json.loads((d / "manifest.json").read_text()).get("meta")
 
 
 def restore_checkpoint(ckpt_dir: str, template: Any, step: Optional[int] = None,
@@ -169,12 +196,14 @@ class AsyncCheckpointer:
         self._thread: Optional[threading.Thread] = None
         self.last_path: Optional[str] = None
 
-    def save(self, step: int, state: Any) -> None:
+    def save(self, step: int, state: Any,
+             meta: Optional[Dict[str, Any]] = None) -> None:
         self.wait()
         host_state = jax.device_get(state)  # synchronous snapshot, async write
 
         def work():
-            self.last_path = save_checkpoint(self.ckpt_dir, step, host_state, self.keep)
+            self.last_path = save_checkpoint(self.ckpt_dir, step, host_state,
+                                             self.keep, meta=meta)
 
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()

@@ -43,6 +43,10 @@ class Supervisor:
         self.ckpt_every = ckpt_every
         self.max_retries = max_retries
         self.failures = 0
+        # JSON sidecar written with every checkpoint (the trainer keeps this
+        # pointing at the live plan revision — repro.runtime.plan_meta — and
+        # refreshes it after each replan/migration)
+        self.meta: Optional[Dict[str, Any]] = None
 
     def maybe_restore(self, template: Any, shardings: Any = None
                       ) -> Tuple[Any, int]:
@@ -73,7 +77,7 @@ class Supervisor:
                 if on_metrics is not None:
                     on_metrics(step, metrics)
                 if step % self.ckpt_every == 0:
-                    self.ckpt.save(step, state)
+                    self.ckpt.save(step, state, meta=self.meta)
             except StopIteration:
                 break
             except Exception as e:  # noqa: BLE001 — anything = node failure

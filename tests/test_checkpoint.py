@@ -7,7 +7,8 @@ import pytest
 
 from repro.core.packed_embedding import CacheState
 from repro.train.checkpoint import (AsyncCheckpointer, latest_step,
-                                    restore_checkpoint, save_checkpoint)
+                                    load_checkpoint_meta, restore_checkpoint,
+                                    save_checkpoint)
 from repro.train.fault_tolerance import Supervisor
 
 
@@ -58,6 +59,25 @@ def test_async_checkpointer(tmp_path):
     ck.save(3, _state())
     ck.wait()
     assert latest_step(str(tmp_path)) == 3
+
+
+def test_meta_sidecar_roundtrip(tmp_path):
+    """The plan-revision sidecar rides the manifest and comes back verbatim;
+    checkpoints without one read as None (backward compatible)."""
+    meta = {"plan_rev": 2, "cache_rows": {"0": 16}, "strategy": {"0": "ps"}}
+    save_checkpoint(str(tmp_path), 1, _state())            # no meta
+    save_checkpoint(str(tmp_path), 2, _state(), meta=meta)
+    assert load_checkpoint_meta(str(tmp_path), step=1) is None
+    assert load_checkpoint_meta(str(tmp_path), step=2) == meta
+    assert load_checkpoint_meta(str(tmp_path)) == meta     # latest
+    # async writer threads the sidecar through too
+    ck = AsyncCheckpointer(str(tmp_path))
+    ck.save(3, _state(), meta=meta)
+    ck.wait()
+    assert load_checkpoint_meta(str(tmp_path)) == meta
+    # restore is meta-agnostic
+    r, step = restore_checkpoint(str(tmp_path), _state(), step=2)
+    assert step == 2
 
 
 def test_supervisor_failure_resume(tmp_path):

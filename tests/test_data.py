@@ -48,6 +48,35 @@ def test_prefetcher_backup_on_straggle():
     pf.close()
 
 
+def test_prefetcher_close_with_full_queue_reaps_worker():
+    """A worker blocked on a full queue must observe close() and exit — the
+    old blocking q.put() would hang the thread forever after close()."""
+    def gen():
+        i = 0
+        while True:  # endless producer: guaranteed to fill the queue
+            yield i
+            i += 1
+
+    pf = Prefetcher(gen(), depth=2, timeout_s=0.5)
+    assert next(pf) == 0
+    deadline = time.monotonic() + 2.0  # let the worker block in put()
+    while pf.q.full() is False and time.monotonic() < deadline:
+        time.sleep(0.01)
+    pf.close()
+    assert not pf._thread.is_alive()
+    pf.close()  # idempotent
+
+
+def test_prefetcher_close_unblocks_immediately_when_idle():
+    def gen():
+        yield from range(3)
+
+    pf = Prefetcher(gen(), depth=8, timeout_s=0.5)
+    assert [next(pf) for _ in range(3)] == [0, 1, 2]
+    pf.close()
+    assert not pf._thread.is_alive()
+
+
 def test_neighbor_sampler_valid():
     g = synthetic_graph(500, 4000, d_feat=8, seed=1)
     rng = np.random.default_rng(0)

@@ -1,0 +1,313 @@
+"""Adaptive replanning runtime (repro.runtime + plan revision + migration).
+
+Pins the three contracts of the replanning loop:
+
+1. a recompile that lands on an identical plan is a *no-op*: training with
+   the Replanner in the loop is bitwise-equal to training without it;
+2. a forced tier-resize migration preserves every master row and optimizer
+   slot exactly while re-ranking tier residency by measured frequency;
+3. checkpoint round-trip of the plan revision: resume after a replan
+   rebuilds the *current* plan (rev, budgets, strategy), not the seed one,
+   and restores the state bitwise under it.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import FeatureField, InteractionSpec, WDLConfig
+from repro.core.assign import apply_assignment, resolve_assignment
+from repro.core.packing import make_plan, plan_cache, plan_l2, revise_plan
+from repro.data.synthetic import batch_stream
+from repro.dist.sharding import batch_specs, to_named
+from repro.embedding.state import migrate_state, tier_gates
+from repro.engine.engine import export_stats
+from repro.models.wdl import WDLModel
+from repro.runtime import (Replanner, apply_plan_meta, plan_delta, plan_meta)
+from repro.train.checkpoint import (load_checkpoint_meta, restore_checkpoint,
+                                    save_checkpoint)
+from repro.train.train_step import TrainConfig, init_state, make_train_step
+
+GB = 64
+PLAN_KW = dict(hot_bytes=1 << 14, l2_bytes=1 << 16, flush_iters=5,
+               warmup_iters=2)
+
+
+def _put(mesh, axes, batch):
+    return jax.device_put(batch, to_named(mesh, batch_specs(batch, axes)))
+
+
+def _setup(mesh1, axes, strategy="picasso_l2", **plan_kw):
+    cfg = get_config("deepfm", smoke=True)
+    kw = dict(PLAN_KW)
+    kw.update(plan_kw)
+    plan = make_plan(cfg, world=1, per_device_batch=GB, **kw)
+    model = WDLModel(cfg, plan)
+    state = init_state(model, plan, jax.random.PRNGKey(0), mesh=mesh1, axes=axes)
+    step, _ = make_train_step(model, plan, mesh1, axes, GB,
+                              TrainConfig(strategy=strategy))
+    return cfg, plan, model, state, step
+
+
+def _train(state, step, mesh1, axes, cfg, n, seed=3, hook=None):
+    stream = batch_stream(cfg, GB, seed=seed)
+    for i in range(n):
+        state, m = step(state, _put(mesh1, axes, next(stream)))
+        if hook is not None:
+            state, step = hook(i + 1, state, step, m)
+    return state
+
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------- revision
+
+
+def test_make_plan_records_budgets_and_rev():
+    cfg = get_config("deepfm", smoke=True)
+    plan = make_plan(cfg, world=1, per_device_batch=GB, **PLAN_KW)
+    assert plan.rev == 0
+    assert plan.hot_bytes == PLAN_KW["hot_bytes"]
+    assert plan.l2_bytes == PLAN_KW["l2_bytes"]
+    # cache disabled -> no envelope recorded (a replan must not resurrect it)
+    off = make_plan(cfg, world=1, per_device_batch=GB, enable_cache=False,
+                    hot_bytes=1 << 20)
+    assert off.hot_bytes == 0 and all(v == 0 for v in off.cache_rows.values())
+
+
+def test_revise_plan_bumps_rev_and_keeps_structure():
+    cfg = get_config("deepfm", smoke=True)
+    plan = make_plan(cfg, world=1, per_device_batch=GB, **PLAN_KW)
+    new = revise_plan(plan)  # same envelopes, no stats -> same split
+    assert new.rev == 1
+    assert new.cache_rows == plan.cache_rows and new.l2_rows == plan.l2_rows
+    assert new.capacity == plan.capacity
+    assert new.microbatch == plan.microbatch
+    assert [g.gid for g in new.groups] == [g.gid for g in plan.groups]
+    assert not plan_delta(plan, new)
+    # explicit envelope retune -> tier resize -> a real delta
+    shrunk = revise_plan(plan, l2_bytes=1 << 15)
+    assert shrunk.rev == 1 and plan_delta(plan, shrunk)
+
+
+def test_stats_driven_budget_follows_measured_mass():
+    """Two same-vparam groups: measured traffic skewed onto one of them must
+    pull the tier budget toward it (the re-budget rule the Replanner runs)."""
+    fields = [FeatureField("a", 4096, 8, max_len=1, pooling="sum"),
+              FeatureField("b", 4096, 16, max_len=1, pooling="sum")]
+    cfg = WDLConfig(name="t", fields=tuple(fields), n_dense=0,
+                    interactions=(InteractionSpec("fm"),), mlp_dims=(8,))
+    plan = make_plan(cfg, world=1, per_device_batch=16, hot_bytes=1 << 13)
+    gids = sorted(g.gid for g in plan.groups)
+    assert len(gids) == 2
+    hot, cold = gids[0], gids[1]
+    stats = {hot: np.full(plan.group(hot).rows, 50, np.int32),
+             cold: np.zeros(plan.group(cold).rows, np.int32)}
+    rows = plan_cache(plan.groups, 1 << 13, plan.world, stats=stats)
+    base = plan_cache(plan.groups, 1 << 13, plan.world)
+    assert rows[hot] >= base[hot]   # measured mass pulls budget in
+    assert rows[cold] <= base[cold]
+    # all-cold stats carry no signal -> identical to the structural prior
+    cold_stats = {g.gid: np.zeros(g.rows, np.int32) for g in plan.groups}
+    assert plan_cache(plan.groups, 1 << 13, plan.world,
+                      stats=cold_stats) == base
+    assert plan_l2(plan.groups, 1 << 15, rows,
+                   stats=cold_stats) == plan_l2(plan.groups, 1 << 15, rows)
+
+
+# ------------------------------------------------- no-op replan == bitwise
+
+
+def test_replan_noop_is_bitwise_equal(mesh1, axes):
+    """Forced-identical recompiles (budgets frozen, strategy pinned) through
+    the full Replanner path leave training bitwise-identical to a run that
+    never replans — migration is a no-op on a no-change plan."""
+    cfg, plan_a, _, state_a, step_a = _setup(mesh1, axes)
+    state_a = _train(state_a, step_a, mesh1, axes, cfg, 12)
+
+    cfg, plan_b, model_b, state_b, step_b = _setup(mesh1, axes)
+    rp = Replanner(plan_b, mesh1, axes, strategy="picasso_l2",
+                   rebudget=False)  # freeze budgets; broadcast pin strategy
+
+    def hook(i, state, step, m):
+        rp.observe(m)
+        if i % 4 == 0:
+            out = rp.maybe_replan(state, step=i)
+            assert out is None, plan_delta(plan_b, rp._recompile(
+                export_stats(plan_b, state["emb"])))
+        return state, step
+
+    state_b = _train(state_b, step_b, mesh1, axes, cfg, 12, hook=hook)
+    assert len(rp.events) == 3 and not any(e.migrated for e in rp.events)
+    # the metric harvest saw live counters (tier warm after the first flush)
+    assert rp.events[-1].window["cache_hits"] > 0
+    _leaves_equal(state_a, state_b)
+
+
+def test_migrate_state_passthrough_identity(mesh1, axes):
+    """migrate_state across a no-change revision returns the very same
+    arrays (no copy, no device round-trip)."""
+    cfg, plan, _, state, step = _setup(mesh1, axes)
+    state = _train(state, step, mesh1, axes, cfg, 6)
+    new = revise_plan(plan)
+    new.cache_rows, new.l2_rows = dict(plan.cache_rows), dict(plan.l2_rows)
+    apply_assignment(plan, resolve_assignment(plan, "picasso_l2"))
+    apply_assignment(new, resolve_assignment(new, "picasso_l2"))
+    out = migrate_state(plan, new, state)
+    for k, st in state["emb"].items():
+        assert out["emb"][k] is st
+
+
+# -------------------------------------------------- forced-resize migration
+
+
+def test_forced_resize_migration_preserves_master_exactly(mesh1, axes):
+    """Shrink L1 + L2 after real training steps: every master row and
+    adagrad slot must survive exactly (via the write-back of the
+    authoritative 'psum' tiers), the FCounter must be untouched, and the new
+    tiers must hold exactly the measured top-H1 / next-H2 rows."""
+    cfg, plan, _, state, step = _setup(mesh1, axes)
+    apply_assignment(plan, resolve_assignment(plan, "picasso_l2"))
+    state = _train(state, step, mesh1, axes, cfg, 9)
+
+    new = revise_plan(plan, hot_bytes=1 << 10, l2_bytes=1 << 15)
+    apply_assignment(new, resolve_assignment(new, "picasso_l2"))
+    assert plan_delta(plan, new)
+
+    gid = plan.groups[0].gid
+    g = plan.group(gid)
+    st = state["emb"][str(gid)]
+    # expected master = old master overwritten with the authoritative tiers
+    w_exp = np.array(jax.device_get(st.w))
+    acc_exp = np.array(jax.device_get(st.acc))
+    for tier in (st.cache, st.l2):
+        keys = np.asarray(jax.device_get(tier.keys))
+        mine = keys < g.rows
+        w_exp[keys[mine]] = np.asarray(jax.device_get(tier.rows))[mine]
+        acc_exp[keys[mine]] = np.asarray(jax.device_get(tier.acc))[mine]
+    counts = np.asarray(jax.device_get(st.counts))
+
+    out = migrate_state(plan, new, state)
+    mg = out["emb"][str(gid)]
+    np.testing.assert_array_equal(np.asarray(mg.w), w_exp)
+    np.testing.assert_array_equal(np.asarray(mg.acc), acc_exp)
+    np.testing.assert_array_equal(np.asarray(mg.counts), counts)
+
+    # tier residency re-ranked by measured frequency, disjoint split
+    h1, h2 = new.cache_rows[gid], new.l2_rows[gid]
+    assert (h1, h2) != (plan.cache_rows[gid], plan.l2_rows[gid])
+    order = np.argsort(-counts.astype(np.int64), kind="stable")
+    ranked = order[counts[order] > 0][:h1 + h2]
+    exp1 = np.sort(ranked[:h1])
+    exp2 = np.sort(ranked[h1:])
+    k1 = np.asarray(mg.cache.keys)
+    k2 = np.asarray(mg.l2.keys)
+    np.testing.assert_array_equal(k1[k1 < g.rows], exp1)
+    np.testing.assert_array_equal(k2[k2 < g.rows], exp2)
+    assert not set(k1[k1 < g.rows]) & set(k2[k2 < g.rows])
+    # tier payloads loaded from the just-synced master (rows + adagrad)
+    np.testing.assert_array_equal(np.asarray(mg.cache.rows)[k1 < g.rows],
+                                  w_exp[k1[k1 < g.rows]])
+    np.testing.assert_array_equal(np.asarray(mg.l2.acc)[k2 < g.rows],
+                                  acc_exp[k2[k2 < g.rows]])
+
+
+def test_migration_to_uncached_strategy_writes_back(mesh1, axes):
+    """Re-assigning a cached group to 'hybrid' must not lose the tier's
+    authoritative updates: they land in the master, tiers come back empty."""
+    cfg, plan, _, state, step = _setup(mesh1, axes)
+    apply_assignment(plan, resolve_assignment(plan, "picasso_l2"))
+    state = _train(state, step, mesh1, axes, cfg, 7)
+    gid = plan.groups[0].gid
+    g = plan.group(gid)
+    st = state["emb"][str(gid)]
+    keys = np.asarray(jax.device_get(st.cache.keys))
+    live = keys[keys < g.rows]
+    assert live.size  # the hot tier actually held rows
+    tier_rows = np.asarray(jax.device_get(st.cache.rows))[keys < g.rows]
+
+    new = revise_plan(plan)
+    new.cache_rows, new.l2_rows = dict(plan.cache_rows), dict(plan.l2_rows)
+    apply_assignment(new, {g2.gid: "hybrid" for g2 in plan.groups})
+    assert tier_gates(new, gid) == (False, False)
+    out = migrate_state(plan, new, state)
+    mg = out["emb"][str(gid)]
+    np.testing.assert_array_equal(np.asarray(mg.w)[live], tier_rows)
+    assert (np.asarray(mg.cache.keys) == g.rows).all()   # cleared
+    assert (np.asarray(mg.l2.keys) == g.rows).all()
+
+
+def test_replanner_live_migration_trains_on(mesh1, axes):
+    """Full loop: Replanner harvest -> recompile (L2 envelope halved) ->
+    migrate -> rebuilt step keeps training with per-tier hits flowing."""
+    cfg, plan, model, state, step = _setup(mesh1, axes)
+    rp = Replanner(plan, mesh1, axes, strategy="picasso_l2",
+                   l2_bytes=1 << 15)
+    state = _train(state, step, mesh1, axes, cfg, 8)
+    out = rp.maybe_replan(state, step=8)
+    assert out is not None
+    plan2, state2 = out
+    assert plan2.rev == 1 and rp.events[-1].migrated
+    step2, _ = make_train_step(model, plan2, mesh1, axes, GB,
+                               TrainConfig(strategy="mixed"))
+    state2 = _train(state2, step2, mesh1, axes, cfg, 4, seed=11)
+    assert np.isfinite(float(jax.device_get(state2["emb"]["0"].w).sum()))
+
+
+# ------------------------------------------------- checkpoint plan-rev meta
+
+
+def test_checkpoint_roundtrip_restores_current_plan(mesh1, axes, tmp_path):
+    """Resume after a replan must rebuild the *replanned* plan (rev 1 tier
+    shapes + strategy) from the checkpoint meta, restore bitwise, and step."""
+    cfg, plan, model, state, step = _setup(mesh1, axes)
+    rp = Replanner(plan, mesh1, axes, strategy="picasso_l2",
+                   l2_bytes=1 << 15)
+    state = _train(state, step, mesh1, axes, cfg, 8)
+    plan2, state2 = rp.maybe_replan(state, step=8)
+    save_checkpoint(str(tmp_path), 8, state2, meta=plan_meta(plan2))
+
+    # ---- simulated fresh process: recompile the structural seed plan ------
+    meta = load_checkpoint_meta(str(tmp_path))
+    assert meta is not None and meta["plan_rev"] == 1
+    seed_plan = make_plan(cfg, world=1, per_device_batch=GB, **PLAN_KW)
+    assert seed_plan.l2_rows != plan2.l2_rows  # seed would mis-shape tiers
+    planR = apply_plan_meta(seed_plan, meta)
+    assert planR.rev == 1
+    assert planR.cache_rows == plan2.cache_rows
+    assert planR.l2_rows == plan2.l2_rows
+    assert planR.strategy == plan2.strategy
+
+    modelR = WDLModel(cfg, planR)
+    template = init_state(modelR, planR, jax.random.PRNGKey(0), mesh=mesh1,
+                          axes=axes)
+    restored, s = restore_checkpoint(str(tmp_path), template)
+    assert s == 8
+    _leaves_equal(jax.device_get(state2), restored)
+    # the harvested FCounter rides in the state: a resumed replan sees the
+    # measured skew, not a cold counter
+    assert np.asarray(restored["emb"]["0"].counts).sum() > 0
+    stepR, _ = make_train_step(modelR, planR, mesh1, axes, GB,
+                               TrainConfig(strategy="mixed"))
+    _train(restored, stepR, mesh1, axes, cfg, 2, seed=12)
+
+
+def test_checkpoint_meta_absent_is_none(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"x": jnp.zeros((2,))})
+    assert load_checkpoint_meta(str(tmp_path)) is None
+    assert load_checkpoint_meta(str(tmp_path / "nope")) is None
+
+
+def test_apply_plan_meta_rejects_mismatched_groups():
+    cfg = get_config("deepfm", smoke=True)
+    plan = make_plan(cfg, world=1, per_device_batch=GB, **PLAN_KW)
+    meta = plan_meta(plan)
+    meta["cache_rows"] = {"0": 8, "7": 8}  # gid 7 does not exist
+    with pytest.raises(ValueError, match="config/mesh changed"):
+        apply_plan_meta(plan, meta)
