@@ -1,0 +1,97 @@
+"""Microbench of the fused sparse hot-path kernels in isolation: fused
+(Pallas; interpreted off-TPU) vs the pure-jnp reference for gather+pool
+(forward + VJP), dedup+adagrad scatter-update, and the cache tier probe.
+
+On the CPU rig the fused rows time the *interpreted* kernels — uninteresting
+absolute numbers (interpret mode is a correctness soak, not a fast path) but
+they populate the perf trajectory and pin the harness; on TPU the same rows
+time the real kernels. The reference rows are the production CPU path.
+
+``--smoke`` shrinks sizes/iters for CI.
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+from benchmarks.common import emit, time_fn
+
+
+def _gather_pool_args(rng, n, d, n_bags):
+    rows_u = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    inv = jnp.asarray(rng.integers(0, n, n).astype(np.int32))
+    w = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    seg = np.sort(np.concatenate(
+        [np.arange(n_bags), rng.integers(0, n_bags, n - n_bags)]))
+    return rows_u, inv, w, jnp.asarray(seg.astype(np.int32))
+
+
+def bench_gather_pool(n=512, d=32, n_bags=64, iters=3):
+    rng = np.random.default_rng(0)
+    rows_u, inv, w, seg = _gather_pool_args(rng, n, d, n_bags)
+    for fused in (False, True):
+        fn = jax.jit(lambda r: ops.gather_pool(r, inv, w, seg, n_bags,
+                                               fused=fused))
+        us = time_fn(fn, rows_u, iters=iters)
+        emit(f"kernels/gather_pool/{'fused' if fused else 'ref'}", us,
+             f"ips={n / (us / 1e6):.0f}")
+        g = jax.jit(jax.grad(lambda r: jnp.sum(
+            ops.gather_pool(r, inv, w, seg, n_bags, fused=fused) ** 2)))
+        us = time_fn(g, rows_u, iters=iters)
+        emit(f"kernels/gather_pool_vjp/{'fused' if fused else 'ref'}", us,
+             f"ips={n / (us / 1e6):.0f}")
+
+
+def bench_dedup_adagrad(rows=2048, d=32, m=512, hot=64, iters=3):
+    """Duplicate-heavy: m grads over `hot` distinct rows (the skew head)."""
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.normal(size=(rows, d)).astype(np.float32))
+    acc = jnp.asarray(np.abs(rng.normal(size=(rows, 1))).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, hot, m).astype(np.int32))
+    g = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+    valid = jnp.asarray(rng.random(m) < 0.9)
+    for fused in (False, True):
+        fn = jax.jit(lambda w, a: ops.dedup_adagrad(w, a, idx, g, valid,
+                                                    0.05, 1e-8, fused=fused))
+        us = time_fn(fn, w, acc, iters=iters)
+        emit(f"kernels/dedup_adagrad/{'fused' if fused else 'ref'}", us,
+             f"ips={m / (us / 1e6):.0f}")
+
+
+def bench_tier_probe(n=512, h=256, d=32, iters=3):
+    rng = np.random.default_rng(2)
+    keys = jnp.asarray(np.sort(rng.choice(10 * h, h, replace=False))
+                       .astype(np.int32))
+    rows = jnp.asarray(rng.normal(size=(h, d)).astype(np.float32))
+    uniq = jnp.sort(jnp.asarray(rng.integers(0, 10 * h, n).astype(np.int32)))
+    uvalid = jnp.asarray(np.arange(n) < int(0.9 * n))
+    for fused in (False, True):
+        fn = jax.jit(lambda u: ops.tier_probe(u, uvalid, keys, rows,
+                                              fused=fused))
+        us = time_fn(fn, uniq, iters=iters)
+        emit(f"kernels/tier_probe/{'fused' if fused else 'ref'}", us,
+             f"ips={n / (us / 1e6):.0f}")
+
+
+def run(smoke: bool = False):
+    if smoke:
+        bench_gather_pool(n=128, d=16, n_bags=16, iters=2)
+        bench_dedup_adagrad(rows=256, d=16, m=128, hot=16, iters=2)
+        bench_tier_probe(n=128, h=64, d=16, iters=2)
+    else:
+        bench_gather_pool()
+        bench_dedup_adagrad()
+        bench_tier_probe()
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="small sizes (CI)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke)
+    from benchmarks.common import write_bench_json
+    write_bench_json()

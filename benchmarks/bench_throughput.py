@@ -50,8 +50,20 @@ def run(smoke: bool = False):
         # whole runtime path on every CI run
         rep = bench_replan_ips(cfg, gb, iters=iters, l2_bytes=1 << 18,
                                replan_l2_bytes=1 << 17)
+        # fused sparse hot path (gather+pool VJP, dedup+adagrad scatter,
+        # tier probes) vs the reference chain above: on TPU this times the
+        # real Pallas kernels, off-TPU the interpreted soak path — either
+        # way the row pins the fused path end-to-end in the trajectory
+        fus = bench_train_ips(cfg, gb,
+                              TrainConfig(strategy="picasso",
+                                          use_fused_kernels=True),
+                              iters=iters)
         speedup = ps["us_per_call"] / pic["us_per_call"]
         emit(f"throughput/{name}/picasso", pic["us_per_call"], f"ips={pic['ips']:.0f}")
+        emit(f"throughput/{name}/picasso+fused", fus["us_per_call"],
+             f"ips={fus['ips']:.0f}")
+        emit(f"throughput/{name}/fused_vs_ref", 0.0,
+             "x{:.2f}".format(pic["us_per_call"] / fus["us_per_call"]))
         emit(f"throughput/{name}/ps", ps["us_per_call"], f"ips={ps['ips']:.0f}")
         emit(f"throughput/{name}/mixed", mix["us_per_call"], f"ips={mix['ips']:.0f}")
         emit(f"throughput/{name}/picasso_l2", l2["us_per_call"],
@@ -80,3 +92,5 @@ if __name__ == "__main__":
     args = ap.parse_args()
     print("name,us_per_call,derived")
     run(smoke=args.smoke)
+    from benchmarks.common import write_bench_json
+    write_bench_json()

@@ -1,8 +1,10 @@
 """Shared benchmark harness utilities (CPU-scaled paper-table analogues)."""
 from __future__ import annotations
 
+import json
+import pathlib
 import time
-from typing import Callable, Dict, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import numpy as np
@@ -122,5 +124,42 @@ def bench_replan_ips(cfg: WDLConfig, gb: int, iters: int = 5,
             "migrated": migrated, "rev": int(plan.rev)}
 
 
+# every emit() lands here too, so drivers can persist the run as one JSON
+# artifact (the repo-root perf trajectory: BENCH_<pr>.json)
+_ROWS: List[Dict[str, Any]] = []
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_5.json"
+
+
 def emit(name: str, us: float, derived: str) -> None:
+    # backend recorded per row: merged artifacts can mix runs from the CPU
+    # rig (interpreter timings) and TPU (real kernels) without mislabeling
+    _ROWS.append({"name": name, "us_per_call": float(us), "derived": derived,
+                  "backend": str(jax.default_backend())})
     print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def write_bench_json(path: Optional[pathlib.Path] = None) -> pathlib.Path:
+    """Persist every row emitted so far to the repo-root trajectory file.
+
+    Called by the drivers (``benchmarks.run``, ``bench_throughput --smoke``,
+    ``bench_kernels``) after their suites finish. Rows MERGE by name with an
+    existing artifact (this run's value wins), so separate driver processes
+    compose into one trajectory file instead of clobbering each other."""
+    path = pathlib.Path(path) if path else BENCH_JSON
+    rows: List[Dict[str, Any]] = []
+    if path.exists():
+        try:
+            rows = [r for r in json.loads(path.read_text()).get("rows", [])
+                    if isinstance(r, dict) and "name" in r]
+        except (json.JSONDecodeError, AttributeError):
+            rows = []
+    fresh = {r["name"] for r in _ROWS}
+    rows = [r for r in rows if r["name"] not in fresh] + _ROWS
+    payload = {
+        "bench": "PR5: fused sparse hot path (fused vs reference kernels)",
+        "rows": rows,
+    }
+    path.write_text(json.dumps(payload, indent=1) + "\n")
+    print(f"[bench] wrote {len(_ROWS)} rows ({len(rows)} total) to {path}",
+          flush=True)
+    return path

@@ -13,15 +13,17 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
-                    help="comma list: throughput,ablation,packing,interleave,cache,fields,scaling")
+                    help="comma list: throughput,kernels,ablation,packing,"
+                         "interleave,cache,fields,scaling")
     args = ap.parse_args()
 
     from benchmarks import (bench_ablation, bench_cache, bench_fields,
-                            bench_interleave, bench_packing, bench_scaling,
-                            bench_throughput)
+                            bench_interleave, bench_kernels, bench_packing,
+                            bench_scaling, bench_throughput, common)
 
     suites = {
         "throughput": bench_throughput.run,   # paper Tab. III / Fig. 10
+        "kernels": bench_kernels.run,         # fused sparse-kernel microbench
         "ablation": bench_ablation.run,       # paper Tab. IV
         "packing": bench_packing.run,         # paper Tab. V
         "interleave": bench_interleave.run,   # paper Fig. 14
@@ -39,6 +41,7 @@ def main() -> None:
             failed.append(name)
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
             traceback.print_exc(file=sys.stderr)
+    common.write_bench_json()
     if failed:
         sys.exit(1)
 

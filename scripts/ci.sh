@@ -40,6 +40,30 @@ echo "$bench_out" | grep -q "/picasso_l2" \
 # must run — and actually migrate — on every CI pass
 echo "$bench_out" | grep -q "/auto+replan.*migrated=1" \
     || { echo "ci.sh: bench smoke missing a migrated 'auto+replan' row" >&2; exit 1; }
+# the fused sparse hot path must be benched against the reference, and the
+# run must land in the repo-root perf trajectory artifact
+echo "$bench_out" | grep -q "/picasso+fused" \
+    || { echo "ci.sh: bench smoke missing the fused-kernel row" >&2; exit 1; }
+test -f BENCH_5.json \
+    || { echo "ci.sh: bench smoke did not write BENCH_5.json" >&2; exit 1; }
+grep -q "picasso+fused" BENCH_5.json \
+    || { echo "ci.sh: BENCH_5.json has no fused-vs-reference rows" >&2; exit 1; }
+# isolated fused-vs-reference microbench rows (gather+pool / dedup+adagrad /
+# tier probe) merge into the same artifact
+python -m benchmarks.bench_kernels --smoke
+grep -q "kernels/gather_pool" BENCH_5.json \
+    || { echo "ci.sh: BENCH_5.json missing the kernel microbench rows" >&2; exit 1; }
+
+echo "== tier-1: fused-kernel interpret soak =="
+# every Pallas kernel (sparse + interaction) forced through the interpreter
+# against the jnp references: the fused-path test file end to end
+REPRO_FORCE_PALLAS_INTERPRET=1 python -m pytest -q tests/test_fused.py
+
+echo "== tier-1: retrieval streaming top-k smoke =="
+# n_candidates >> the per-shard score chunk: chunked scoring + the running
+# top-k merge (the engine capacity is sized to the 256-id chunk)
+python -m repro.launch.serve --arch sasrec --smoke --retrieval \
+    --n-candidates 4096 --score-chunk 256
 
 echo "== tier-1: replan smoke =="
 # a short training run that triggers >=1 live plan migration (the halved L2

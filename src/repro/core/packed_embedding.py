@@ -31,6 +31,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.kernels import ops
+
 Axes = Union[str, Tuple[str, ...]]
 
 
@@ -141,6 +143,7 @@ def mp_lookup(
     hot_rows: Optional[jnp.ndarray] = None,   # [H, D] replicated
     l2_keys: Optional[jnp.ndarray] = None,    # [H2] L2 host tier, sorted
     l2_rows: Optional[jnp.ndarray] = None,    # [H2, D] L2 host tier
+    fused: bool = False,                      # fused tier-probe kernels
 ) -> Tuple[jnp.ndarray, LookupCtx]:
     """Forward packed lookup. Returns unique rows [n, D] + routing context.
 
@@ -152,16 +155,31 @@ def mp_lookup(
     tier can never serve one id twice. With ``l2_keys=None`` (no L2 tier)
     the math — including every intermediate — is bitwise-identical to the
     PR-2 path, and ``ctx.l2_hit`` stays ``None``.
+
+    ``fused=True`` replaces each tier's searchsorted/take/where chain with
+    one ``ops.tier_probe`` kernel pass (binary search + hit-masked row
+    gather); the probed rows come back zero-masked, so the Stitch below is a
+    single ``where`` per tier and hit values are identical either way.
     """
     rps, d = table_shard.shape
     rows_padded = rps * world
     n = ids.shape[0]
 
     u = fixed_unique(ids, sentinel=rows_padded)
-    hit, cache_slot = cache_probe(u.uniq, u.uvalid, hot_keys)
+    probe_l1 = (fused and hot_keys is not None and hot_keys.shape[0] > 0
+                and hot_rows is not None)
+    if probe_l1:
+        hit, cache_slot, l1_probe_rows = ops.tier_probe(
+            u.uniq, u.uvalid, hot_keys, hot_rows, fused=True)
+    else:
+        hit, cache_slot = cache_probe(u.uniq, u.uvalid, hot_keys)
     use_l2 = l2_keys is not None and l2_keys.shape[0] > 0
     if use_l2:
-        l2_hit, l2_slot = cache_probe(u.uniq, u.uvalid & ~hit, l2_keys)
+        if fused:
+            l2_hit, l2_slot, l2_probe_rows = ops.tier_probe(
+                u.uniq, u.uvalid & ~hit, l2_keys, l2_rows, fused=True)
+        else:
+            l2_hit, l2_slot = cache_probe(u.uniq, u.uvalid & ~hit, l2_keys)
         miss = u.uvalid & ~hit & ~l2_hit
     else:
         l2_hit, l2_slot = None, None
@@ -188,9 +206,12 @@ def mp_lookup(
     miss_rows = jnp.take(back, take_idx, axis=0) * r.kept[:, None].astype(served.dtype)
 
     if use_l2:
-        l2 = jnp.take(l2_rows, l2_slot, axis=0)
+        l2 = l2_probe_rows if fused else jnp.take(l2_rows, l2_slot, axis=0)
         miss_rows = jnp.where(l2_hit[:, None], l2.astype(miss_rows.dtype), miss_rows)
-    if hot_rows is not None and hot_rows.shape[0] > 0:
+    if probe_l1:
+        rows_u = jnp.where(hit[:, None], l1_probe_rows.astype(miss_rows.dtype),
+                           miss_rows)
+    elif hot_rows is not None and hot_rows.shape[0] > 0:
         hot = jnp.take(hot_rows, cache_slot, axis=0)
         rows_u = jnp.where(hit[:, None], hot.astype(miss_rows.dtype), miss_rows)
     else:
@@ -208,12 +229,16 @@ def pool(
     rows_u: jnp.ndarray,    # [n, D] unique rows (differentiation leaf)
     ctx_inv: jnp.ndarray,   # [n]
     weights: jnp.ndarray,   # [n] (0 for padding; 1/len for mean pooling)
-    seg: jnp.ndarray,       # [n] bag index
+    seg: jnp.ndarray,       # [n] bag index (sorted; packed layout covers all)
     n_bags: int,
+    fused: bool = False,
 ) -> jnp.ndarray:
-    """SegmentReduction: ids -> bags. Differentiable wrt rows_u."""
-    per_id = jnp.take(rows_u, ctx_inv, axis=0) * weights[:, None].astype(rows_u.dtype)
-    return jax.ops.segment_sum(per_id, seg, num_segments=n_bags)
+    """SegmentReduction: ids -> bags. Differentiable wrt rows_u.
+
+    Routed through ``ops.gather_pool`` (a ``jax.custom_vjp`` whose backward
+    is the fused transpose); with ``fused=True`` neither direction
+    materializes the ``[n, D]`` per-id intermediate."""
+    return ops.gather_pool(rows_u, ctx_inv, weights, seg, n_bags, fused=fused)
 
 
 # ---------------------------------------------------------------------------
@@ -223,25 +248,16 @@ def pool(
 
 def _dedup_apply(w_shard: jnp.ndarray, acc_shard: jnp.ndarray,
                  idx: jnp.ndarray, g: jnp.ndarray, valid: jnp.ndarray,
-                 lr: float, eps: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Sum duplicate row grads, then row-wise adagrad on touched rows only."""
-    rps = w_shard.shape[0]
-    m = idx.shape[0]
-    idx = jnp.where(valid, idx, rps).astype(jnp.int32)
-    order = jnp.argsort(idx)
-    si, sg = idx[order], jnp.take(g, order, axis=0)
-    first = jnp.concatenate([jnp.ones((1,), bool), si[1:] != si[:-1]])
-    slot = (jnp.cumsum(first) - 1).astype(jnp.int32)
-    uidx = jnp.full((m,), rps, jnp.int32).at[slot].set(si)
-    gsum = jax.ops.segment_sum(sg, slot, num_segments=m)
+                 lr: float, eps: float, fused: bool = False
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sum duplicate row grads, then row-wise adagrad on touched rows only.
 
-    uclip = jnp.minimum(uidx, rps - 1)
-    gsq = jnp.mean(jnp.square(gsum), axis=-1, keepdims=True)  # row-wise adagrad
-    acc_new = jnp.take(acc_shard, uclip, axis=0) + gsq
-    upd = lr * gsum / jnp.sqrt(acc_new + eps)
-    w_shard = w_shard.at[uidx].add(-upd.astype(w_shard.dtype), mode="drop")
-    acc_shard = acc_shard.at[uidx].set(acc_new.astype(acc_shard.dtype), mode="drop")
-    return w_shard, acc_shard
+    ``fused=True`` runs the one-pass Pallas kernel (sorted-run detection +
+    adagrad + in-place scatter; reference accumulation order, ~1 ULP);
+    ``False`` the argsort/segment_sum/scatter chain — both via
+    ``ops.dedup_adagrad``."""
+    return ops.dedup_adagrad(w_shard, acc_shard, idx, g, valid, lr, eps,
+                             fused=fused)
 
 
 class CacheState(NamedTuple):
@@ -270,6 +286,7 @@ def apply_sparse_grads(
     lr: float,
     eps: float = 1e-8,
     cache_update: str = "psum",   # 'psum' (replica-consistent exact) | 'stale'
+    fused: bool = False,          # fused dedup+adagrad scatter kernels
 ) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[CacheState]]:
     """Transposed path: miss grads -> owners; hit grads -> hot tier or owners.
 
@@ -283,7 +300,7 @@ def apply_sparse_grads(
     """
     # ---- miss gradients: transposed Shuffle --------------------------------
     w_shard, acc_shard = _apply_miss_grads(w_shard, acc_shard, ctx, g_u,
-                                           axes, world, lr, eps)
+                                           axes, world, lr, eps, fused)
 
     if cache is None or cache.keys.shape[0] == 0:
         return w_shard, acc_shard, cache
@@ -291,16 +308,17 @@ def apply_sparse_grads(
     if cache_update == "stale":
         # ---- hit gradients: route to owners (cache stays read-only) --------
         w_shard, acc_shard = _route_hit_grads(w_shard, acc_shard, ctx, ctx.hit,
-                                              g_u, axes, world, lr, eps)
+                                              g_u, axes, world, lr, eps, fused)
         return w_shard, acc_shard, cache
 
     # ---- 'psum': hit grads into the replicated hot tier --------------------
-    cache = _psum_into_tier(cache, ctx.hit, ctx.cache_slot, g_u, axes, lr, eps)
+    cache = _psum_into_tier(cache, ctx.hit, ctx.cache_slot, g_u, axes, lr, eps,
+                            fused)
     return w_shard, acc_shard, cache
 
 
 def _apply_miss_grads(w_shard, acc_shard, ctx: LookupCtx, g_u, axes: Axes,
-                      world: int, lr: float, eps: float):
+                      world: int, lr: float, eps: float, fused: bool = False):
     """Transposed Shuffle: route miss grads to owner shards and apply."""
     d = w_shard.shape[1]
     cap = ctx.recv_ids.shape[1]  # static block shape
@@ -310,11 +328,13 @@ def _apply_miss_grads(w_shard, acc_shard, ctx: LookupCtx, g_u, axes: Axes,
     recv_g = _a2a(send_g.reshape(world, cap, d), axes).reshape(world * cap, d)
     return _dedup_apply(
         w_shard, acc_shard,
-        ctx.recv_local.reshape(-1), recv_g, ctx.recv_valid.reshape(-1), lr, eps)
+        ctx.recv_local.reshape(-1), recv_g, ctx.recv_valid.reshape(-1), lr, eps,
+        fused)
 
 
 def _route_hit_grads(w_shard, acc_shard, ctx: LookupCtx, hit_mask, g_u,
-                     axes: Axes, world: int, lr: float, eps: float):
+                     axes: Axes, world: int, lr: float, eps: float,
+                     fused: bool = False):
     """'stale' mode: grads of tier-served ids ride a second small all_to_all
     to the owner shards; the tier itself stays read-only between flushes."""
     rps, d = w_shard.shape
@@ -330,7 +350,7 @@ def _route_hit_grads(w_shard, acc_shard, ctx: LookupCtx, hit_mask, g_u,
     my = lax.axis_index(axes).astype(jnp.int32)
     local = jnp.clip(recv_ids - my * rps, 0, rps - 1)
     return _dedup_apply(
-        w_shard, acc_shard, local, recv_hg, recv_ids >= 0, lr, eps)
+        w_shard, acc_shard, local, recv_hg, recv_ids >= 0, lr, eps, fused)
 
 
 def _tier_adagrad(tier: CacheState, g_hot: jnp.ndarray, lr: float,
@@ -346,11 +366,19 @@ def _tier_adagrad(tier: CacheState, g_hot: jnp.ndarray, lr: float,
 
 
 def _psum_into_tier(tier: CacheState, hit_mask, slot, g_u, axes: Axes,
-                    lr: float, eps: float) -> CacheState:
+                    lr: float, eps: float, fused: bool = False) -> CacheState:
     """'psum' mode: all-reduce tier-hit grads and adagrad the replicated tier
     in place (replicas stay bit-identical; the tier is authoritative for its
     rows between flushes). Comm is O(H*D) per step — right for the small
-    device-resident hot tier."""
+    device-resident hot tier.
+
+    Deliberately NOT routed through the dedup+adagrad kernel even when
+    ``fused``: the psum forces the dense ``[H, D]`` buffer into existence
+    anyway, after which the dense row-wise adagrad is a single fused
+    elementwise pass — a per-row scatter kernel over the identity index
+    would only serialize it. Fusion pays where it removes the dense buffer
+    (``_allgather_into_tier``) or the scatter chain (``_dedup_apply``)."""
+    del fused
     h = tier.keys.shape[0]
     d = g_u.shape[1]
     g_hit = g_u * hit_mask[:, None].astype(g_u.dtype)
@@ -360,19 +388,29 @@ def _psum_into_tier(tier: CacheState, hit_mask, slot, g_u, axes: Axes,
 
 
 def _allgather_into_tier(tier: CacheState, hit_mask, slot, g_u, axes: Axes,
-                         lr: float, eps: float) -> CacheState:
+                         lr: float, eps: float, fused: bool = False
+                         ) -> CacheState:
     """Exact replicated-tier update with comm independent of the tier size:
     all_gather every shard's (masked) hit grads + slots, scatter-add them
     locally on each replica. The gathered order is identical everywhere, so
     replicas stay consistent like the psum path, but the wire cost is
     O(world * n * D) instead of O(H * D) — the right trade for the L2 host
-    tier, whose H2 is 10-100x the hot tier while n stays batch-sized."""
+    tier, whose H2 is 10-100x the hot tier while n stays batch-sized.
+
+    When fused, the gathered grads feed the dedup+adagrad kernel directly —
+    the dense ``[H2, D]`` scatter buffer is never materialized (within-row
+    accumulation happens in sorted-slot order, replica-identical)."""
     h = tier.keys.shape[0]
     d = g_u.shape[1]
     g_hit = g_u * hit_mask[:, None].astype(g_u.dtype)
     slots = jnp.where(hit_mask, slot, h).astype(jnp.int32)  # h = drop
     all_slots = lax.all_gather(slots, axes, tiled=True)      # [world*n]
     all_g = lax.all_gather(g_hit, axes, tiled=True)          # [world*n, D]
+    if fused:
+        rows2, acc2 = ops.dedup_adagrad(
+            tier.rows, tier.acc, all_slots, all_g, all_slots < h, lr, eps,
+            fused=True)
+        return CacheState(tier.keys, rows2, acc2)
     g_hot = jnp.zeros((h, d), g_u.dtype).at[all_slots].add(all_g, mode="drop")
     return _tier_adagrad(tier, g_hot, lr, eps)
 
@@ -390,6 +428,7 @@ def apply_sparse_grads_l2(
     lr: float,
     eps: float = 1e-8,
     cache_update: str = "psum",
+    fused: bool = False,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[CacheState], CacheState]:
     """Two-tier transposed path (L1 hot tier + L2 host tier).
 
@@ -411,23 +450,25 @@ def apply_sparse_grads_l2(
     ``ctx`` must come from an L2-probing ``mp_lookup`` (``ctx.l2_hit`` set).
     """
     w_shard, acc_shard = _apply_miss_grads(w_shard, acc_shard, ctx, g_u,
-                                           axes, world, lr, eps)
+                                           axes, world, lr, eps, fused)
     if cache_update == "stale":
         both = ctx.hit | ctx.l2_hit
         w_shard, acc_shard = _route_hit_grads(w_shard, acc_shard, ctx, both,
-                                              g_u, axes, world, lr, eps)
+                                              g_u, axes, world, lr, eps, fused)
         return w_shard, acc_shard, cache, l2
     if cache is not None and cache.keys.shape[0] > 0:
-        cache = _psum_into_tier(cache, ctx.hit, ctx.cache_slot, g_u, axes, lr, eps)
+        cache = _psum_into_tier(cache, ctx.hit, ctx.cache_slot, g_u, axes,
+                                lr, eps, fused)
     h2 = l2.keys.shape[0]
     if h2 > 0:
         n, d = g_u.shape
         gather_elems = (world - 1) * n * (d + 1)   # hit grads + slots
         if gather_elems < h2 * d:
             l2 = _allgather_into_tier(l2, ctx.l2_hit, ctx.l2_slot, g_u,
-                                      axes, lr, eps)
+                                      axes, lr, eps, fused)
         else:
-            l2 = _psum_into_tier(l2, ctx.l2_hit, ctx.l2_slot, g_u, axes, lr, eps)
+            l2 = _psum_into_tier(l2, ctx.l2_hit, ctx.l2_slot, g_u, axes,
+                                 lr, eps, fused)
     return w_shard, acc_shard, cache, l2
 
 

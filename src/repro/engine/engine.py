@@ -71,6 +71,7 @@ import numpy as np
 
 from repro.core import packed_embedding as pe
 from repro.core.assign import StrategySpec, resolve_assignment
+from repro.kernels import ops
 from repro.core.features import PackedBatch
 from repro.core.interleaving import wave_barrier
 from repro.core.packing import PicassoPlan
@@ -125,6 +126,12 @@ class EmbeddingEngine:
     lr_emb/eps: row-wise adagrad hyperparameters for the sparse update.
     cache_update: ``'psum'`` (exact, replica-consistent hot tier) or
         ``'stale'`` (Algorithm 1 bounded-staleness semantics).
+    use_fused_kernels: ``'auto'`` (fused Pallas sparse kernels on TPU or
+        under ``REPRO_FORCE_PALLAS_INTERPRET``, jnp reference on CPU),
+        ``'on'``/``True`` (force the kernels; interpreted off-TPU) or
+        ``'off'``/``False`` (force the reference chains). Resolved ONCE here
+        (``repro.kernels.ops.resolve_fused``) to a static bool every
+        strategy and the pool/transpose below carry through their traces.
     capacity: optional per-gid override of the all_to_all bucket capacity
         (e.g. retrieval candidate towers that look up far more ids per shard
         than the training batch the plan was sized for).
@@ -135,11 +142,13 @@ class EmbeddingEngine:
                  use_l2: bool = True, use_interleave: bool = True,
                  lr_emb: float = 0.05, eps: float = 1e-8,
                  cache_update: str = "psum",
+                 use_fused_kernels: Any = "auto",
                  capacity: Optional[Dict[int, int]] = None):
         self.plan = plan
         self.axes = axes
         self.world = world
         self.cache_update = cache_update
+        self.use_fused = ops.resolve_fused(use_fused_kernels)
         # gid -> registry name; raises on unknown names / partial coverage
         # (an auto-compiled assignment is recorded on the plan, so the
         # host-flush engine and later call sites gate caches identically)
@@ -154,7 +163,7 @@ class EmbeddingEngine:
         insts: Dict[str, LookupStrategy] = {
             name: get_strategy(name)(
                 axes=axes, world=world, capacity=cap, lr=lr_emb, eps=eps,
-                cache_update=cache_update)
+                cache_update=cache_update, use_fused=self.use_fused)
             for name in names}
         self.strategies: Dict[int, LookupStrategy] = {
             gid: insts[name] for gid, name in self.assignment.items()}
@@ -230,7 +239,7 @@ class EmbeddingEngine:
             g = self.plan.group(gid)
             b = pb.ids.shape[0] // g.ids_per_sample
             p = pe.pool(rows[gid], ctxs[gid].inv, pb.weights, pb.seg,
-                        b * g.n_bags)
+                        b * g.n_bags, fused=self.use_fused)
             pooled[gid] = p.reshape(b, g.n_bags, g.dim)
         return pooled, EngineContext(ctxs=ctxs, packed=dict(packed))
 
@@ -264,10 +273,11 @@ class EmbeddingEngine:
             gctx = ctx.ctxs[gid]
             name = self.assignment[gid]
             g_flat = g_p.reshape(-1, g_p.shape[-1])
-            per_id = (jnp.take(g_flat, pb.seg, axis=0)
-                      * pb.weights[:, None].astype(g_flat.dtype))
-            g_rows = jax.ops.segment_sum(per_id, gctx.inv,
-                                         num_segments=pb.ids.shape[0])
+            # transpose of the pool: one fused segment-grad pass produces the
+            # [n_unique, D] row grads directly (no [n, D] per-id intermediate
+            # when fused — see ops.segment_grad)
+            g_rows = ops.segment_grad(g_flat, pb.seg, pb.weights, gctx.inv,
+                                      pb.ids.shape[0], fused=self.use_fused)
             st2, o, h = self.strategies[gid].apply_grads(
                 emb[str(gid)], gid, gctx, g_rows, cache_on=self.cache_on[gid],
                 l2_on=self.l2_on[gid])

@@ -100,13 +100,17 @@ class LookupStrategy:
 
     def __init__(self, *, axes: Axes, world: int, capacity: Dict[int, int],
                  lr: float = 0.05, eps: float = 1e-8,
-                 cache_update: str = "psum"):
+                 cache_update: str = "psum", use_fused: bool = False):
         self.axes = axes
         self.world = world
         self.capacity = capacity
         self.lr = lr
         self.eps = eps
         self.cache_update = cache_update
+        # static (resolved) switch: True routes every hot-path op this
+        # strategy issues — tier probes, the dedup+adagrad scatter — through
+        # the fused Pallas kernels (see repro.kernels.ops.resolve_fused)
+        self.use_fused = use_fused
 
     # ----------------------------------------------------------------- fwd
     def lookup(self, st: EmbeddingState, gid: int, ids: jnp.ndarray,
@@ -156,13 +160,14 @@ class PicassoStrategy(LookupStrategy):
             st.w, ids, axes=self.axes, world=self.world,
             capacity=self.capacity[gid],
             hot_keys=st.cache.keys if cache_on else None,
-            hot_rows=st.cache.rows if cache_on else None)
+            hot_rows=st.cache.rows if cache_on else None,
+            fused=self.use_fused)
 
     def apply_grads(self, st, gid, ctx, g_rows, *, cache_on=False, l2_on=False):
         w2, acc2, cache2 = pe.apply_sparse_grads(
             st.w, st.acc, st.cache if cache_on else None, ctx, g_rows,
             axes=self.axes, world=self.world, lr=self.lr, eps=self.eps,
-            cache_update=self.cache_update)
+            cache_update=self.cache_update, fused=self.use_fused)
         counts2 = pe.count_frequencies(st.counts, ctx)
         st2 = EmbeddingState(w=w2, acc=acc2, counts=counts2,
                              cache=cache2 if cache2 is not None else st.cache,
@@ -231,7 +236,8 @@ class PicassoL2Strategy(PicassoStrategy):
             capacity=self.capacity[gid],
             hot_keys=st.cache.keys if cache_on else None,
             hot_rows=st.cache.rows if cache_on else None,
-            l2_keys=st.l2.keys, l2_rows=st.l2.rows)
+            l2_keys=st.l2.keys, l2_rows=st.l2.rows,
+            fused=self.use_fused)
 
     def apply_grads(self, st, gid, ctx, g_rows, *, cache_on=False, l2_on=False):
         if not l2_on or st.l2 is None or ctx.l2_hit is None:
@@ -239,7 +245,7 @@ class PicassoL2Strategy(PicassoStrategy):
         w2, acc2, cache2, l22 = pe.apply_sparse_grads_l2(
             st.w, st.acc, st.cache if cache_on else None, st.l2, ctx, g_rows,
             axes=self.axes, world=self.world, lr=self.lr, eps=self.eps,
-            cache_update=self.cache_update)
+            cache_update=self.cache_update, fused=self.use_fused)
         counts2 = pe.count_frequencies(st.counts, ctx)
         # tier-served ids never route, so they must be counted explicitly or
         # the flush ranking churn-evicts the resident (hottest) rows
@@ -289,6 +295,7 @@ class PSStrategy(LookupStrategy):
         local = all_ids - base
         ok = (local >= 0) & (local < rps)
         w2, acc2 = pe._dedup_apply(st.w, st.acc, jnp.clip(local, 0, rps - 1),
-                                   all_g, ok, self.lr, self.eps)
+                                   all_g, ok, self.lr, self.eps,
+                                   fused=self.use_fused)
         zero = jnp.zeros((), jnp.int32)
         return st._replace(w=w2, acc=acc2), zero, zero

@@ -5,11 +5,33 @@ reference executes (XLA fuses it well), while tests exercise the kernels in
 ``interpret=True`` mode against the same references. Set
 ``REPRO_FORCE_PALLAS_INTERPRET=1`` to route *all* calls through the
 interpreted kernels (slow; correctness soak).
+
+Backend dispatch is resolved ONCE, at the first dispatched call (not inside
+every traced call): the env var and ``jax.default_backend()`` are read one
+time and cached, so the hot path never re-reads ``os.environ``. Call
+``reset_backend_cache()`` after changing either (tests do).
+
+The sparse hot-path ops (``gather_pool`` / ``segment_grad`` /
+``dedup_adagrad`` / ``tier_probe``) additionally take an explicit
+``fused=`` override: ``None`` follows the backend default above, ``True``
+forces the Pallas kernels (interpreted off-TPU), ``False`` forces the jnp
+reference. ``resolve_fused`` maps the user-facing
+``TrainConfig/ServeConfig.use_fused_kernels`` spelling (``'auto' | bool |
+'on' | 'off'``) to that override once, at engine construction —
+strategies then carry a plain static bool through their traces.
+
+``gather_pool`` is a ``jax.custom_vjp``: its backward is the fused
+``segment_grad`` pass (producing ``[n_rows, D]`` row grads directly), so
+neither direction materializes the ``[n, D]`` per-id intermediate when
+fused. Pooling weights are treated as non-learnable constants (their
+cotangent is zero) — matching the engine, which only ever differentiates
+with respect to the looked-up rows.
 """
 from __future__ import annotations
 
+import functools
 import os
-from typing import Optional
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -19,38 +41,241 @@ from repro.kernels.cross_layer import cross_layer_pallas
 from repro.kernels.dot_interaction import dot_interaction_pallas
 from repro.kernels.embedding_bag import embedding_bag_pallas
 from repro.kernels.fm_interaction import fm_interaction_pallas
+from repro.kernels.fused_embedding import (dedup_adagrad_pallas,
+                                           gather_pool_pallas,
+                                           segment_grad_pallas,
+                                           tier_probe_pallas)
+
+# (use_pallas, interpret), resolved once at first dispatch
+_BACKEND: Optional[Tuple[bool, bool]] = None
+
+
+def _backend() -> Tuple[bool, bool]:
+    global _BACKEND
+    if _BACKEND is None:
+        tpu = jax.default_backend() == "tpu"
+        force = bool(os.environ.get("REPRO_FORCE_PALLAS_INTERPRET"))
+        # force wins on every backend — a TPU soak must actually interpret,
+        # not silently run the compiled kernels
+        _BACKEND = (tpu or force, force or not tpu)
+    return _BACKEND
+
+
+def reset_backend_cache() -> None:
+    """Forget the cached backend decision (tests that flip the env var)."""
+    global _BACKEND
+    _BACKEND = None
 
 
 def _use_pallas() -> bool:
-    if os.environ.get("REPRO_FORCE_PALLAS_INTERPRET"):
-        return True
-    return jax.default_backend() == "tpu"
+    return _backend()[0]
 
 
 def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    return _backend()[1]
+
+
+def resolve_fused(spec: Union[str, bool, None]) -> bool:
+    """Map a ``use_fused_kernels`` spelling to a static bool, once.
+
+    ``'auto'``/``None`` follow the backend (Pallas on TPU or under the
+    interpret-soak env var, reference on CPU); booleans and ``'on'``/
+    ``'off'`` force it. Raises on anything else so config typos fail at
+    construction, not silently at dispatch."""
+    if spec is None or spec == "auto":
+        return _use_pallas()
+    if isinstance(spec, bool):
+        return spec
+    if spec == "on":
+        return True
+    if spec == "off":
+        return False
+    raise ValueError(
+        f"use_fused_kernels must be 'auto', 'on', 'off' or a bool; got {spec!r}")
+
+
+def _fused(fused: Optional[bool]) -> bool:
+    return _use_pallas() if fused is None else bool(fused)
+
+
+# ---------------------------------------------------------------------------
+# dense / interaction kernels (cached backend dispatch + reference-transpose
+# VJPs)
+#
+# ``pallas_call`` defines no VJP, so a bare dispatcher is only differentiable
+# on the CPU reference branch — the train step would fail under jax.grad
+# anywhere the Pallas branch is live (TPU, or the interpret soak). Each
+# dispatcher is therefore a ``jax.custom_vjp``: the Pallas kernel runs the
+# forward, the backward is the transpose of the pure-jnp reference (the exact
+# grads CPU training always used; bitwise-unchanged on the reference branch,
+# since its backward IS ``jax.vjp`` of the same function).
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _embedding_bag(table, ids, seg, w, n_bags: int):
+    if _use_pallas():
+        # the kernel wants explicit weights; the reference keeps its
+        # weightless fast path (no [n, D] multiply by runtime ones)
+        wp = w if w is not None else jnp.ones_like(ids, table.dtype)
+        return embedding_bag_pallas(table, ids, seg, wp, n_bags,
+                                    interpret=_interpret())
+    return ref.embedding_bag_ref(table, ids, seg, n_bags, w)
+
+
+def _embedding_bag_fwd(table, ids, seg, w, n_bags: int):
+    return _embedding_bag(table, ids, seg, w, n_bags), (table, ids, seg, w)
+
+
+def _embedding_bag_bwd(n_bags: int, res, g):
+    table, ids, seg, w = res
+    if w is None:
+        _, vjp = jax.vjp(
+            lambda t: ref.embedding_bag_ref(t, ids, seg, n_bags, None), table)
+        return vjp(g) + (None, None, None)
+    _, vjp = jax.vjp(
+        lambda t, w_: ref.embedding_bag_ref(t, ids, seg, n_bags, w_), table, w)
+    gt, gw = vjp(g)
+    return gt, None, None, gw
+
+
+_embedding_bag.defvjp(_embedding_bag_fwd, _embedding_bag_bwd)
 
 
 def embedding_bag(table, ids, seg, n_bags: int, weights: Optional[jnp.ndarray] = None):
-    if _use_pallas():
-        w = weights if weights is not None else jnp.ones_like(ids, table.dtype)
-        return embedding_bag_pallas(table, ids, seg, w, n_bags, interpret=_interpret())
-    return ref.embedding_bag_ref(table, ids, seg, n_bags, weights)
+    return _embedding_bag(table, ids, seg, weights, int(n_bags))
 
 
+@jax.custom_vjp
 def fm_interaction(fields):
     if _use_pallas():
         return fm_interaction_pallas(fields, interpret=_interpret())
     return ref.fm_interaction_ref(fields)
 
 
+def _fm_fwd(fields):
+    return fm_interaction(fields), fields
+
+
+def _fm_bwd(fields, g):
+    _, vjp = jax.vjp(ref.fm_interaction_ref, fields)
+    return vjp(g)
+
+
+fm_interaction.defvjp(_fm_fwd, _fm_bwd)
+
+
+@jax.custom_vjp
 def dot_interaction(fields):
     if _use_pallas():
         return dot_interaction_pallas(fields, interpret=_interpret())
     return ref.dot_interaction_ref(fields)
 
 
+def _dot_fwd(fields):
+    return dot_interaction(fields), fields
+
+
+def _dot_bwd(fields, g):
+    _, vjp = jax.vjp(ref.dot_interaction_ref, fields)
+    return vjp(g)
+
+
+dot_interaction.defvjp(_dot_fwd, _dot_bwd)
+
+
+@jax.custom_vjp
 def cross_layer(x0, x, w, b):
     if _use_pallas():
         return cross_layer_pallas(x0, x, w, b, interpret=_interpret())
     return ref.cross_layer_ref(x0, x, w, b)
+
+
+def _cross_fwd(x0, x, w, b):
+    return cross_layer(x0, x, w, b), (x0, x, w, b)
+
+
+def _cross_bwd(res, g):
+    _, vjp = jax.vjp(ref.cross_layer_ref, *res)
+    return vjp(g)
+
+
+cross_layer.defvjp(_cross_fwd, _cross_bwd)
+
+
+# ---------------------------------------------------------------------------
+# fused sparse hot path: gather+pool (custom VJP), dedup+adagrad, tier probe
+# ---------------------------------------------------------------------------
+
+
+def _gather_pool_impl(rows_u, inv, weights, seg, n_bags: int, fused: bool):
+    if fused:
+        return gather_pool_pallas(rows_u, inv, weights, seg, n_bags,
+                                  interpret=_interpret())
+    return ref.gather_pool_ref(rows_u, inv, weights, seg, n_bags)
+
+
+def _segment_grad_impl(g_bags, seg, weights, inv, n_rows: int, fused: bool):
+    if fused:
+        return segment_grad_pallas(g_bags, seg, weights, inv, n_rows,
+                                   interpret=_interpret())
+    return ref.segment_grad_ref(g_bags, seg, weights, inv, n_rows)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def _gather_pool(rows_u, inv, weights, seg, n_bags: int, fused: bool):
+    return _gather_pool_impl(rows_u, inv, weights, seg, n_bags, fused)
+
+
+def _gather_pool_fwd(rows_u, inv, weights, seg, n_bags: int, fused: bool):
+    out = _gather_pool_impl(rows_u, inv, weights, seg, n_bags, fused)
+    return out, (inv, weights, seg, rows_u.shape[0])
+
+
+def _gather_pool_bwd(n_bags: int, fused: bool, res, g):
+    inv, weights, seg, n_rows = res
+    g_rows = _segment_grad_impl(g, seg, weights, inv, n_rows, fused)
+    # weights are pooling constants (see module docstring): zero cotangent
+    return g_rows, None, jnp.zeros_like(weights), None
+
+
+_gather_pool.defvjp(_gather_pool_fwd, _gather_pool_bwd)
+
+
+def gather_pool(rows_u, inv, weights, seg, n_bags: int,
+                fused: Optional[bool] = None):
+    """Fused forward SegmentReduction ``bags[seg] += w * rows_u[inv]`` with a
+    fused-transpose custom VJP. Requires ``seg`` sorted ascending and
+    covering every bag (the packed-batch layout guarantees it)."""
+    return _gather_pool(rows_u, inv, weights, seg, int(n_bags), _fused(fused))
+
+
+def segment_grad(g_bags, seg, weights, inv, n_rows: int,
+                 fused: Optional[bool] = None):
+    """Transpose of ``gather_pool`` as a standalone op (the engine's explicit
+    backward path): ``g_rows[u] = sum_{inv[i]=u} w[i] * g_bags[seg[i]]``."""
+    return _segment_grad_impl(g_bags, seg, weights, inv, int(n_rows),
+                              _fused(fused))
+
+
+def dedup_adagrad(w, acc, idx, g, valid, lr: float, eps: float,
+                  fused: Optional[bool] = None):
+    """Sum duplicate row grads and apply row-wise adagrad to the touched rows
+    of ``(w, acc)`` in one pass (in-place scatter when fused). The fused
+    kernel accumulates duplicates in the reference order — untouched rows
+    stay bitwise identical, touched rows match to ~1 ULP of XLA-fusion
+    reassociation in the adagrad arithmetic."""
+    if _fused(fused):
+        return dedup_adagrad_pallas(w, acc, idx, g, valid, float(lr),
+                                    float(eps), interpret=_interpret())
+    return ref.dedup_adagrad_ref(w, acc, idx, g, valid, lr, eps)
+
+
+def tier_probe(uniq, uvalid, keys, rows, fused: Optional[bool] = None):
+    """Probe one sorted-key cache tier: ``(hit, slot, rows)`` with miss rows
+    exactly zero. ``slot`` is the clamped searchsorted position (the
+    backward scatter reuses it)."""
+    if _fused(fused):
+        return tier_probe_pallas(uniq, uvalid, keys, rows,
+                                 interpret=_interpret())
+    return ref.tier_probe_ref(uniq, uvalid, keys, rows)

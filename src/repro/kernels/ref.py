@@ -16,6 +16,56 @@ def embedding_bag_ref(table: jnp.ndarray, ids: jnp.ndarray, seg: jnp.ndarray,
     return jax.ops.segment_sum(rows, seg, num_segments=n_bags)
 
 
+def gather_pool_ref(rows_u: jnp.ndarray, inv: jnp.ndarray, weights: jnp.ndarray,
+                    seg: jnp.ndarray, n_bags: int) -> jnp.ndarray:
+    """Unfused SegmentReduction: materializes the [n, D] per-id intermediate."""
+    per_id = jnp.take(rows_u, inv, axis=0) * weights[:, None].astype(rows_u.dtype)
+    return jax.ops.segment_sum(per_id, seg, num_segments=n_bags)
+
+
+def segment_grad_ref(g_bags: jnp.ndarray, seg: jnp.ndarray, weights: jnp.ndarray,
+                     inv: jnp.ndarray, n_rows: int) -> jnp.ndarray:
+    """Transpose of ``gather_pool_ref``: per-position bag-grad gather scaled
+    by the pooling weight, scattered back onto the unique-row slots."""
+    per_id = jnp.take(g_bags, seg, axis=0) * weights[:, None].astype(g_bags.dtype)
+    return jax.ops.segment_sum(per_id, inv, num_segments=n_rows)
+
+
+def dedup_adagrad_ref(w: jnp.ndarray, acc: jnp.ndarray, idx: jnp.ndarray,
+                      g: jnp.ndarray, valid: jnp.ndarray, lr: float,
+                      eps: float):
+    """Sum duplicate row grads, then row-wise adagrad on touched rows only
+    (the original ``packed_embedding._dedup_apply`` chain)."""
+    rows = w.shape[0]
+    m = idx.shape[0]
+    idx = jnp.where(valid, idx, rows).astype(jnp.int32)
+    order = jnp.argsort(idx)
+    si, sg = idx[order], jnp.take(g, order, axis=0)
+    first = jnp.concatenate([jnp.ones((1,), bool), si[1:] != si[:-1]])
+    slot = (jnp.cumsum(first) - 1).astype(jnp.int32)
+    uidx = jnp.full((m,), rows, jnp.int32).at[slot].set(si)
+    gsum = jax.ops.segment_sum(sg, slot, num_segments=m)
+    uclip = jnp.minimum(uidx, rows - 1)
+    gsq = jnp.mean(jnp.square(gsum), axis=-1, keepdims=True)  # row-wise adagrad
+    acc_new = jnp.take(acc, uclip, axis=0) + gsq
+    upd = lr * gsum / jnp.sqrt(acc_new + eps)
+    w = w.at[uidx].add(-upd.astype(w.dtype), mode="drop")
+    acc = acc.at[uidx].set(acc_new.astype(acc.dtype), mode="drop")
+    return w, acc
+
+
+def tier_probe_ref(uniq: jnp.ndarray, uvalid: jnp.ndarray, keys: jnp.ndarray,
+                   rows: jnp.ndarray):
+    """searchsorted + take + where chain of ``cache_probe`` plus the hit-row
+    gather; miss rows are exact zeros (the fused kernel's contract)."""
+    p = jnp.searchsorted(keys, uniq).astype(jnp.int32)
+    slot = jnp.clip(p, 0, keys.shape[0] - 1)
+    hit = (keys[slot] == uniq) & uvalid
+    out = jnp.where(hit[:, None], jnp.take(rows, slot, axis=0),
+                    jnp.zeros((1, rows.shape[1]), rows.dtype))
+    return hit, slot, out
+
+
 def fm_interaction_ref(fields: jnp.ndarray) -> jnp.ndarray:
     """[B, F, D] -> [B, 1]: 0.5 * sum_d ((sum_f v)^2 - sum_f v^2)."""
     s = fields.sum(axis=1)

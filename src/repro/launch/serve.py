@@ -20,6 +20,15 @@ def main():
     ap.add_argument("--n-requests", type=int, default=10)
     ap.add_argument("--retrieval", action="store_true")
     ap.add_argument("--candidates", type=int, default=65536)
+    ap.add_argument("--n-candidates", type=int, default=None, metavar="N",
+                    help="retrieval candidate count (canonical spelling; "
+                         "falls back to --candidates when omitted). With "
+                         "--score-chunk, N is no longer bound by per-shard "
+                         "memory: chunked scoring streams a running top-k")
+    ap.add_argument("--score-chunk", type=int, default=0, metavar="C",
+                    help="retrieval: score the local candidate slice in "
+                         "fixed chunks of C ids with a streaming top-k "
+                         "merge (bounds per-shard memory; 0 = one chunk)")
     ap.add_argument("--devices", type=int, default=0)
     ap.add_argument("--mesh", default="")
     ap.add_argument("--strategy", default="picasso",
@@ -36,6 +45,11 @@ def main():
                     help="place L2 host-tier leaves in pinned host memory "
                          "(pin_l2_to_host; no-op on backends without "
                          "pinned_host, e.g. the CPU rig)")
+    ap.add_argument("--fused-kernels", default="auto",
+                    choices=("auto", "on", "off"),
+                    help="fused Pallas sparse kernels: 'auto' wherever "
+                         "Pallas runs (TPU / REPRO_FORCE_PALLAS_INTERPRET), "
+                         "'on' forces them, 'off' forces the jnp reference")
     args = ap.parse_args()
 
     if args.devices:
@@ -71,7 +85,8 @@ def main():
         spec = maybe_compile(plan, args.strategy, per_device_batch=per_dev_batch,
                              use_cache=use_cache,
                              log=lambda s: print(f"[serve] {s}"))
-        return ServeConfig(strategy=spec, use_cache=use_cache)
+        return ServeConfig(strategy=spec, use_cache=use_cache,
+                           use_fused_kernels=args.fused_kernels)
 
     cfg = get_config(args.arch, smoke=args.smoke)
     if args.retrieval:
@@ -79,17 +94,20 @@ def main():
                          exact_capacity=True)
         model = WDLModel(cfg, plan)
         state = init_state(model, plan, jax.random.PRNGKey(0), mesh=mesh, axes=axes)
-        nc = (args.candidates // world) * world
+        n_cand = args.n_candidates or args.candidates
+        nc = (n_cand // world) * world
+        chunk = args.score_chunk or nc // world
         # the candidate tower dominates retrieval lookups: size the cost
-        # model to its per-shard chunk, not the batch-of-1 user tower
+        # model to its per-shard score chunk, not the batch-of-1 user tower
         from repro.core.features import field_index
         item_field = next(f.name for f in cfg.fields
                           if f.pooling == "none" and f.max_len > 1)
         ips = plan.group(field_index(plan)[item_field].gid).ids_per_sample
-        proxy_batch = max(1, (nc // world) // max(ips, 1))
+        proxy_batch = max(1, min(chunk, nc // world) // max(ips, 1))
         step = make_retrieval_step(model, plan, mesh, axes, nc, top_k=10,
                                    scfg=serve_cfg(plan, proxy_batch,
-                                                  use_cache=False))
+                                                  use_cache=False),
+                                   score_chunk=args.score_chunk)
         user = make_batch(cfg, 1, np.random.default_rng(1))
         from jax.sharding import NamedSharding, PartitionSpec as P
         cand = jax.device_put(jnp.arange(nc, dtype=jnp.int32) % cfg.fields[0].vocab,

@@ -50,6 +50,14 @@ def main():
                     help="place L2 host-tier leaves in pinned host memory "
                          "(pin_l2_to_host; no-op on backends without "
                          "pinned_host, e.g. the CPU rig)")
+    ap.add_argument("--fused-kernels", default="auto",
+                    choices=("auto", "on", "off"),
+                    help="fused Pallas sparse kernels (gather+pool custom "
+                         "VJP, dedup+adagrad scatter, tier probes): 'auto' "
+                         "uses them wherever Pallas runs (TPU, or any "
+                         "backend under REPRO_FORCE_PALLAS_INTERPRET=1), "
+                         "'on' forces them (interpreted off-TPU, slow), "
+                         "'off' forces the reference jnp chains")
     ap.add_argument("--no-cache", action="store_true")
     ap.add_argument("--no-interleave", action="store_true")
     ap.add_argument("--no-packing", action="store_true")
@@ -131,6 +139,7 @@ def main():
         spec = "mixed" if plan.strategy else strategy
         tcfg = TrainConfig(strategy=spec, use_cache=not args.no_cache,
                            use_interleave=not args.no_interleave,
+                           use_fused_kernels=args.fused_kernels,
                            lr_emb=args.lr_emb, lr_dense=args.lr_dense)
         return model, tcfg, make_train_step(model, plan, mesh, axes,
                                             args.global_batch, tcfg)[0]

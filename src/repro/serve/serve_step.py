@@ -43,6 +43,8 @@ class ServeConfig:
     strategy: Any = "picasso"
     use_cache: bool = True
     use_l2: bool = True   # L2 host tier (plan-budgeted, behind L1)
+    # fused Pallas sparse kernels: 'auto' (backend default) | 'on' | 'off'
+    use_fused_kernels: Any = "auto"
 
 
 def _mesh_world(mesh, axes):
@@ -60,7 +62,8 @@ def make_serve_step(model: WDLModel, plan: PicassoPlan, mesh, axes, global_batch
     scfg = scfg or ServeConfig(strategy=strategy, use_cache=use_cache)
     world = _mesh_world(mesh, axes)
     engine = EmbeddingEngine(plan, axes, world, strategy=scfg.strategy,
-                             use_cache=scfg.use_cache, use_l2=scfg.use_l2)
+                             use_cache=scfg.use_cache, use_l2=scfg.use_l2,
+                             use_fused_kernels=scfg.use_fused_kernels)
 
     # specs are static per (model, plan): build them once, not per trace call
     especs = emb_specs(plan, axes)
@@ -85,15 +88,23 @@ def make_serve_step(model: WDLModel, plan: PicassoPlan, mesh, axes, global_batch
 def make_retrieval_step(model: WDLModel, plan: PicassoPlan, mesh, axes,
                         n_candidates: int, top_k: int = 100,
                         strategy: Any = "picasso",
-                        scfg: Optional[ServeConfig] = None):
-    """Two-tower retrieval: one user -> top-k of 1M candidates.
+                        scfg: Optional[ServeConfig] = None,
+                        score_chunk: Optional[int] = None):
+    """Two-tower retrieval: one user -> top-k of 1M+ candidates.
 
     The user representation is computed from the behaviour sequence
     (self_attn_seq / capsule interaction); candidate ids are mesh-sharded,
     their rows come from the *local* slice of the MP item table via the same
-    packed-lookup engine (bucket capacity widened to the candidate chunk, so
-    no candidate is ever dropped), scores are a batched dot, and top-k is
+    packed-lookup engine, scores are a batched dot, and top-k is
     local-top-k -> all_gather -> global-top-k.
+
+    ``score_chunk`` bounds per-shard memory: the local candidate slice is
+    scored in fixed-size chunks (``lax.scan`` over ``lax.top_k``-merged
+    running bests — a streaming top-k), so the engine's bucket capacity and
+    every intermediate scale with the *chunk*, not with ``n_candidates``.
+    ``None``/0 scores the whole local slice in one chunk (the old bound).
+    The merge keeps the single-chunk tie-break order, so chunked and
+    unchunked retrieval return identical results.
 
     Retrieval always runs uncached: only ``scfg.strategy`` is honoured here;
     ``scfg.use_cache`` is ignored (the candidate chunk has no skew head for
@@ -102,17 +113,24 @@ def make_retrieval_step(model: WDLModel, plan: PicassoPlan, mesh, axes,
     scfg = scfg or ServeConfig(strategy=strategy, use_cache=False)
     world = _mesh_world(mesh, axes)
     cand_local = n_candidates // world
+    chunk = int(score_chunk) if score_chunk else cand_local
+    chunk = max(1, min(chunk, cand_local))
+    n_chunks = -(-cand_local // chunk)
+    pad = n_chunks * chunk - cand_local
     fidx = field_index(model.plan)
     item_field = next(f.name for f in model.cfg.fields
                       if f.pooling == "none" and f.max_len > 1)
     gid = fidx[item_field].gid
 
     engine = EmbeddingEngine(plan, axes, world, strategy=scfg.strategy,
-                             use_cache=False)
-    # candidate tower: same assignment, but buckets sized for cand_local ids
+                             use_cache=False,
+                             use_fused_kernels=scfg.use_fused_kernels)
+    # candidate tower: same assignment, but buckets sized for one score
+    # chunk — per-shard memory no longer grows with n_candidates
     cand_engine = EmbeddingEngine(
         plan, axes, world, strategy=scfg.strategy, use_cache=False,
-        capacity={**plan.capacity, gid: max(plan.capacity[gid], cand_local)})
+        use_fused_kernels=scfg.use_fused_kernels,
+        capacity={**plan.capacity, gid: max(plan.capacity[gid], chunk)})
 
     especs = emb_specs(plan, axes)
     rep = replicated(jax.eval_shape(lambda k: model.init_dense(k),
@@ -124,13 +142,32 @@ def make_retrieval_step(model: WDLModel, plan: PicassoPlan, mesh, axes,
         pooled, _ctx = engine.forward(emb, packed)
         user = model.user_repr(dense, pooled, batch)          # [K, D]
 
-        # --- candidate tower: local chunk of ids via the same engine --------
-        rows = cand_engine.lookup_rows(emb, gid, cand_ids.reshape(-1))
-        scores = jnp.max(rows @ user.T, axis=-1).astype(jnp.float32)  # max over interests
+        # --- candidate tower: chunked scoring + streaming top-k -------------
+        ids_flat = cand_ids.reshape(-1)
+        if pad:
+            ids_flat = jnp.concatenate(
+                [ids_flat, jnp.broadcast_to(ids_flat[:1], (pad,))])
+        valid = jnp.arange(n_chunks * chunk, dtype=jnp.int32) < cand_local
         k = min(top_k, cand_local)
-        sv, si = lax.top_k(scores, k)
+
+        def score_one(carry, x):
+            best_v, best_i = carry
+            cids, cval = x
+            rows = cand_engine.lookup_rows(emb, gid, cids)
+            sc = jnp.max(rows @ user.T, axis=-1).astype(jnp.float32)
+            sc = jnp.where(cval, sc, -jnp.inf)      # mask the pad tail
+            av = jnp.concatenate([best_v, sc])
+            ai = jnp.concatenate([best_i, cids])
+            nv, nix = lax.top_k(av, k)
+            return (nv, jnp.take(ai, nix)), None
+
+        init = (jnp.full((k,), -jnp.inf, jnp.float32),
+                jnp.zeros((k,), cand_ids.dtype))
+        (sv, s_ids), _ = lax.scan(
+            score_one, init, (ids_flat.reshape(n_chunks, chunk),
+                              valid.reshape(n_chunks, chunk)))
         gv = lax.all_gather(sv, axes, tiled=True)              # [world*k]
-        gi = lax.all_gather(cand_ids.reshape(-1)[si], axes, tiled=True)
+        gi = lax.all_gather(s_ids, axes, tiled=True)
         fv, fi = lax.top_k(gv, top_k)
         return fv, gi[fi]
 

@@ -61,6 +61,10 @@ class TrainConfig:
     use_l2: bool = True            # L2 host tier (only where the plan
                                    # budgets l2_rows AND L1 is active)
     use_interleave: bool = True    # K-Interleaving waves (False: one wave)
+    # fused Pallas sparse kernels (gather+pool VJP, dedup+adagrad scatter,
+    # tier probes): 'auto' = on where Pallas runs (TPU / interpret soak),
+    # True/'on' force, False/'off' force the jnp reference chains
+    use_fused_kernels: Any = "auto"
     cache_update: str = "psum"     # 'psum' (exact) | 'stale' (Algorithm 1)
     flush_in_step: bool = True     # False: host calls make_flush_fn() instead
     grad_compression: str = "none"  # 'none' | 'bf16' | 'f8' (dense DP psum)
@@ -89,7 +93,8 @@ def make_train_step(model: WDLModel, plan: PicassoPlan, mesh, axes: Tuple[str, .
     engine = EmbeddingEngine(
         plan, axes, world, strategy=tcfg.strategy, use_cache=tcfg.use_cache,
         use_l2=tcfg.use_l2, use_interleave=tcfg.use_interleave,
-        lr_emb=tcfg.lr_emb, eps=tcfg.eps, cache_update=tcfg.cache_update)
+        lr_emb=tcfg.lr_emb, eps=tcfg.eps, cache_update=tcfg.cache_update,
+        use_fused_kernels=tcfg.use_fused_kernels)
 
     # -------------------------------------------------------- loss closure
     def micro_loss(dense, pooled, mb):

@@ -162,6 +162,47 @@ print("DIFF", max(abs(a-b) for a,b in zip(traj[True], traj[False])))
     assert diff < 1e-3  # exact up to fp reassociation in the routed path
 
 
+def test_fused_kernels_parity_8dev():
+    """Fused Pallas sparse kernels == reference chains on a real 4x2 mesh
+    (regression: jax-0.4.37 interpret-mode prefetch-gather index maps
+    combined with aliased ANY operands mis-gathered on devices > 0 — the
+    dedup kernel now pre-sorts its grads outside the kernel, and this test
+    pins multi-device parity end to end, warm hot tier included)."""
+    out = _run(HEADER + """
+from repro.configs import get_config
+from repro.core.packing import make_plan
+from repro.data.synthetic import make_batch
+from repro.dist.sharding import batch_specs, to_named
+from repro.models.wdl import WDLModel
+from repro.train.train_step import TrainConfig, init_state, make_train_step
+mesh = make_test_mesh(4, 2); axes=("data","model"); GB=64
+cfg = get_config("deepfm", smoke=True)
+plan = make_plan(cfg, world=8, per_device_batch=8, hot_bytes=1<<14,
+                 l2_bytes=4096, flush_iters=3, warmup_iters=2)
+model = WDLModel(cfg, plan)
+traj = {}
+for fused in (False, True):
+    state = init_state(model, plan, jax.random.PRNGKey(0), mesh=mesh, axes=axes)
+    step, _ = make_train_step(model, plan, mesh, axes, GB,
+                              TrainConfig(strategy="picasso_l2",
+                                          use_fused_kernels=fused))
+    rng = np.random.default_rng(0)
+    ls, hits = [], 0
+    for i in range(6):
+        b = make_batch(cfg, GB, rng)
+        b = jax.device_put(b, to_named(mesh, batch_specs(b, axes)))
+        state, m = step(state, b)
+        ls.append(float(m["loss"]))
+        hits += int(m["cache_hits"])
+    traj[fused] = (ls, hits)
+ldiff = max(abs(a-b) for a, b in zip(traj[True][0], traj[False][0]))
+print("LDIFF", ldiff, "HITS", traj[True][1], traj[False][1])
+""")
+    toks = out.split()
+    assert float(toks[1]) < 1e-4          # fused == reference trajectories
+    assert int(toks[3]) > 0 and int(toks[3]) == int(toks[4])
+
+
 def test_mini_dryrun_lowers_and_compiles():
     """Small-mesh dry-run: one cell per family lowers + compiles + reports
     roofline terms (the 512-device version runs in launch/dryrun.py)."""
