@@ -5,6 +5,13 @@ plus 'mixed' (the repro.core.assign cost model picking a strategy per packed
 group) and 'picasso_l2' (the L2 host-memory tier behind the hot tier).
 CPU-scaled smoke configs; the *ratio* is the reproduced quantity.
 
+PR6 rows: the software-pipelined step ('overlap=on' vs the jaxpr-pinned
+'overlap=off' loop, both with >1 micro-batch so the double-buffered prefetch
+actually engages), routed-gradient wire compression ('grad_compress=fp16' /
+'grad_compress=topk'), and the two §II-C decomposition baselines the
+registry gained ('mp_nodedup' — the Shuffle without K-Packed dedup — and
+'allgather_rows' — dedup'd replication).
+
 ``--smoke`` runs one model at a reduced batch with fewer timing iters — the
 fast CI pass wired into scripts/ci.sh (and the only place the auto-assignment
 and two-tier cache paths are executed on every CI run)."""
@@ -58,6 +65,35 @@ def run(smoke: bool = False):
                               TrainConfig(strategy="picasso",
                                           use_fused_kernels=True),
                               iters=iters)
+        # software-pipelined step: both rows run >1 micro-batch so the
+        # prefetch has something to overlap; 'off' is the legacy loop
+        ov_off = bench_train_ips(cfg, gb,
+                                 TrainConfig(strategy="picasso", overlap="off"),
+                                 iters=iters, n_micro=2)
+        ov_on = bench_train_ips(cfg, gb,
+                                TrainConfig(strategy="picasso", overlap="on"),
+                                iters=iters, n_micro=2)
+        # routed-gradient wire compression on the transposed Shuffle
+        cmp_fp16 = bench_train_ips(cfg, gb,
+                                   TrainConfig(strategy="picasso",
+                                               grad_compress="fp16"),
+                                   iters=iters)
+        cmp_topk = bench_train_ips(cfg, gb,
+                                   TrainConfig(strategy="picasso",
+                                               grad_compress="topk"),
+                                   iters=iters)
+        # §II-C decomposition baselines: no-dedup Shuffle (prices K-Packed
+        # Unique&Partition; exact_capacity so duplicates never overflow) and
+        # dedup'd replication (prices the routing itself)
+        nod = bench_train_ips(cfg, gb,
+                              TrainConfig(strategy="mp_nodedup",
+                                          use_cache=False),
+                              iters=iters, enable_cache=False,
+                              exact_capacity=True)
+        agr = bench_train_ips(cfg, gb,
+                              TrainConfig(strategy="allgather_rows",
+                                          use_cache=False),
+                              iters=iters, enable_cache=False)
         speedup = ps["us_per_call"] / pic["us_per_call"]
         emit(f"throughput/{name}/picasso", pic["us_per_call"], f"ips={pic['ips']:.0f}")
         emit(f"throughput/{name}/picasso+fused", fus["us_per_call"],
@@ -70,6 +106,20 @@ def run(smoke: bool = False):
              f"ips={l2['ips']:.0f}")
         emit(f"throughput/{name}/auto+replan", rep["us_per_call"],
              f"ips={rep['ips']:.0f},rev={rep['rev']},migrated={rep['migrated']}")
+        emit(f"throughput/{name}/overlap=off", ov_off["us_per_call"],
+             f"ips={ov_off['ips']:.0f}")
+        emit(f"throughput/{name}/overlap=on", ov_on["us_per_call"],
+             f"ips={ov_on['ips']:.0f}")
+        emit(f"throughput/{name}/overlap_on_vs_off", 0.0,
+             "x{:.2f}".format(ov_off["us_per_call"] / ov_on["us_per_call"]))
+        emit(f"throughput/{name}/grad_compress=fp16", cmp_fp16["us_per_call"],
+             f"ips={cmp_fp16['ips']:.0f}")
+        emit(f"throughput/{name}/grad_compress=topk", cmp_topk["us_per_call"],
+             f"ips={cmp_topk['ips']:.0f}")
+        emit(f"throughput/{name}/mp_nodedup", nod["us_per_call"],
+             f"ips={nod['ips']:.0f}")
+        emit(f"throughput/{name}/allgather_rows", agr["us_per_call"],
+             f"ips={agr['ips']:.0f}")
         emit(f"throughput/{name}/speedup", 0.0, f"x{speedup:.2f}")
         if not smoke:
             # paper §II-C intermediate baseline: MP routing, but neither

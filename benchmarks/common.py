@@ -127,7 +127,7 @@ def bench_replan_ips(cfg: WDLConfig, gb: int, iters: int = 5,
 # every emit() lands here too, so drivers can persist the run as one JSON
 # artifact (the repo-root perf trajectory: BENCH_<pr>.json)
 _ROWS: List[Dict[str, Any]] = []
-BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_5.json"
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_6.json"
 
 
 def emit(name: str, us: float, derived: str) -> None:
@@ -156,7 +156,8 @@ def write_bench_json(path: Optional[pathlib.Path] = None) -> pathlib.Path:
     fresh = {r["name"] for r in _ROWS}
     rows = [r for r in rows if r["name"] not in fresh] + _ROWS
     payload = {
-        "bench": "PR5: fused sparse hot path (fused vs reference kernels)",
+        "bench": ("PR6: interleaved train step (overlap on/off), compressed "
+                  "routed gradients, fused interaction backwards"),
         "rows": rows,
     }
     path.write_text(json.dumps(payload, indent=1) + "\n")

@@ -44,15 +44,25 @@ echo "$bench_out" | grep -q "/auto+replan.*migrated=1" \
 # run must land in the repo-root perf trajectory artifact
 echo "$bench_out" | grep -q "/picasso+fused" \
     || { echo "ci.sh: bench smoke missing the fused-kernel row" >&2; exit 1; }
-test -f BENCH_5.json \
-    || { echo "ci.sh: bench smoke did not write BENCH_5.json" >&2; exit 1; }
-grep -q "picasso+fused" BENCH_5.json \
-    || { echo "ci.sh: BENCH_5.json has no fused-vs-reference rows" >&2; exit 1; }
+# the software-pipelined step and the compressed routed-gradient path must
+# both be timed (and land in the artifact) on every CI run
+echo "$bench_out" | grep -q "/overlap=on" \
+    || { echo "ci.sh: bench smoke missing the 'overlap=on' row" >&2; exit 1; }
+echo "$bench_out" | grep -q "/grad_compress=fp16" \
+    || { echo "ci.sh: bench smoke missing the 'grad_compress=fp16' row" >&2; exit 1; }
+test -f BENCH_6.json \
+    || { echo "ci.sh: bench smoke did not write BENCH_6.json" >&2; exit 1; }
+grep -q "picasso+fused" BENCH_6.json \
+    || { echo "ci.sh: BENCH_6.json has no fused-vs-reference rows" >&2; exit 1; }
+grep -q "overlap=on" BENCH_6.json \
+    || { echo "ci.sh: BENCH_6.json missing the overlap rows" >&2; exit 1; }
+grep -q "grad_compress" BENCH_6.json \
+    || { echo "ci.sh: BENCH_6.json missing the grad_compress rows" >&2; exit 1; }
 # isolated fused-vs-reference microbench rows (gather+pool / dedup+adagrad /
 # tier probe) merge into the same artifact
 python -m benchmarks.bench_kernels --smoke
-grep -q "kernels/gather_pool" BENCH_5.json \
-    || { echo "ci.sh: BENCH_5.json missing the kernel microbench rows" >&2; exit 1; }
+grep -q "kernels/gather_pool" BENCH_6.json \
+    || { echo "ci.sh: BENCH_6.json missing the kernel microbench rows" >&2; exit 1; }
 
 echo "== tier-1: fused-kernel interpret soak =="
 # every Pallas kernel (sparse + interaction) forced through the interpreter
@@ -86,6 +96,23 @@ first, last = st.median(losses[:10]), st.median(losses[-20:])
 assert last < first * 0.95, \
     f"loss did not decrease across the replan: {first:.4f} -> {last:.4f}"
 print(f"replan smoke: loss {first:.4f} -> {last:.4f} across >=1 migration")
+PY
+
+echo "== tier-1: overlap smoke =="
+# the software-pipelined step with fp16 routed-gradient compression must
+# still learn: same loss-decrease criterion as the replan smoke, on the
+# overlap='on' + grad_compress='fp16' trainer path end to end
+overlap_out=$(python -m repro.launch.train --arch deepfm --smoke --steps 60 \
+    --global-batch 64 --n-micro 2 --overlap on --grad-compress fp16 \
+    --learnable --lr-emb 0.1 --lr-dense 3e-3 --log-every 1)
+OVERLAP_OUT="$overlap_out" python - <<'PY'
+import os, re, statistics as st
+losses = [float(m) for m in re.findall(r"loss=([0-9.]+)", os.environ["OVERLAP_OUT"])]
+assert len(losses) >= 40, f"too few logged losses: {len(losses)}"
+first, last = st.median(losses[:10]), st.median(losses[-20:])
+assert last < first * 0.95, \
+    f"loss did not decrease under overlap+fp16: {first:.4f} -> {last:.4f}"
+print(f"overlap smoke: loss {first:.4f} -> {last:.4f} (overlap=on, fp16 wire)")
 PY
 
 echo "== tier-1: docs sync =="

@@ -1,4 +1,4 @@
-"""PICASSO Interleaving (paper §III-C).
+"""PICASSO Interleaving (paper §III-C): wave barriers + the step pipeline.
 
 K-Interleaving: packed lookups are issued in planner-assigned waves with
 ``optimization_barrier`` pinning wave boundaries, so comm-bound Shuffle ops of
@@ -9,22 +9,86 @@ train, serve, retrieval, and the dry-run cells.
 
 D-Interleaving: the train step processes micro-batches in a software pipeline
 where the (comm-bound) ``EmbeddingEngine.forward`` of micro-batch i+1 is
-issued before the (compute-bound) dense stage of micro-batch i (Fig. 8b); see
-repro/train/train_step.py. Sparse updates of micro-batch i land after the
-lookup of i+1 was issued — the same bounded-staleness-within-a-batch the
-paper's pipeline has; n_micro=1 recovers exact semantics.
+issued before the (compute-bound) dense stage of micro-batch i (Fig. 8b).
+This module owns the *scheduling* primitives of that pipeline:
+
+``resolve_overlap``
+    maps the ``TrainConfig.overlap`` spelling (``'off' | 'on' | 'auto'`` or a
+    bool) to one static decision per step build — ``'auto'`` engages the
+    pipeline exactly when there is more than one micro-batch to overlap.
+``pipeline_handoff``
+    the two-slot prefetch boundary: the in-flight lookup of chunk i+1 (its
+    dedup + all_to_all Shuffle) is tied to chunk i's dense-stage inputs
+    through one ``optimization_barrier``, so the scheduler must issue the
+    collective *before* the dense stage and may await it only *after* — the
+    double-buffered lookup state of the overlapped step. Barriers are
+    identity functions on values: overlap-on is numerically the same program
+    as overlap-off with ``pipeline_micro`` order, just with its schedule
+    pinned (the parity tests assert the trajectories match).
+``barrier``
+    the shared pytree-flattening ``optimization_barrier`` wrapper both hooks
+    (and the K-interleave ``wave_barrier``) are built on.
+
+Sparse updates of micro-batch i land after the lookup of i+1 was issued —
+the same bounded-staleness-within-a-batch the paper's pipeline has;
+n_micro=1 recovers exact semantics.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, List, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Sequence, Tuple, Union
 
 import jax
+
+
+def barrier(tree: Any) -> Any:
+    """Pass an arbitrary pytree through one ``optimization_barrier``.
+
+    Identity on values; on the schedule it forces everything *feeding* the
+    tree to be issued before anything that *consumes* it runs.
+    """
+    flat, treedef = jax.tree.flatten(tree)
+    if not flat:
+        return tree
+    flat = jax.lax.optimization_barrier(tuple(flat))
+    return jax.tree.unflatten(treedef, list(flat))
 
 
 def wave_barrier(values: Sequence[Any]) -> List[Any]:
     """Pin completion of a K-interleave wave (control-dependency boundary)."""
     if not values:
         return []
-    flat, tree = jax.tree.flatten(tuple(values))
-    flat = jax.lax.optimization_barrier(tuple(flat))
-    return list(jax.tree.unflatten(tree, flat))
+    return list(barrier(tuple(values)))
+
+
+def pipeline_handoff(current: Any, prefetch: Any) -> Tuple[Any, Any]:
+    """Two-slot D-Interleaving boundary (Fig. 8b).
+
+    ``current`` is chunk i's dense-stage input (the pooled rows + lookup
+    ctx); ``prefetch`` is the just-issued forward of chunk i+1 whose Shuffle
+    should be in flight while the dense stage of i runs. Tying both through
+    one barrier makes the i+1 collective issue *before* the dense compute
+    that reads ``current`` and lets it complete *behind* it.
+
+    Returns the same (current, prefetch) values.
+    """
+    return barrier((current, prefetch))
+
+
+def resolve_overlap(spec: Union[str, bool, None], n_micro: int) -> bool:
+    """Map a ``TrainConfig.overlap`` spelling to a static bool, once.
+
+    ``'auto'``/``None`` engage the software pipeline exactly when the step
+    has more than one micro-batch (a single chunk has nothing to double-
+    buffer); ``'on'``/``'off'``/bools force it. Raises on anything else so
+    config typos fail at step construction, not silently at dispatch.
+    """
+    if spec is None or spec == "auto":
+        return n_micro > 1
+    if isinstance(spec, bool):
+        return spec
+    if spec == "on":
+        return True
+    if spec == "off":
+        return False
+    raise ValueError(
+        f"overlap must be 'auto', 'on', 'off' or a bool; got {spec!r}")

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.kernels import ops
+from repro.optim import grad_compression as gcomp
 
 Axes = Union[str, Tuple[str, ...]]
 
@@ -93,6 +94,30 @@ def partition(uniq: jnp.ndarray, miss: jnp.ndarray, rows_per_shard: int, world: 
 def _a2a(x: jnp.ndarray, axes: Axes) -> jnp.ndarray:
     """all_to_all over (possibly multiple) mesh axes; [world, ...] layout."""
     return lax.all_to_all(x, axes, split_axis=0, concat_axis=0, tiled=True)
+
+
+def _compressed_a2a_rows(send_g: jnp.ndarray, axes: Axes, world: int,
+                         cap: int, compress: str = "none",
+                         fused: bool = False) -> jnp.ndarray:
+    """all_to_all ``[world*cap, D]`` gradient rows, compressed on the wire.
+
+    ``compress='none'`` is the exact legacy hop (bitwise-identical bytes and
+    math). Otherwise the rows are compressed *before* the collective (so only
+    the narrow payload crosses ICI), every payload leaf rides its own
+    all_to_all (leaves keep the leading row dim, so the [world, cap, ...]
+    reshape is payload-shape agnostic), and owners decompress after. Zero
+    rows — padded bucket slots — survive every mode bitwise, which the
+    dedup+adagrad scatter's validity masking relies on.
+    """
+    d = send_g.shape[-1]
+    if compress == "none":
+        return _a2a(send_g.reshape(world, cap, d), axes).reshape(world * cap, d)
+    payload = gcomp.compress_rows(send_g, compress, fused=fused)
+    payload = jax.tree.map(
+        lambda x: _a2a(x.reshape(world, cap, *x.shape[1:]), axes)
+        .reshape(world * cap, *x.shape[1:]),
+        payload)
+    return gcomp.decompress_rows(payload, d, compress, fused=fused)
 
 
 # ---------------------------------------------------------------------------
@@ -287,6 +312,7 @@ def apply_sparse_grads(
     eps: float = 1e-8,
     cache_update: str = "psum",   # 'psum' (replica-consistent exact) | 'stale'
     fused: bool = False,          # fused dedup+adagrad scatter kernels
+    compress: str = "none",       # routed-grad wire compression (grad_compression)
 ) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[CacheState]]:
     """Transposed path: miss grads -> owners; hit grads -> hot tier or owners.
 
@@ -297,10 +323,17 @@ def apply_sparse_grads(
               small all_to_all (O(hits*D)); the hot tier is read-only between
               flushes (paper Algorithm 1 semantics: bounded read staleness of
               flush_iters, master always exact).
+
+    ``compress`` shrinks the routed all_to_all payloads ('none'|'fp16'|'topk',
+    see ``repro.optim.grad_compression``). It covers the per-step routed hops
+    only — tier-maintenance traffic (hot-tier psums, flush reloads) stays
+    exact, since its cost is amortized and its consumers assume bitwise
+    replica consistency.
     """
     # ---- miss gradients: transposed Shuffle --------------------------------
     w_shard, acc_shard = _apply_miss_grads(w_shard, acc_shard, ctx, g_u,
-                                           axes, world, lr, eps, fused)
+                                           axes, world, lr, eps, fused,
+                                           compress)
 
     if cache is None or cache.keys.shape[0] == 0:
         return w_shard, acc_shard, cache
@@ -308,7 +341,8 @@ def apply_sparse_grads(
     if cache_update == "stale":
         # ---- hit gradients: route to owners (cache stays read-only) --------
         w_shard, acc_shard = _route_hit_grads(w_shard, acc_shard, ctx, ctx.hit,
-                                              g_u, axes, world, lr, eps, fused)
+                                              g_u, axes, world, lr, eps, fused,
+                                              compress)
         return w_shard, acc_shard, cache
 
     # ---- 'psum': hit grads into the replicated hot tier --------------------
@@ -318,14 +352,15 @@ def apply_sparse_grads(
 
 
 def _apply_miss_grads(w_shard, acc_shard, ctx: LookupCtx, g_u, axes: Axes,
-                      world: int, lr: float, eps: float, fused: bool = False):
+                      world: int, lr: float, eps: float, fused: bool = False,
+                      compress: str = "none"):
     """Transposed Shuffle: route miss grads to owner shards and apply."""
     d = w_shard.shape[1]
     cap = ctx.recv_ids.shape[1]  # static block shape
     send_g = jnp.zeros((world * cap, d), g_u.dtype)
     send_g = send_g.at[ctx.routing.send_slot].set(
         g_u * ctx.routing.kept[:, None].astype(g_u.dtype), mode="drop")
-    recv_g = _a2a(send_g.reshape(world, cap, d), axes).reshape(world * cap, d)
+    recv_g = _compressed_a2a_rows(send_g, axes, world, cap, compress, fused)
     return _dedup_apply(
         w_shard, acc_shard,
         ctx.recv_local.reshape(-1), recv_g, ctx.recv_valid.reshape(-1), lr, eps,
@@ -334,7 +369,7 @@ def _apply_miss_grads(w_shard, acc_shard, ctx: LookupCtx, g_u, axes: Axes,
 
 def _route_hit_grads(w_shard, acc_shard, ctx: LookupCtx, hit_mask, g_u,
                      axes: Axes, world: int, lr: float, eps: float,
-                     fused: bool = False):
+                     fused: bool = False, compress: str = "none"):
     """'stale' mode: grads of tier-served ids ride a second small all_to_all
     to the owner shards; the tier itself stays read-only between flushes."""
     rps, d = w_shard.shape
@@ -346,7 +381,7 @@ def _route_hit_grads(w_shard, acc_shard, ctx: LookupCtx, hit_mask, g_u,
     send_hg = send_hg.at[r.send_slot].set(
         g_u * r.kept[:, None].astype(g_u.dtype), mode="drop")
     recv_ids = _a2a(send_ids.reshape(world, cap), axes).reshape(-1)
-    recv_hg = _a2a(send_hg.reshape(world, cap, d), axes).reshape(world * cap, d)
+    recv_hg = _compressed_a2a_rows(send_hg, axes, world, cap, compress, fused)
     my = lax.axis_index(axes).astype(jnp.int32)
     local = jnp.clip(recv_ids - my * rps, 0, rps - 1)
     return _dedup_apply(
@@ -429,6 +464,7 @@ def apply_sparse_grads_l2(
     eps: float = 1e-8,
     cache_update: str = "psum",
     fused: bool = False,
+    compress: str = "none",
 ) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[CacheState], CacheState]:
     """Two-tier transposed path (L1 hot tier + L2 host tier).
 
@@ -450,11 +486,13 @@ def apply_sparse_grads_l2(
     ``ctx`` must come from an L2-probing ``mp_lookup`` (``ctx.l2_hit`` set).
     """
     w_shard, acc_shard = _apply_miss_grads(w_shard, acc_shard, ctx, g_u,
-                                           axes, world, lr, eps, fused)
+                                           axes, world, lr, eps, fused,
+                                           compress)
     if cache_update == "stale":
         both = ctx.hit | ctx.l2_hit
         w_shard, acc_shard = _route_hit_grads(w_shard, acc_shard, ctx, both,
-                                              g_u, axes, world, lr, eps, fused)
+                                              g_u, axes, world, lr, eps, fused,
+                                              compress)
         return w_shard, acc_shard, cache, l2
     if cache is not None and cache.keys.shape[0] > 0:
         cache = _psum_into_tier(cache, ctx.hit, ctx.cache_slot, g_u, axes,
@@ -674,3 +712,60 @@ def ps_lookup(table_shard: jnp.ndarray, ids: jnp.ndarray, *, axes: Axes, world: 
     full = lax.psum(part, axes)                              # [world*n, D]
     n = ids.shape[0]
     return lax.dynamic_slice_in_dim(full, my * n, n, axis=0)
+
+
+def mp_lookup_nodedup(
+    table_shard: jnp.ndarray,
+    ids: jnp.ndarray,
+    *,
+    axes: Axes,
+    world: int,
+    capacity: int,
+) -> Tuple[jnp.ndarray, LookupCtx]:
+    """Model-parallel Shuffle *without* K-Packed dedup (paper §II-C baseline).
+
+    Every raw id rides the all_to_all — duplicates each consume their own
+    bucket slot, so the wire payload is O(n) rows instead of O(uniq). This is
+    the 'fragmentary op sequence' PICASSO's Unique&Partition fusion beats; it
+    exists so ``bench_throughput`` can price the dedup itself.
+
+    Returns the same ``(rows, LookupCtx)`` contract as ``mp_lookup`` (ids are
+    sorted, not uniqued — ``inv`` maps original positions to sorted slots, so
+    pooling and the transposed gradient path compose unchanged; the owner-side
+    dedup+adagrad scatter sums the duplicate rows' grads, keeping training
+    math identical to the deduped path whenever nothing overflows). Needs
+    ``capacity >= n`` per owner in the worst case — plan with
+    ``exact_capacity=True`` for lossless parity runs.
+    """
+    rps, d = table_shard.shape
+    n = ids.shape[0]
+    order = jnp.argsort(ids)
+    s = ids[order]                                  # sorted, duplicates kept
+    inv = jnp.zeros((n,), jnp.int32).at[order].set(
+        jnp.arange(n, dtype=jnp.int32))
+    every = jnp.ones((n,), bool)
+    r = partition(s, every, rps, world, capacity)
+
+    send_ids = jnp.full((world * capacity,), -1, jnp.int32)
+    send_ids = send_ids.at[r.send_slot].set(s.astype(jnp.int32), mode="drop")
+    recv_ids = _a2a(send_ids.reshape(world, capacity), axes)
+
+    my = lax.axis_index(axes)
+    base = my.astype(jnp.int32) * rps
+    recv_valid = recv_ids >= 0
+    recv_local = jnp.clip(recv_ids - base, 0, rps - 1)
+
+    served = jnp.take(table_shard, recv_local.reshape(-1), axis=0)
+    served = served * recv_valid.reshape(-1, 1).astype(served.dtype)
+    back = _a2a(served.reshape(world, capacity, d), axes).reshape(
+        world * capacity, d)
+    take_idx = jnp.minimum(r.send_slot, world * capacity - 1)
+    rows = jnp.take(back, take_idx, axis=0) * r.kept[:, None].astype(served.dtype)
+
+    ctx = LookupCtx(
+        uniq=s, inv=inv, uvalid=every,
+        hit=jnp.zeros((n,), bool), cache_slot=jnp.zeros((n,), jnp.int32),
+        routing=r, recv_ids=recv_ids, recv_local=recv_local,
+        recv_valid=recv_valid,
+    )
+    return rows, ctx

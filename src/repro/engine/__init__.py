@@ -1,9 +1,10 @@
 """Unified embedding engine: one sparse path for train / serve / retrieval.
 
 ``EmbeddingEngine`` executes a ``PicassoPlan`` with per-group pluggable
-``LookupStrategy``s (``'picasso' | 'hybrid' | 'ps' | 'picasso_l2'``, see
-``strategies``): a single name broadcasts, ``'mixed'``/``'auto'`` uses the
-plan's assignment or compiles one with the ``repro.core.assign`` cost model.
+``LookupStrategy``s (``'picasso' | 'hybrid' | 'ps' | 'picasso_l2'`` plus the
+``'mp_nodedup' | 'allgather_rows'`` benchmark baselines, see ``strategies``):
+a single name broadcasts, ``'mixed'``/``'auto'`` uses the plan's assignment
+or compiles one with the ``repro.core.assign`` cost model.
 
 This package re-exports the full public surface of the subsystem — the
 engine, every registry strategy class and helper, and the assignment
@@ -15,18 +16,21 @@ from repro.core.assign import (AUTO_NAMES, GroupScore, StrategyAssignment,
                                estimate_l2_gain, estimate_skew, maybe_compile,
                                resolve_assignment)
 from repro.engine.engine import EmbeddingEngine, EngineContext, export_stats
-from repro.engine.strategies import (HybridStrategy, LookupStrategy,
+from repro.engine.strategies import (AllGatherRowsStrategy, HybridStrategy,
+                                     LookupStrategy, MPNoDedupStrategy,
                                      PicassoL2Strategy, PicassoStrategy,
                                      PSStrategy, available_strategies,
                                      get_strategy, register_strategy)
 
 __all__ = [
     "AUTO_NAMES",
+    "AllGatherRowsStrategy",
     "EmbeddingEngine",
     "EngineContext",
     "GroupScore",
     "HybridStrategy",
     "LookupStrategy",
+    "MPNoDedupStrategy",
     "PSStrategy",
     "PicassoL2Strategy",
     "PicassoStrategy",

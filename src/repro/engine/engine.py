@@ -77,6 +77,7 @@ from repro.core.interleaving import wave_barrier
 from repro.core.packing import PicassoPlan
 from repro.embedding.state import EmbeddingState
 from repro.engine.strategies import LookupStrategy, get_strategy
+from repro.optim import grad_compression as gcomp
 
 Axes = Union[str, Tuple[str, ...]]
 
@@ -132,6 +133,10 @@ class EmbeddingEngine:
         ``'off'``/``False`` (force the reference chains). Resolved ONCE here
         (``repro.kernels.ops.resolve_fused``) to a static bool every
         strategy and the pool/transpose below carry through their traces.
+    grad_compress: wire compression of the routed sparse-gradient payload
+        (``'none' | 'fp16' | 'topk'``, see ``repro.optim.grad_compression``)
+        — applied by every strategy's backward collective; ``'none'`` keeps
+        training bitwise-identical. Tier-maintenance traffic stays exact.
     capacity: optional per-gid override of the all_to_all bucket capacity
         (e.g. retrieval candidate towers that look up far more ids per shard
         than the training batch the plan was sized for).
@@ -143,12 +148,14 @@ class EmbeddingEngine:
                  lr_emb: float = 0.05, eps: float = 1e-8,
                  cache_update: str = "psum",
                  use_fused_kernels: Any = "auto",
+                 grad_compress: str = "none",
                  capacity: Optional[Dict[int, int]] = None):
         self.plan = plan
         self.axes = axes
         self.world = world
         self.cache_update = cache_update
         self.use_fused = ops.resolve_fused(use_fused_kernels)
+        self.grad_compress = gcomp.validate_routed_mode(grad_compress)
         # gid -> registry name; raises on unknown names / partial coverage
         # (an auto-compiled assignment is recorded on the plan, so the
         # host-flush engine and later call sites gate caches identically)
@@ -163,7 +170,8 @@ class EmbeddingEngine:
         insts: Dict[str, LookupStrategy] = {
             name: get_strategy(name)(
                 axes=axes, world=world, capacity=cap, lr=lr_emb, eps=eps,
-                cache_update=cache_update, use_fused=self.use_fused)
+                cache_update=cache_update, use_fused=self.use_fused,
+                grad_compress=self.grad_compress)
             for name in names}
         self.strategies: Dict[int, LookupStrategy] = {
             gid: insts[name] for gid, name in self.assignment.items()}

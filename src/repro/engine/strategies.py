@@ -34,6 +34,19 @@ Concrete strategies (selected by name through the registry):
     only the remainder rides the all_to_all Shuffle. Write-back and re-rank
     happen at flush time for both tiers at once. Cold or absent L2 is
     bitwise-identical to ``picasso``.
+``mp_nodedup``
+    The Shuffle *without* K-Packed dedup: every raw id (duplicates included)
+    rides the all_to_all. Prices the Unique&Partition fusion itself; exact
+    vs ``picasso`` under ``exact_capacity`` plans.
+``allgather_rows``
+    Dedup'd replication baseline: unique ids are served by ``ps_lookup`` and
+    row grads ride one (optionally compressed) all_gather back. Sits between
+    ``ps`` (no dedup) and the routed strategies in wire cost.
+
+Every MP strategy's routed gradient hop honours ``grad_compress``
+('none' | 'fp16' | 'topk', see ``repro.optim.grad_compression``): the
+all_to_all / all_gather payload is compressed on the wire and expanded on
+the owner side; 'none' keeps training bitwise-identical.
 
 New workloads (multi-task serving, frequency-adaptive dims, other baselines)
 land as one ``@register_strategy`` class instead of a new copy of the loop.
@@ -53,6 +66,7 @@ from jax import lax
 
 from repro.core import packed_embedding as pe
 from repro.embedding.state import EmbeddingState
+from repro.optim import grad_compression as gcomp
 
 Axes = Union[str, Tuple[str, ...]]
 
@@ -100,7 +114,8 @@ class LookupStrategy:
 
     def __init__(self, *, axes: Axes, world: int, capacity: Dict[int, int],
                  lr: float = 0.05, eps: float = 1e-8,
-                 cache_update: str = "psum", use_fused: bool = False):
+                 cache_update: str = "psum", use_fused: bool = False,
+                 grad_compress: str = "none"):
         self.axes = axes
         self.world = world
         self.capacity = capacity
@@ -111,6 +126,8 @@ class LookupStrategy:
         # strategy issues — tier probes, the dedup+adagrad scatter — through
         # the fused Pallas kernels (see repro.kernels.ops.resolve_fused)
         self.use_fused = use_fused
+        # wire compression of the routed sparse-gradient payload
+        self.grad_compress = gcomp.validate_routed_mode(grad_compress)
 
     # ----------------------------------------------------------------- fwd
     def lookup(self, st: EmbeddingState, gid: int, ids: jnp.ndarray,
@@ -167,7 +184,8 @@ class PicassoStrategy(LookupStrategy):
         w2, acc2, cache2 = pe.apply_sparse_grads(
             st.w, st.acc, st.cache if cache_on else None, ctx, g_rows,
             axes=self.axes, world=self.world, lr=self.lr, eps=self.eps,
-            cache_update=self.cache_update, fused=self.use_fused)
+            cache_update=self.cache_update, fused=self.use_fused,
+            compress=self.grad_compress)
         counts2 = pe.count_frequencies(st.counts, ctx)
         st2 = EmbeddingState(w=w2, acc=acc2, counts=counts2,
                              cache=cache2 if cache2 is not None else st.cache,
@@ -245,7 +263,8 @@ class PicassoL2Strategy(PicassoStrategy):
         w2, acc2, cache2, l22 = pe.apply_sparse_grads_l2(
             st.w, st.acc, st.cache if cache_on else None, st.l2, ctx, g_rows,
             axes=self.axes, world=self.world, lr=self.lr, eps=self.eps,
-            cache_update=self.cache_update, fused=self.use_fused)
+            cache_update=self.cache_update, fused=self.use_fused,
+            compress=self.grad_compress)
         counts2 = pe.count_frequencies(st.counts, ctx)
         # tier-served ids never route, so they must be counted explicitly or
         # the flush ranking churn-evicts the resident (hottest) rows
@@ -291,8 +310,84 @@ class PSStrategy(LookupStrategy):
         my = lax.axis_index(self.axes).astype(jnp.int32)
         base = my * rps
         all_ids = lax.all_gather(ctx.ids, self.axes, tiled=True)
-        all_g = lax.all_gather(g_rows, self.axes, tiled=True)
+        all_g = gcomp.compressed_all_gather(g_rows, self.axes,
+                                            mode=self.grad_compress,
+                                            fused=self.use_fused)
         local = all_ids - base
+        ok = (local >= 0) & (local < rps)
+        w2, acc2 = pe._dedup_apply(st.w, st.acc, jnp.clip(local, 0, rps - 1),
+                                   all_g, ok, self.lr, self.eps,
+                                   fused=self.use_fused)
+        zero = jnp.zeros((), jnp.int32)
+        return st._replace(w=w2, acc=acc2), zero, zero
+
+
+@register_strategy("mp_nodedup")
+class MPNoDedupStrategy(LookupStrategy):
+    """Model-parallel Shuffle without K-Packed dedup (paper §II-C baseline).
+
+    Every raw id — duplicates included — consumes a Shuffle bucket slot, so
+    the wire payload scales with the batch's id count rather than its unique
+    count. Exists to price the Unique&Partition fusion in benchmarks; exact
+    vs ``picasso`` when nothing overflows (plan with ``exact_capacity=True``
+    for parity runs: duplicate grads are summed by the owner-side
+    dedup+adagrad scatter, recovering the deduped math).
+    """
+
+    uses_cache = False
+
+    def lookup(self, st, gid, ids, *, cache_on=False, l2_on=False):
+        return pe.mp_lookup_nodedup(
+            st.w, ids, axes=self.axes, world=self.world,
+            capacity=self.capacity[gid])
+
+    def apply_grads(self, st, gid, ctx, g_rows, *, cache_on=False, l2_on=False):
+        w2, acc2 = pe._apply_miss_grads(
+            st.w, st.acc, ctx, g_rows, self.axes, self.world, self.lr,
+            self.eps, self.use_fused, self.grad_compress)
+        counts2 = pe.count_frequencies(st.counts, ctx)
+        st2 = st._replace(w=w2, acc=acc2, counts=counts2)
+        return (st2, ctx.routing.overflow.astype(jnp.int32),
+                jnp.zeros((), jnp.int32))
+
+
+class AllGatherCtx(NamedTuple):
+    """Context of an allgather_rows lookup: rows are per-unique-slot."""
+
+    inv: jnp.ndarray    # [n] position -> unique slot
+    uniq: jnp.ndarray   # [n] sorted unique ids (sentinel-padded)
+
+
+@register_strategy("allgather_rows")
+class AllGatherRowsStrategy(LookupStrategy):
+    """Dedup'd replication baseline: unique rows via all_gather+psum.
+
+    Forward dedups the batch (fixed-shape unique), then serves the unique set
+    with the PS machinery — sentinel slots gather exact zero rows. Backward
+    all_gathers every shard's unique ids plus their row grads (the grads hop
+    honours ``grad_compress``) and applies them locally on the owner shard.
+    Wire cost sits between ``ps`` (no dedup at all) and the routed paths
+    (O(world * uniq * D) vs O(uniq * D)); no routing ctx, no cache tiers.
+    """
+
+    uses_cache = False
+    uses_routing_ctx = False
+
+    def lookup(self, st, gid, ids, *, cache_on=False, l2_on=False):
+        rps = st.w.shape[0]
+        u = pe.fixed_unique(ids, sentinel=rps * self.world)
+        rows = pe.ps_lookup(st.w, u.uniq, axes=self.axes, world=self.world)
+        return rows, AllGatherCtx(inv=u.inv, uniq=u.uniq)
+
+    def apply_grads(self, st, gid, ctx, g_rows, *, cache_on=False, l2_on=False):
+        rps = st.w.shape[0]
+        my = lax.axis_index(self.axes).astype(jnp.int32)
+        base = my * rps
+        all_ids = lax.all_gather(ctx.uniq, self.axes, tiled=True)
+        all_g = gcomp.compressed_all_gather(g_rows, self.axes,
+                                            mode=self.grad_compress,
+                                            fused=self.use_fused)
+        local = all_ids.astype(jnp.int32) - base
         ok = (local >= 0) & (local < rps)
         w2, acc2 = pe._dedup_apply(st.w, st.acc, jnp.clip(local, 0, rps - 1),
                                    all_g, ok, self.lr, self.eps,

@@ -1,0 +1,161 @@
+"""Pallas TPU kernels: routed sparse-gradient wire compression.
+
+The transposed Shuffle sends ``[world*cap, D]`` gradient rows over ICI every
+step; these kernels shrink that payload before the ``all_to_all`` and expand
+it after (see ``repro.optim.grad_compression.compress_rows``):
+
+``fp16``  — per-row amax scaling + float16 cast (Tensor Casting style): one
+            VMEM pass computes the row scale and the scaled cast together, so
+            the fp32 payload never round-trips HBM next to its quantized
+            copy. Wire bytes: 2/4 of fp32 (+1 fp32 scale per row).
+``topk``  — per-row magnitude top-k sparsification: k iterative first-argmax
+            selections per row block (k is static and small, the loop is
+            unrolled), emitting ``(vals, idx)``; decompress scatters them
+            back into a zero row. Wire bytes: ~2k/D of fp32.
+
+Rows that are exactly zero (padded / dropped bucket slots) compress to exact
+zeros under both modes, so invalid slots survive the roundtrip bitwise —
+the dedup+adagrad scatter behind the all_to_all relies on that.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+# ---------------------------------------------------------------- fp16 pair
+def _fp16_c_kernel(g_ref, q_ref, s_ref):
+    g = g_ref[...]
+    s = jnp.max(jnp.abs(g), axis=-1, keepdims=True).astype(jnp.float32)
+    q_ref[...] = (g / jnp.maximum(s, 1e-30)).astype(jnp.float16)
+    s_ref[...] = s
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def fp16_compress_pallas(g: jnp.ndarray, block_m: int = 256,
+                         interpret: bool = False):
+    m, d = g.shape
+    bm = min(block_m, m)
+    pad = (-m) % bm
+    if pad:
+        g = jnp.pad(g, ((0, pad), (0, 0)))
+    nm = g.shape[0] // bm
+    q, s = pl.pallas_call(
+        _fp16_c_kernel,
+        grid=(nm,),
+        in_specs=[pl.BlockSpec((bm, d), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((bm, d), lambda i: (i, 0)),
+                   pl.BlockSpec((bm, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((g.shape[0], d), jnp.float16),
+                   jax.ShapeDtypeStruct((g.shape[0], 1), jnp.float32)],
+        interpret=interpret,
+    )(g)
+    return q[:m], s[:m]
+
+
+def _fp16_d_kernel(q_ref, s_ref, o_ref):
+    o_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def fp16_decompress_pallas(q: jnp.ndarray, scale: jnp.ndarray,
+                           block_m: int = 256, interpret: bool = False):
+    m, d = q.shape
+    bm = min(block_m, m)
+    pad = (-m) % bm
+    if pad:
+        q = jnp.pad(q, ((0, pad), (0, 0)))
+        scale = jnp.pad(scale, ((0, pad), (0, 0)))
+    nm = q.shape[0] // bm
+    out = pl.pallas_call(
+        _fp16_d_kernel,
+        grid=(nm,),
+        in_specs=[pl.BlockSpec((bm, d), lambda i: (i, 0)),
+                  pl.BlockSpec((bm, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((q.shape[0], d), jnp.float32),
+        interpret=interpret,
+    )(q, scale)
+    return out[:m]
+
+
+# ---------------------------------------------------------------- topk pair
+def _topk_c_kernel(g_ref, v_ref, i_ref, *, k: int):
+    g = g_ref[...]                                    # [BM, D]
+    bm, d = g.shape
+    mag = jnp.abs(g)
+    iota = lax.broadcasted_iota(jnp.int32, (bm, d), 1)
+    active = jnp.ones((bm, d), jnp.bool_)
+    vals, idxs = [], []
+    for _ in range(k):  # k is static and small: unrolled selection loop
+        a = jnp.where(active, mag, -1.0)
+        mx = jnp.max(a, axis=-1, keepdims=True)
+        # first position achieving the max (lax.top_k tie-break order)
+        idx_j = jnp.min(jnp.where(a == mx, iota, d), axis=-1)
+        sel = iota == idx_j[:, None]
+        vals.append(jnp.sum(jnp.where(sel, g, 0.0), axis=-1))
+        idxs.append(idx_j)
+        active = active & ~sel
+    v_ref[...] = jnp.stack(vals, axis=-1)
+    i_ref[...] = jnp.stack(idxs, axis=-1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_m", "interpret"))
+def topk_compress_pallas(g: jnp.ndarray, k: int, block_m: int = 256,
+                         interpret: bool = False):
+    m, d = g.shape
+    assert 0 < k <= d, (k, d)
+    bm = min(block_m, m)
+    pad = (-m) % bm
+    if pad:
+        g = jnp.pad(g, ((0, pad), (0, 0)))
+    nm = g.shape[0] // bm
+    v, i = pl.pallas_call(
+        functools.partial(_topk_c_kernel, k=k),
+        grid=(nm,),
+        in_specs=[pl.BlockSpec((bm, d), lambda b: (b, 0))],
+        out_specs=[pl.BlockSpec((bm, k), lambda b: (b, 0)),
+                   pl.BlockSpec((bm, k), lambda b: (b, 0))],
+        out_shape=[jax.ShapeDtypeStruct((g.shape[0], k), g.dtype),
+                   jax.ShapeDtypeStruct((g.shape[0], k), jnp.int32)],
+        interpret=interpret,
+    )(g)
+    return v[:m], i[:m]
+
+
+def _topk_d_kernel(v_ref, i_ref, o_ref, *, d: int):
+    v = v_ref[...]                                    # [BM, k]
+    ix = i_ref[...]
+    bm, k = v.shape
+    iota = lax.broadcasted_iota(jnp.int32, (bm, d), 1)
+    out = jnp.zeros((bm, d), o_ref.dtype)
+    for j in range(k):  # static unrolled scatter-by-select
+        out = out + jnp.where(iota == ix[:, j][:, None],
+                              v[:, j][:, None].astype(out.dtype), 0.0)
+    o_ref[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=("d", "block_m", "interpret"))
+def topk_decompress_pallas(vals: jnp.ndarray, idx: jnp.ndarray, d: int,
+                           block_m: int = 256, interpret: bool = False):
+    m, k = vals.shape
+    bm = min(block_m, m)
+    pad = (-m) % bm
+    if pad:
+        vals = jnp.pad(vals, ((0, pad), (0, 0)))
+        idx = jnp.pad(idx, ((0, pad), (0, 0)))
+    nm = vals.shape[0] // bm
+    out = pl.pallas_call(
+        functools.partial(_topk_d_kernel, d=d),
+        grid=(nm,),
+        in_specs=[pl.BlockSpec((bm, k), lambda b: (b, 0)),
+                  pl.BlockSpec((bm, k), lambda b: (b, 0))],
+        out_specs=pl.BlockSpec((bm, d), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((vals.shape[0], d), vals.dtype),
+        interpret=interpret,
+    )(vals, idx)
+    return out[:m]

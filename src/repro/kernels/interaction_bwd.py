@@ -1,0 +1,183 @@
+"""Pallas TPU kernels: fused backwards for the dense interaction ops.
+
+The forward kernels (``fm_interaction`` / ``dot_interaction`` /
+``cross_layer``) used to fall back to ``jax.vjp`` of the jnp reference on the
+backward pass — fine on CPU, but on the Pallas branch it re-materializes the
+very HBM intermediates the forward fused away and leaves the dense stage
+behind the now-overlapped sparse stage. Each backward here is one fused pass
+per batch tile, mirroring its forward's grid:
+
+``fm``    — ``g[b] * (sum_f v - v)``: one reduce + one FMA per tile.
+``dot``   — cotangent scatter as an MXU matmul against the transposed 0/1
+            selection matrix (the same gather-free trick as the forward),
+            then ``(gZ + gZ^T) @ x`` batched on the MXU.
+``cross`` — recomputes ``z = x @ W + b`` in VMEM (cheaper than storing it),
+            then emits all four cotangents; the weight/bias grads are
+            accumulated across batch tiles in the output block (the TPU grid
+            is sequential, so revisiting the same block is the canonical
+            reduction pattern).
+
+Zero-padded batch rows contribute exactly zero to every cotangent, so the
+wrappers only pad/unpad the batch dimension like their forwards do.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+# ------------------------------------------------------------------- FM bwd
+def _fm_bwd_kernel(f_blk, g_blk, o_blk):
+    x = f_blk[...]                                    # [BB, F, D]
+    g = g_blk[...]                                    # [BB, 1]
+    s = jnp.sum(x, axis=1, keepdims=True)             # [BB, 1, D]
+    o_blk[...] = g[:, :, None] * (s - x)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def fm_interaction_bwd_pallas(fields: jnp.ndarray, g: jnp.ndarray,
+                              block_b: int = 128,
+                              interpret: bool = False) -> jnp.ndarray:
+    b, f, d = fields.shape
+    bb = min(block_b, b)
+    pad = (-b) % bb
+    if pad:
+        fields = jnp.pad(fields, ((0, pad), (0, 0), (0, 0)))
+        g = jnp.pad(g, ((0, pad), (0, 0)))
+    nb = fields.shape[0] // bb
+    out = pl.pallas_call(
+        _fm_bwd_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((bb, f, d), lambda i: (i, 0, 0)),
+                  pl.BlockSpec((bb, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bb, f, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(fields.shape, fields.dtype),
+        interpret=interpret,
+    )(fields, g)
+    return out[:b]
+
+
+# ------------------------------------------------------------------ dot bwd
+def _dot_bwd_kernel(f_blk, g_blk, selT_blk, o_blk):
+    x = f_blk[...]                                    # [BB, F, D]
+    g = g_blk[...]                                    # [BB, P]
+    bb, f, _ = x.shape
+    gz = jnp.dot(g, selT_blk[...],
+                 preferred_element_type=jnp.float32)  # [BB, F*F]
+    gz = gz.reshape(bb, f, f)
+    gz = gz + jnp.transpose(gz, (0, 2, 1))
+    o_blk[...] = lax.dot_general(
+        gz.astype(x.dtype), x, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32).astype(o_blk.dtype)
+
+
+def _selection_matrix_t(f: int, dtype) -> np.ndarray:
+    # transpose of the forward's [F*F, P] triangle-selection matrix
+    iu, ju = np.triu_indices(f, k=1)
+    p = len(iu)
+    sel = np.zeros((p, f * f), dtype)
+    sel[np.arange(p), iu * f + ju] = 1
+    return sel
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def dot_interaction_bwd_pallas(fields: jnp.ndarray, g: jnp.ndarray,
+                               block_b: int = 128,
+                               interpret: bool = False) -> jnp.ndarray:
+    b, f, d = fields.shape
+    p = f * (f - 1) // 2
+    bb = min(block_b, b)
+    pad = (-b) % bb
+    if pad:
+        fields = jnp.pad(fields, ((0, pad), (0, 0), (0, 0)))
+        g = jnp.pad(g, ((0, pad), (0, 0)))
+    selt = jnp.asarray(_selection_matrix_t(f, np.float32), fields.dtype)
+    nb = fields.shape[0] // bb
+    out = pl.pallas_call(
+        _dot_bwd_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((bb, f, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bb, p), lambda i: (i, 0)),
+            pl.BlockSpec((p, f * f), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, f, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(fields.shape, fields.dtype),
+        interpret=interpret,
+    )(fields, g, selt)
+    return out[:b]
+
+
+# ---------------------------------------------------------------- cross bwd
+def _cross_bwd_kernel(x0_blk, x_blk, w_blk, b_blk, g_blk,
+                      gx0_blk, gx_blk, gw_blk, gb_blk):
+    i = pl.program_id(0)
+    x0 = x0_blk[...]                                  # [BB, d]
+    x = x_blk[...]
+    w = w_blk[...]                                    # [d, d]
+    g = g_blk[...]
+    z = jnp.dot(x, w, preferred_element_type=jnp.float32) + b_blk[...]
+    gz = g * x0                                       # [BB, d]
+    gx0_blk[...] = g * z.astype(g.dtype)
+    gx_blk[...] = lax.dot_general(
+        gz, w, (((1,), (1,)), ((), ())),              # gz @ w^T
+        preferred_element_type=jnp.float32).astype(g.dtype) + g
+    gw_c = lax.dot_general(
+        x, gz, (((0,), (0,)), ((), ())),              # x^T @ gz
+        preferred_element_type=jnp.float32)
+    gb_c = jnp.sum(gz, axis=0, keepdims=True)
+
+    @pl.when(i == 0)
+    def _init():
+        gw_blk[...] = gw_c.astype(gw_blk.dtype)
+        gb_blk[...] = gb_c.astype(gb_blk.dtype)
+
+    @pl.when(i > 0)
+    def _accum():
+        gw_blk[...] += gw_c.astype(gw_blk.dtype)
+        gb_blk[...] += gb_c.astype(gb_blk.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def cross_layer_bwd_pallas(x0: jnp.ndarray, x: jnp.ndarray, w: jnp.ndarray,
+                           b: jnp.ndarray, g: jnp.ndarray,
+                           block_b: int = 128, interpret: bool = False):
+    bsz, d = x.shape
+    bb = min(block_b, bsz)
+    pad = (-bsz) % bb
+    if pad:
+        x0 = jnp.pad(x0, ((0, pad), (0, 0)))
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        g = jnp.pad(g, ((0, pad), (0, 0)))
+    bp = x.shape[0]
+    b2 = b.reshape(1, d)
+    gx0, gx, gw, gb = pl.pallas_call(
+        _cross_bwd_kernel,
+        grid=(bp // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, d), lambda i: (i, 0)),   # x0 tile
+            pl.BlockSpec((bb, d), lambda i: (i, 0)),   # x tile
+            pl.BlockSpec((d, d), lambda i: (0, 0)),    # full W
+            pl.BlockSpec((1, d), lambda i: (0, 0)),    # bias
+            pl.BlockSpec((bb, d), lambda i: (i, 0)),   # cotangent tile
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, d), lambda i: (i, 0)),
+            pl.BlockSpec((bb, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, d), lambda i: (0, 0)),    # accumulated over grid
+            pl.BlockSpec((1, d), lambda i: (0, 0)),    # accumulated over grid
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, d), x0.dtype),
+            jax.ShapeDtypeStruct((bp, d), x.dtype),
+            jax.ShapeDtypeStruct((d, d), w.dtype),
+            jax.ShapeDtypeStruct((1, d), b.dtype),
+        ],
+        interpret=interpret,
+    )(x0, x, w, b2, g)
+    return gx0[:bsz], gx[:bsz], gw, gb.reshape(b.shape)

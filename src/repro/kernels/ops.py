@@ -45,6 +45,13 @@ from repro.kernels.fused_embedding import (dedup_adagrad_pallas,
                                            gather_pool_pallas,
                                            segment_grad_pallas,
                                            tier_probe_pallas)
+from repro.kernels.grad_compress import (fp16_compress_pallas,
+                                         fp16_decompress_pallas,
+                                         topk_compress_pallas,
+                                         topk_decompress_pallas)
+from repro.kernels.interaction_bwd import (cross_layer_bwd_pallas,
+                                           dot_interaction_bwd_pallas,
+                                           fm_interaction_bwd_pallas)
 
 # (use_pallas, interpret), resolved once at first dispatch
 _BACKEND: Optional[Tuple[bool, bool]] = None
@@ -99,16 +106,19 @@ def _fused(fused: Optional[bool]) -> bool:
 
 
 # ---------------------------------------------------------------------------
-# dense / interaction kernels (cached backend dispatch + reference-transpose
-# VJPs)
+# dense / interaction kernels (cached backend dispatch + fused VJPs)
 #
 # ``pallas_call`` defines no VJP, so a bare dispatcher is only differentiable
 # on the CPU reference branch — the train step would fail under jax.grad
 # anywhere the Pallas branch is live (TPU, or the interpret soak). Each
-# dispatcher is therefore a ``jax.custom_vjp``: the Pallas kernel runs the
-# forward, the backward is the transpose of the pure-jnp reference (the exact
-# grads CPU training always used; bitwise-unchanged on the reference branch,
-# since its backward IS ``jax.vjp`` of the same function).
+# dispatcher is therefore a ``jax.custom_vjp``. On the Pallas branch the
+# interaction backwards run their own fused kernels
+# (``repro.kernels.interaction_bwd``) instead of re-materializing the
+# reference transpose's HBM intermediates; on the CPU branch the backward IS
+# ``jax.vjp`` of the same reference the forward ran, so CPU grads stay
+# bitwise-unchanged. (``embedding_bag`` keeps the reference transpose: the
+# engine's production sparse backward is the standalone ``segment_grad``
+# pass, not this op's VJP.)
 # ---------------------------------------------------------------------------
 
 
@@ -158,6 +168,8 @@ def _fm_fwd(fields):
 
 
 def _fm_bwd(fields, g):
+    if _use_pallas():
+        return (fm_interaction_bwd_pallas(fields, g, interpret=_interpret()),)
     _, vjp = jax.vjp(ref.fm_interaction_ref, fields)
     return vjp(g)
 
@@ -177,6 +189,8 @@ def _dot_fwd(fields):
 
 
 def _dot_bwd(fields, g):
+    if _use_pallas():
+        return (dot_interaction_bwd_pallas(fields, g, interpret=_interpret()),)
     _, vjp = jax.vjp(ref.dot_interaction_ref, fields)
     return vjp(g)
 
@@ -196,6 +210,8 @@ def _cross_fwd(x0, x, w, b):
 
 
 def _cross_bwd(res, g):
+    if _use_pallas():
+        return cross_layer_bwd_pallas(*res, g, interpret=_interpret())
     _, vjp = jax.vjp(ref.cross_layer_ref, *res)
     return vjp(g)
 
@@ -279,3 +295,39 @@ def tier_probe(uniq, uvalid, keys, rows, fused: Optional[bool] = None):
         return tier_probe_pallas(uniq, uvalid, keys, rows,
                                  interpret=_interpret())
     return ref.tier_probe_ref(uniq, uvalid, keys, rows)
+
+
+# ---------------------------------------------------------------------------
+# routed-gradient wire compression (grad_compress modes; the collective
+# wrappers live in repro.optim.grad_compression)
+# ---------------------------------------------------------------------------
+
+
+def compress_fp16(g, fused: Optional[bool] = None):
+    """Per-row amax scale + float16 cast: ``(q [m, D] f16, scale [m, 1] f32)``.
+    All-zero rows compress to exact zeros (padded bucket slots roundtrip
+    bitwise)."""
+    if _fused(fused):
+        return fp16_compress_pallas(g, interpret=_interpret())
+    return ref.fp16_compress_ref(g)
+
+
+def decompress_fp16(q, scale, fused: Optional[bool] = None):
+    if _fused(fused):
+        return fp16_decompress_pallas(q, scale, interpret=_interpret())
+    return ref.fp16_decompress_ref(q, scale)
+
+
+def compress_topk(g, k: int, fused: Optional[bool] = None):
+    """Per-row magnitude top-k sparsification: ``(vals [m, k], idx [m, k])``,
+    descending magnitude, ties toward the lower index."""
+    if _fused(fused):
+        return topk_compress_pallas(g, int(k), interpret=_interpret())
+    return ref.topk_compress_ref(g, int(k))
+
+
+def decompress_topk(vals, idx, d: int, fused: Optional[bool] = None):
+    if _fused(fused):
+        return topk_decompress_pallas(vals, idx, int(d),
+                                      interpret=_interpret())
+    return ref.topk_decompress_ref(vals, idx, int(d))

@@ -85,3 +85,75 @@ def cross_layer_ref(x0: jnp.ndarray, x: jnp.ndarray, w: jnp.ndarray,
                     b: jnp.ndarray) -> jnp.ndarray:
     """DCN-v2: x0 * (x @ w + b) + x."""
     return x0 * (x @ w + b) + x
+
+
+# ---------------------------------------------------------------------------
+# interaction backwards (explicit transposes of the three refs above; equal
+# to jax.vjp of the references — the unit tests pin that equality)
+# ---------------------------------------------------------------------------
+
+
+def fm_interaction_bwd_ref(fields: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    """d/dfields of ``fm_interaction_ref``: ``g[b] * (sum_f v - v)``."""
+    s = fields.sum(axis=1, keepdims=True)              # [B, 1, D]
+    return g[:, :, None] * (s - fields)                # g: [B, 1]
+
+
+def dot_interaction_bwd_ref(fields: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    """d/dfields of ``dot_interaction_ref``: scatter the upper-triangle
+    cotangent into gZ and apply ``(gZ + gZ^T) @ x``."""
+    b, f, _ = fields.shape
+    iu, ju = np.triu_indices(f, k=1)
+    gz = jnp.zeros((b, f, f), g.dtype).at[:, iu, ju].set(g)
+    gz = gz + jnp.transpose(gz, (0, 2, 1))
+    return jnp.einsum("bfg,bgd->bfd", gz, fields)
+
+
+def cross_layer_bwd_ref(x0: jnp.ndarray, x: jnp.ndarray, w: jnp.ndarray,
+                        b: jnp.ndarray, g: jnp.ndarray):
+    """d/d(x0, x, w, b) of ``cross_layer_ref`` (recomputes z = x@w + b)."""
+    z = x @ w + b
+    gz = g * x0
+    gx0 = g * z
+    gx = gz @ w.T + g
+    gw = x.T @ gz
+    gb = gz.sum(axis=0)
+    return gx0, gx, gw, gb
+
+
+# ---------------------------------------------------------------------------
+# routed-gradient wire compression (grad_compress modes; see
+# repro.optim.grad_compression for the collective wrappers)
+# ---------------------------------------------------------------------------
+
+
+def fp16_compress_ref(g: jnp.ndarray):
+    """Per-row amax scaling + cast: ``(q float16 in [-1, 1], scale float32)``.
+
+    All-zero rows compress to exact zeros (scale 0), so padded / invalid
+    bucket slots survive the roundtrip bitwise.
+    """
+    scale = jnp.max(jnp.abs(g), axis=-1, keepdims=True).astype(jnp.float32)
+    q = (g / jnp.maximum(scale, 1e-30)).astype(jnp.float16)
+    return q, scale
+
+
+def fp16_decompress_ref(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def topk_compress_ref(g: jnp.ndarray, k: int):
+    """Keep the k largest-magnitude entries per row: ``(vals, idx int32)``.
+
+    Ties break toward the lower index (``lax.top_k`` order — the Pallas
+    kernel's iterative first-argmax matches it).
+    """
+    _, idx = jax.lax.top_k(jnp.abs(g), k)
+    vals = jnp.take_along_axis(g, idx, axis=-1)
+    return vals, idx.astype(jnp.int32)
+
+
+def topk_decompress_ref(vals: jnp.ndarray, idx: jnp.ndarray, d: int) -> jnp.ndarray:
+    m = vals.shape[0]
+    out = jnp.zeros((m, d), vals.dtype)
+    return out.at[jnp.arange(m)[:, None], idx].set(vals)

@@ -58,6 +58,22 @@ def main():
                          "backend under REPRO_FORCE_PALLAS_INTERPRET=1), "
                          "'on' forces them (interpreted off-TPU, slow), "
                          "'off' forces the reference jnp chains")
+    ap.add_argument("--overlap", default="auto",
+                    choices=("off", "on", "auto"),
+                    help="software-pipelined train step: 'on' double-buffers "
+                         "the sparse lookup of micro-batch i+1 behind a "
+                         "handoff barrier while the dense stage of i runs, "
+                         "'off' keeps the legacy (jaxpr-pinned) loop, 'auto' "
+                         "enables overlap whenever the step has >1 "
+                         "micro-batch; numerics are identical either way")
+    ap.add_argument("--grad-compress", default="none",
+                    choices=("none", "fp16", "topk"),
+                    help="wire compression of the routed sparse-gradient "
+                         "payload (the transposed-Shuffle all_to_all and the "
+                         "PS/allgather_rows gradient all_gather): 'fp16' = "
+                         "per-row amax-scaled float16 cast, 'topk' = per-row "
+                         "magnitude top-(D/4) sparsification, 'none' keeps "
+                         "training bitwise-exact")
     ap.add_argument("--no-cache", action="store_true")
     ap.add_argument("--no-interleave", action="store_true")
     ap.add_argument("--no-packing", action="store_true")
@@ -140,6 +156,8 @@ def main():
         tcfg = TrainConfig(strategy=spec, use_cache=not args.no_cache,
                            use_interleave=not args.no_interleave,
                            use_fused_kernels=args.fused_kernels,
+                           overlap=args.overlap,
+                           grad_compress=args.grad_compress,
                            lr_emb=args.lr_emb, lr_dense=args.lr_dense)
         return model, tcfg, make_train_step(model, plan, mesh, axes,
                                             args.global_batch, tcfg)[0]

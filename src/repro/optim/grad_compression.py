@@ -1,21 +1,50 @@
-"""Gradient compression for the dense DP all-reduce (paper §V: 'quantitative
-communication' [50]).
+"""Gradient compression (paper §V: 'quantitative communication' [50]).
 
-On TPU the practical lever is payload dtype: round the psum payload to
-bf16 / f8_e4m3 with *error feedback* (the residual is carried in optimizer
-state so the compression bias cancels over steps). Halves / quarters the
-all-reduce wire bytes of the dense layers — visible directly in the dry-run
-collective term.
+Two wire paths, two APIs:
+
+**Dense DP all-reduce** (``compressed_psum``): round the psum payload to a
+narrow dtype (bf16 / fp16 / f8_e4m3) with *error feedback* (the residual is
+carried in optimizer state so the compression bias cancels over steps).
+Halves / quarters the all-reduce wire bytes of the dense layers — visible
+directly in the dry-run collective term.
+
+**Routed sparse gradients** (``compress_rows`` / ``decompress_rows`` and the
+collective wrappers below): the transposed Shuffle moves ``[world*cap, D]``
+gradient rows over ICI every step — the dominant backward payload of a
+wide-and-deep model. ``grad_compress`` modes shrink that wire payload and
+expand it on the owner side:
+
+``'none'``  — passthrough (the default; bitwise-identical training).
+``'fp16'``  — per-row amax scale + float16 cast (Tensor Casting style):
+              ~half the wire bytes, relative error ~2^-11 of the row max.
+``'topk'``  — per-row magnitude top-k (k = D / TOPK_FRACTION): only the
+              heaviest coordinates travel; the rest are dropped (biased,
+              but sparse-gradient rows concentrate mass in few coordinates).
+
+Both modes compress all-zero rows to exact zeros, so padded / dropped bucket
+slots survive the roundtrip bitwise — the dedup+adagrad scatter behind the
+all_to_all relies on that. The per-row kernels are Pallas-fused on the
+Pallas branch (``repro.kernels.grad_compress``) and pure-jnp references on
+CPU (``fused=`` follows the same resolved switch as the sparse hot path).
+Tier-maintenance traffic (hot-tier psums, flush reloads) deliberately stays
+exact: compression is applied to the per-step routed payload only.
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Any, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-_DTYPES = {"none": None, "bf16": jnp.bfloat16, "f8": jnp.float8_e4m3fn}
+from repro.kernels import ops
+
+_DTYPES = {"none": None, "bf16": jnp.bfloat16, "fp16": jnp.float16,
+           "f8": jnp.float8_e4m3fn}
+
+# routed-path (sparse) modes; 'topk' keeps d // TOPK_FRACTION coords per row
+ROUTED_MODES = ("none", "fp16", "topk")
+TOPK_FRACTION = 4
 
 
 def compressed_psum(grads: Any, axes, mode: str = "none",
@@ -41,3 +70,81 @@ def compressed_psum(grads: Any, axes, mode: str = "none",
     summed = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
     new_res = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
     return summed, new_res
+
+
+# ---------------------------------------------------------------------------
+# routed sparse-gradient payloads
+# ---------------------------------------------------------------------------
+
+
+class Fp16Rows(NamedTuple):
+    """fp16 wire payload: scaled rows + their per-row fp32 scales."""
+
+    q: jnp.ndarray      # [m, D] float16, values in [-1, 1]
+    scale: jnp.ndarray  # [m, 1] float32 row amax
+
+
+class TopkRows(NamedTuple):
+    """topk wire payload: the k heaviest signed values + their columns."""
+
+    vals: jnp.ndarray  # [m, k]
+    idx: jnp.ndarray   # [m, k] int32
+
+
+def topk_k(d: int) -> int:
+    """Static per-row budget of the 'topk' mode."""
+    return max(1, d // TOPK_FRACTION)
+
+
+def validate_routed_mode(mode: str) -> str:
+    if mode not in ROUTED_MODES:
+        raise ValueError(
+            f"grad_compress must be one of {ROUTED_MODES}; got {mode!r}")
+    return mode
+
+
+def compress_rows(g: jnp.ndarray, mode: str,
+                  fused: Optional[bool] = None) -> Any:
+    """``[m, D]`` gradient rows -> wire payload pytree for ``mode``.
+
+    The payload's leaves all keep the leading ``m`` dimension, so callers
+    can reshape/shuffle them through any row-preserving collective
+    (``jax.tree.map`` over the payload) and ``decompress_rows`` after.
+    """
+    if mode == "none":
+        return g
+    if mode == "fp16":
+        q, scale = ops.compress_fp16(g, fused=fused)
+        return Fp16Rows(q=q, scale=scale)
+    if mode == "topk":
+        vals, idx = ops.compress_topk(g, topk_k(g.shape[-1]), fused=fused)
+        return TopkRows(vals=vals, idx=idx)
+    raise ValueError(validate_routed_mode(mode))
+
+
+def decompress_rows(payload: Any, d: int, mode: str,
+                    fused: Optional[bool] = None) -> jnp.ndarray:
+    """Inverse of ``compress_rows``: wire payload -> ``[m, D]`` fp32 rows."""
+    if mode == "none":
+        return payload
+    if mode == "fp16":
+        return ops.decompress_fp16(payload.q, payload.scale, fused=fused)
+    if mode == "topk":
+        return ops.decompress_topk(payload.vals, payload.idx, d, fused=fused)
+    raise ValueError(validate_routed_mode(mode))
+
+
+def compressed_all_gather(g: jnp.ndarray, axes, mode: str = "none",
+                          fused: Optional[bool] = None) -> jnp.ndarray:
+    """all_gather of gradient rows with the payload compressed on the wire.
+
+    Every shard gathers the same compressed payload and decompresses it
+    identically, so replica-consistent consumers (the PS / allgather_rows
+    backward scatters) stay replica-consistent under compression.
+    """
+    if mode == "none":
+        return lax.all_gather(g, axes, tiled=True)
+    payload = compress_rows(g, mode, fused=fused)
+    payload = jax.tree.map(lambda x: lax.all_gather(x, axes, tiled=True),
+                           payload)
+    return decompress_rows(payload, g.shape[-1], mode, fused=fused)

@@ -12,7 +12,8 @@ the candidate batch (batched-dot, never a loop).
 All sharding specs are built once at trace-construction time — nothing is
 recomputed per call. The lookup strategy is selectable per packed group via
 ``ServeConfig.strategy``: a registry name (``'picasso' | 'hybrid' | 'ps' |
-'picasso_l2'``) broadcasts, ``'mixed'``/``'auto'`` or a ``{gid: name}`` dict serves each
+'picasso_l2' | 'mp_nodedup' | 'allgather_rows'``) broadcasts,
+``'mixed'``/``'auto'`` or a ``{gid: name}`` dict serves each
 group through its own assigned path (see ``repro.core.assign``), so serving
 benchmarks can A/B pure against mixed layouts.
 """

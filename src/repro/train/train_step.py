@@ -10,6 +10,20 @@ One SPMD program under ``shard_map`` over the full mesh:
      replicated hot tier
   -> FCounter update ; periodic HybridHash flush (EmbeddingEngine.flush).
 
+The D-Interleaving pipeline has two strengths, both static knobs:
+
+``pipeline_micro`` (legacy order) issues chunk i+1's Shuffle before chunk
+i's dense compute and trusts XLA's latency-hiding scheduler to interleave
+them. ``overlap`` ('off' | 'on' | 'auto', the *software-pipelined* step)
+additionally double-buffers the prefetch: the lookup of chunk i+1 and the
+consumed outputs of chunk i pass through one ``optimization_barrier``
+(``pipeline_handoff``), which pins the two-slot schedule — the compiler can
+neither sink the in-flight Shuffle below the dense stage nor collapse the
+two buffers. Barriers are value-identity, so 'on' and 'off' compute
+bit-identical numbers; 'off' is byte-for-byte the legacy step (a regression
+test pins its jaxpr), and 'auto' turns overlap on exactly when the step has
+more than one micro-batch to pipeline.
+
 The whole sparse path lives in ``repro.engine.EmbeddingEngine``; this module
 only owns the micro-batch pipeline, the dense optimizer, and metric psums.
 Strategies (paper §II-C / §IV baselines) are selected per packed group via
@@ -38,6 +52,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.core.features import PackedBatch, pack_group
+from repro.core.interleaving import pipeline_handoff, resolve_overlap
 from repro.core.packing import PicassoPlan
 from repro.dist.compat import shard_map
 from repro.dist.sharding import batch_specs, emb_specs, state_specs, to_named
@@ -57,6 +72,10 @@ class TrainConfig:
     # StrategyAssignment — anything repro.core.assign.resolve_assignment takes
     strategy: Any = "picasso"
     pipeline_micro: bool = True    # D-Interleaving pipeline order
+    # software-pipelined step: 'off' = the legacy (jaxpr-pinned) loop,
+    # 'on' = double-buffered prefetch behind a pipeline_handoff barrier,
+    # 'auto' = on exactly when n_micro > 1 (bools accepted too)
+    overlap: Any = "auto"
     use_cache: bool = True
     use_l2: bool = True            # L2 host tier (only where the plan
                                    # budgets l2_rows AND L1 is active)
@@ -68,6 +87,10 @@ class TrainConfig:
     cache_update: str = "psum"     # 'psum' (exact) | 'stale' (Algorithm 1)
     flush_in_step: bool = True     # False: host calls make_flush_fn() instead
     grad_compression: str = "none"  # 'none' | 'bf16' | 'f8' (dense DP psum)
+    # wire compression of the ROUTED sparse-gradient payload ('none' |
+    # 'fp16' | 'topk'; repro.optim.grad_compression.ROUTED_MODES) — applied
+    # inside every strategy's backward collective
+    grad_compress: str = "none"
     eps: float = 1e-8
 
 
@@ -94,7 +117,10 @@ def make_train_step(model: WDLModel, plan: PicassoPlan, mesh, axes: Tuple[str, .
         plan, axes, world, strategy=tcfg.strategy, use_cache=tcfg.use_cache,
         use_l2=tcfg.use_l2, use_interleave=tcfg.use_interleave,
         lr_emb=tcfg.lr_emb, eps=tcfg.eps, cache_update=tcfg.cache_update,
-        use_fused_kernels=tcfg.use_fused_kernels)
+        use_fused_kernels=tcfg.use_fused_kernels,
+        grad_compress=tcfg.grad_compress)
+    # static resolution: the traced loop below has no overlap branches left
+    use_overlap = resolve_overlap(tcfg.overlap, n_micro)
 
     # -------------------------------------------------------- loss closure
     def micro_loss(dense, pooled, mb):
@@ -136,7 +162,15 @@ def make_train_step(model: WDLModel, plan: PicassoPlan, mesh, axes: Tuple[str, .
         pending = (engine.forward(emb, packed_micro(0)), batch_micro(0))
         for i in range(n_micro):
             (pooled, ectx), mb = pending
-            if tcfg.pipeline_micro and i + 1 < n_micro:
+            if use_overlap and i + 1 < n_micro:
+                # software pipeline: the prefetch of chunk i+1 and the
+                # consumed outputs of chunk i cross one handoff barrier, so
+                # the in-flight Shuffle is pinned *beside* (not after) the
+                # dense stage and the two buffer slots stay distinct
+                nxt = engine.forward(emb, packed_micro(i + 1))
+                (pooled, ectx), nxt = pipeline_handoff((pooled, ectx), nxt)
+                pending = (nxt, batch_micro(i + 1))
+            elif tcfg.pipeline_micro and i + 1 < n_micro:
                 # D-Interleaving: issue Shuffle of chunk i+1 before dense of i
                 pending = (engine.forward(emb, packed_micro(i + 1)),
                            batch_micro(i + 1))
@@ -145,7 +179,7 @@ def make_train_step(model: WDLModel, plan: PicassoPlan, mesh, axes: Tuple[str, .
             g_dense_acc = jax.tree.map(jnp.add, g_dense_acc, g_dense)
             emb, em = engine.backward(emb, ectx, g_pooled)
             em_acc = {k: em_acc[k] + em[k] for k in em_acc}
-            if not (tcfg.pipeline_micro) and i + 1 < n_micro:
+            if not use_overlap and not (tcfg.pipeline_micro) and i + 1 < n_micro:
                 pending = (engine.forward(emb, packed_micro(i + 1)),
                            batch_micro(i + 1))
 

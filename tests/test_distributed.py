@@ -90,7 +90,9 @@ def test_strategy_parity_8dev():
     """All registry strategies are exact with the cache off and exact
     capacity: identical pooled outputs, loss trajectories, and post-update
     embedding tables on a 4x2 mesh (up to fp reassociation in the routed
-    collectives)."""
+    collectives). Includes the PR-6 decomposition baselines: 'mp_nodedup'
+    (no K-Packed dedup — owner-side grad summation must recover the deduped
+    math) and 'allgather_rows' (dedup'd replication)."""
     out = _run(HEADER + """
 from repro.configs import get_config
 from repro.core.packing import make_plan
@@ -100,8 +102,9 @@ from repro.models.wdl import WDLModel
 from repro.train.train_step import TrainConfig, init_state, make_train_step
 mesh = make_test_mesh(4, 2); axes=("data","model"); GB=32
 cfg = get_config("dcn-v2", smoke=True)
+BASELINES = ("hybrid", "ps", "mp_nodedup", "allgather_rows")
 losses, tables = {}, {}
-for strat in ("picasso", "hybrid", "ps"):
+for strat in ("picasso",) + BASELINES:
     plan = make_plan(cfg, world=8, per_device_batch=4, enable_cache=False,
                      exact_capacity=True, n_micro=1)
     model = WDLModel(cfg, plan)
@@ -118,14 +121,56 @@ for strat in ("picasso", "hybrid", "ps"):
     losses[strat] = ls
     tables[strat] = {k: np.asarray(jax.device_get(v.w))
                      for k, v in state["emb"].items()}
-ldiff = max(abs(a-b) for base in ("hybrid", "ps")
+ldiff = max(abs(a-b) for base in BASELINES
             for a, b in zip(losses["picasso"], losses[base]))
 wdiff = max(float(np.abs(tables["picasso"][k] - tables[base][k]).max())
-            for base in ("hybrid", "ps") for k in tables["picasso"])
+            for base in BASELINES for k in tables["picasso"])
 print("LDIFF", ldiff, "WDIFF", wdiff)
 """)
     toks = out.split()
     assert float(toks[1]) < 1e-4 and float(toks[3]) < 1e-4
+
+
+def test_overlap_parity_8dev():
+    """The software-pipelined step (overlap='on') trains the identical loss
+    trajectory as the synchronous step (overlap='off') on a 4x2 mesh with a
+    real multi-chunk micro-batch pipeline and a warm hot tier — the handoff
+    barriers only pin the schedule, never the values. Also pins that fp16
+    routed-grad compression stays finite and fp16-close under overlap."""
+    out = _run(HEADER + """
+from repro.configs import get_config
+from repro.core.packing import make_plan
+from repro.data.synthetic import make_batch
+from repro.dist.sharding import batch_specs, to_named
+from repro.models.wdl import WDLModel
+from repro.train.train_step import TrainConfig, init_state, make_train_step
+mesh = make_test_mesh(4, 2); axes=("data","model"); GB=64
+cfg = get_config("deepfm", smoke=True)
+plan = make_plan(cfg, world=8, per_device_batch=8, n_micro=2,
+                 hot_bytes=1<<14, flush_iters=3, warmup_iters=2)
+model = WDLModel(cfg, plan)
+traj = {}
+for mode, compress in (("off", "none"), ("on", "none"), ("on", "fp16")):
+    state = init_state(model, plan, jax.random.PRNGKey(0), mesh=mesh, axes=axes)
+    step, _ = make_train_step(model, plan, mesh, axes, GB,
+                              TrainConfig(overlap=mode, grad_compress=compress))
+    rng = np.random.default_rng(0)
+    ls = []
+    for i in range(5):
+        b = make_batch(cfg, GB, rng)
+        b = jax.device_put(b, to_named(mesh, batch_specs(b, axes)))
+        state, m = step(state, b)
+        ls.append(float(m["loss"]))
+    traj[(mode, compress)] = ls
+exact = max(abs(a-b) for a, b in zip(traj[("off","none")], traj[("on","none")]))
+comp = max(abs(a-b) for a, b in zip(traj[("on","none")], traj[("on","fp16")]))
+finite = all(np.isfinite(traj[("on","fp16")]))
+print("EXACT", exact, "COMP", comp, "FINITE", finite)
+""")
+    toks = out.split()
+    assert float(toks[1]) == 0.0      # barriers are value-identity
+    assert float(toks[3]) < 5e-2      # fp16 wire rounding only
+    assert toks[5] == "True"
 
 
 def test_cache_mode_is_exact():
