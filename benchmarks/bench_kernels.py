@@ -1,6 +1,7 @@
 """Microbench of the fused sparse hot-path kernels in isolation: fused
 (Pallas; interpreted off-TPU) vs the pure-jnp reference for gather+pool
-(forward + VJP), dedup+adagrad scatter-update, and the cache tier probe.
+(forward + VJP), dedup+adagrad scatter-update, the narrow-row
+gather+project stitch (forward + VJP), and the cache tier probe.
 
 On the CPU rig the fused rows time the *interpreted* kernels — uninteresting
 absolute numbers (interpret mode is a correctness soak, not a fast path) but
@@ -61,6 +62,30 @@ def bench_dedup_adagrad(rows=2048, d=32, m=512, hot=64, iters=3):
              f"ips={m / (us / 1e6):.0f}")
 
 
+def bench_gather_project(m=512, n=256, nd=8, d=32, iters=3):
+    """Narrow-row stitch (picasso_narrow): gather [nd]-rows out of the routed
+    buffer and up-project through the learned [nd, d] kernel in one pass,
+    forward + VJP, fused vs reference."""
+    rng = np.random.default_rng(3)
+    back = jnp.asarray(rng.normal(size=(m, nd)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, m, n).astype(np.int32))
+    kept = jnp.asarray(rng.random(n) < 0.9)
+    proj = jnp.asarray(rng.normal(size=(nd, d)).astype(np.float32))
+    for fused in (False, True):
+        fn = jax.jit(lambda b, p: ops.gather_project(b, idx, kept, p,
+                                                     fused=fused))
+        us = time_fn(fn, back, proj, iters=iters)
+        emit(f"kernels/gather_project/{'fused' if fused else 'ref'}", us,
+             f"ips={n / (us / 1e6):.0f}")
+        g = jax.jit(jax.grad(lambda b, p: sum(
+            jnp.sum(o ** 2) for o in ops.gather_project(b, idx, kept, p,
+                                                        fused=fused)),
+            argnums=(0, 1)))
+        us = time_fn(g, back, proj, iters=iters)
+        emit(f"kernels/gather_project_vjp/{'fused' if fused else 'ref'}", us,
+             f"ips={n / (us / 1e6):.0f}")
+
+
 def bench_tier_probe(n=512, h=256, d=32, iters=3):
     rng = np.random.default_rng(2)
     keys = jnp.asarray(np.sort(rng.choice(10 * h, h, replace=False))
@@ -80,10 +105,12 @@ def run(smoke: bool = False):
     if smoke:
         bench_gather_pool(n=128, d=16, n_bags=16, iters=2)
         bench_dedup_adagrad(rows=256, d=16, m=128, hot=16, iters=2)
+        bench_gather_project(m=128, n=64, nd=4, d=16, iters=2)
         bench_tier_probe(n=128, h=64, d=16, iters=2)
     else:
         bench_gather_pool()
         bench_dedup_adagrad()
+        bench_gather_project()
         bench_tier_probe()
 
 

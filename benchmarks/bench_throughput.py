@@ -12,6 +12,11 @@ actually engages), routed-gradient wire compression ('grad_compress=fp16' /
 registry gained ('mp_nodedup' — the Shuffle without K-Packed dedup — and
 'allgather_rows' — dedup'd replication).
 
+PR7 rows: 'picasso_narrow' (frequency-adaptive dims — hot ids full-width in
+the tiers, the cold master stored at d = D // 4 and up-projected through a
+learned [d, D] kernel at lookup) and 'narrow_vs_full' (the derived per-group
+vparam-bytes reduction: narrow master + projection vs the full master).
+
 ``--smoke`` runs one model at a reduced batch with fewer timing iters — the
 fast CI pass wired into scripts/ci.sh (and the only place the auto-assignment
 and two-tier cache paths are executed on every CI run)."""
@@ -19,6 +24,7 @@ import argparse
 
 from repro.configs import get_config
 from repro.configs.paper_models import din, dlrm
+from repro.core.packing import make_plan, plan_narrow
 from repro.train.train_step import TrainConfig
 
 from benchmarks.common import bench_replan_ips, bench_train_ips, emit
@@ -51,6 +57,23 @@ def run(smoke: bool = False):
         # behind the hot tier, exercised end-to-end incl. the two-tier flush
         l2 = bench_train_ips(cfg, gb, TrainConfig(strategy="picasso_l2"),
                              iters=iters, l2_bytes=1 << 18)
+        # frequency-adaptive dims: hot ids keep full-width rows in the
+        # tiers, the cold master is stored at d = D // 4 and up-projected
+        # at lookup (picasso_narrow); narrow_vs_full derives the per-group
+        # vparam-bytes reduction the narrow master buys (master + learned
+        # projection vs the full-width master)
+        probe = make_plan(cfg, world=1, per_device_batch=gb)
+        nd_req = max(1, min(g.dim for g in probe.groups) // 4)
+        widths = plan_narrow(probe.groups, nd_req)
+        nar = bench_train_ips(cfg, gb,
+                              TrainConfig(strategy="picasso_narrow"),
+                              iters=iters, l2_bytes=1 << 18,
+                              narrow_dim=nd_req)
+        full_elems = sum(g.rows * g.dim for g in probe.groups)
+        nar_elems = sum(
+            g.rows * widths[g.gid]
+            + (widths[g.gid] * g.dim if widths[g.gid] < g.dim else 0)
+            for g in probe.groups)
         # adaptive replanning: warm steps under 'auto', then one full
         # harvest -> recompile -> migrate -> rebuild cycle; the halved L2
         # envelope forces a tier-resize migration so the row exercises the
@@ -104,6 +127,12 @@ def run(smoke: bool = False):
         emit(f"throughput/{name}/mixed", mix["us_per_call"], f"ips={mix['ips']:.0f}")
         emit(f"throughput/{name}/picasso_l2", l2["us_per_call"],
              f"ips={l2['ips']:.0f}")
+        emit(f"throughput/{name}/picasso_narrow", nar["us_per_call"],
+             f"ips={nar['ips']:.0f}")
+        emit(f"throughput/{name}/narrow_vs_full", 0.0,
+             "vparam_bytes x{:.2f},d={}".format(
+                 full_elems / max(nar_elems, 1),
+                 min(widths.values())))
         emit(f"throughput/{name}/auto+replan", rep["us_per_call"],
              f"ips={rep['ips']:.0f},rev={rep['rev']},migrated={rep['migrated']}")
         emit(f"throughput/{name}/overlap=off", ov_off["us_per_call"],

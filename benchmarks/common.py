@@ -10,7 +10,9 @@ import jax
 import numpy as np
 
 from repro.configs.base import WDLConfig
+from repro.core.assign import AUTO_NAMES, resolve_assignment
 from repro.core.packing import make_plan
+from repro.kernels import ops
 from repro.data.synthetic import make_batch
 from repro.dist.sharding import batch_specs, to_named
 from repro.launch.mesh import make_mesh
@@ -46,6 +48,13 @@ def train_setup(cfg: WDLConfig, gb: int, mesh=None, tcfg: Optional[TrainConfig] 
     plan_kw.setdefault("flush_iters", 10)
     plan_kw.setdefault("warmup_iters", 5)
     plan = make_plan(cfg, world=world, per_device_batch=gb // world, **plan_kw)
+    if tcfg is not None and isinstance(tcfg.strategy, str) \
+            and tcfg.strategy not in AUTO_NAMES:
+        # record broadcast assignments before init_state sizes the masters
+        # (a 'picasso_narrow' broadcast gates plan.narrow_width; other names
+        # pass through unrecorded)
+        resolve_assignment(plan, tcfg.strategy, world=world,
+                           use_cache=tcfg.use_cache)
     model = WDLModel(cfg, plan)
     state = init_state(model, plan, jax.random.PRNGKey(seed), mesh=mesh, axes=AXES)
     step, _ = make_train_step(model, plan, mesh, AXES, gb, tcfg or TrainConfig())
@@ -127,14 +136,16 @@ def bench_replan_ips(cfg: WDLConfig, gb: int, iters: int = 5,
 # every emit() lands here too, so drivers can persist the run as one JSON
 # artifact (the repo-root perf trajectory: BENCH_<pr>.json)
 _ROWS: List[Dict[str, Any]] = []
-BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_6.json"
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_7.json"
 
 
 def emit(name: str, us: float, derived: str) -> None:
-    # backend recorded per row: merged artifacts can mix runs from the CPU
-    # rig (interpreter timings) and TPU (real kernels) without mislabeling
+    # backend + interpret recorded per row: merged artifacts can mix runs
+    # from the CPU rig (interpreter timings) and TPU (real kernels) without
+    # mislabeling — an interpret=true row must never be read as silicon
     _ROWS.append({"name": name, "us_per_call": float(us), "derived": derived,
-                  "backend": str(jax.default_backend())})
+                  "backend": str(jax.default_backend()),
+                  "interpret": bool(ops.interpret_mode())})
     print(f"{name},{us:.1f},{derived}", flush=True)
 
 
@@ -156,8 +167,9 @@ def write_bench_json(path: Optional[pathlib.Path] = None) -> pathlib.Path:
     fresh = {r["name"] for r in _ROWS}
     rows = [r for r in rows if r["name"] not in fresh] + _ROWS
     payload = {
-        "bench": ("PR6: interleaved train step (overlap on/off), compressed "
-                  "routed gradients, fused interaction backwards"),
+        "bench": ("PR7: frequency-adaptive embedding dims (picasso_narrow "
+                  "hot/cold split, fused gather_project) on top of the PR6 "
+                  "interleaved step"),
         "rows": rows,
     }
     path.write_text(json.dumps(payload, indent=1) + "\n")

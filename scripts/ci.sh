@@ -50,19 +50,46 @@ echo "$bench_out" | grep -q "/overlap=on" \
     || { echo "ci.sh: bench smoke missing the 'overlap=on' row" >&2; exit 1; }
 echo "$bench_out" | grep -q "/grad_compress=fp16" \
     || { echo "ci.sh: bench smoke missing the 'grad_compress=fp16' row" >&2; exit 1; }
-test -f BENCH_6.json \
-    || { echo "ci.sh: bench smoke did not write BENCH_6.json" >&2; exit 1; }
-grep -q "picasso+fused" BENCH_6.json \
-    || { echo "ci.sh: BENCH_6.json has no fused-vs-reference rows" >&2; exit 1; }
-grep -q "overlap=on" BENCH_6.json \
-    || { echo "ci.sh: BENCH_6.json missing the overlap rows" >&2; exit 1; }
-grep -q "grad_compress" BENCH_6.json \
-    || { echo "ci.sh: BENCH_6.json missing the grad_compress rows" >&2; exit 1; }
+# the frequency-adaptive-dims row must run, and its derived narrow_vs_full
+# row must show the >=2x per-group vparam-bytes reduction the narrow master
+# is for (d = D // 4 on the smoke model)
+echo "$bench_out" | grep -q "/picasso_narrow" \
+    || { echo "ci.sh: bench smoke missing the 'picasso_narrow' row" >&2; exit 1; }
+echo "$bench_out" | grep -q "/narrow_vs_full.*vparam_bytes x" \
+    || { echo "ci.sh: bench smoke missing the 'narrow_vs_full' row" >&2; exit 1; }
+test -f BENCH_7.json \
+    || { echo "ci.sh: bench smoke did not write BENCH_7.json" >&2; exit 1; }
+grep -q "picasso+fused" BENCH_7.json \
+    || { echo "ci.sh: BENCH_7.json has no fused-vs-reference rows" >&2; exit 1; }
+grep -q "overlap=on" BENCH_7.json \
+    || { echo "ci.sh: BENCH_7.json missing the overlap rows" >&2; exit 1; }
+grep -q "grad_compress" BENCH_7.json \
+    || { echo "ci.sh: BENCH_7.json missing the grad_compress rows" >&2; exit 1; }
+# narrow rows land in the artifact, every row stamped with the backend and
+# the interpret flag (interpreter timings must never read as silicon), and
+# the derived vparam-bytes reduction clears 2x
+python - <<'PY'
+import json
+rows = {r["name"]: r for r in json.load(open("BENCH_7.json"))["rows"]}
+nar = [r for n, r in rows.items() if "/picasso_narrow" in n]
+assert nar, "BENCH_7.json missing the picasso_narrow rows"
+assert all("backend" in r and "interpret" in r for r in rows.values()), \
+    "BENCH_7.json rows missing backend/interpret stamps"
+nvf = [r for n, r in rows.items() if "/narrow_vs_full" in n]
+assert nvf, "BENCH_7.json missing the narrow_vs_full rows"
+for r in nvf:
+    x = float(r["derived"].split("x")[1].split(",")[0])
+    assert x >= 2.0, f"narrow master reduction below 2x: {r['derived']}"
+print(f"ci.sh: narrow rows ok ({nvf[0]['derived']}, "
+      f"backend={nvf[0]['backend']}, interpret={nvf[0]['interpret']})")
+PY
 # isolated fused-vs-reference microbench rows (gather+pool / dedup+adagrad /
-# tier probe) merge into the same artifact
+# gather+project / tier probe) merge into the same artifact
 python -m benchmarks.bench_kernels --smoke
-grep -q "kernels/gather_pool" BENCH_6.json \
-    || { echo "ci.sh: BENCH_6.json missing the kernel microbench rows" >&2; exit 1; }
+grep -q "kernels/gather_pool" BENCH_7.json \
+    || { echo "ci.sh: BENCH_7.json missing the kernel microbench rows" >&2; exit 1; }
+grep -q "kernels/gather_project" BENCH_7.json \
+    || { echo "ci.sh: BENCH_7.json missing the gather_project rows" >&2; exit 1; }
 
 echo "== tier-1: fused-kernel interpret soak =="
 # every Pallas kernel (sparse + interaction) forced through the interpreter
@@ -96,6 +123,30 @@ first, last = st.median(losses[:10]), st.median(losses[-20:])
 assert last < first * 0.95, \
     f"loss did not decrease across the replan: {first:.4f} -> {last:.4f}"
 print(f"replan smoke: loss {first:.4f} -> {last:.4f} across >=1 migration")
+PY
+
+echo "== tier-1: narrow replan smoke =="
+# frequency-adaptive dims end to end: train with the narrow cold master
+# (d=4 vs D=10 on the smoke model) through >=1 forced replan migration —
+# the halved L2 envelope guarantees a tier resize, which re-masters the
+# narrow group (re-widen through the learned projection for tier residents,
+# projection + FCounter + adagrad carried) — and keep learning across it
+narrow_out=$(python -m repro.launch.train --arch deepfm --smoke --steps 120 \
+    --global-batch 64 --strategy picasso_narrow --narrow-dim 4 \
+    --l2-budget 65536 --replan-iters 40 --replan-l2-bytes 32768 --learnable \
+    --lr-emb 0.1 --lr-dense 3e-3 --log-every 1)
+echo "$narrow_out" | grep -v "^  step" >&2
+echo "$narrow_out" | grep -q "plan rev 0 -> 1" \
+    || { echo "ci.sh: narrow smoke never migrated (no 'plan rev 0 -> 1' event)" >&2; exit 1; }
+NARROW_OUT="$narrow_out" python - <<'PY'
+import os, re, statistics as st
+losses = [float(m) for m in re.findall(r"loss=([0-9.]+)", os.environ["NARROW_OUT"])]
+assert len(losses) >= 60, f"too few logged losses: {len(losses)}"
+first, last = st.median(losses[:10]), st.median(losses[-20:])
+assert last < first * 0.95, \
+    f"loss did not decrease across the narrow replan: {first:.4f} -> {last:.4f}"
+print(f"narrow smoke: loss {first:.4f} -> {last:.4f} across >=1 migration "
+      "(narrow master re-widened at replan)")
 PY
 
 echo "== tier-1: overlap smoke =="

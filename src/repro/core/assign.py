@@ -32,6 +32,15 @@ volume under every registered strategy and emits a ``StrategyAssignment``:
     profitability gate as the hot tier itself — a host read is charged at
     ``L2_HOST_FACTOR`` of a network element, so L2 pays off exactly where
     skew extends past the constricted L1.
+``picasso_narrow``
+    The picasso_l2 path with a frequency-adaptive narrow master: cold ids
+    (the lookup mass neither tier absorbs, ``estimate_narrow_gain``) are
+    stored and routed at the planned narrow width ``d = plan.narrow_dim``
+    and projected up to the model dim at lookup, so both the cold miss wire
+    and the master's parameter bytes shrink ~``D/d``-fold. Scored only for
+    groups the plan gives a narrow budget, and gated to vparam-dominated
+    cold-heavy groups (``NARROW_MIN_ROWS`` rows, ``NARROW_COLD_MIN`` cold
+    mass) — hot-headed groups keep full width everywhere.
 
 The engine consumes the result through ``resolve_assignment``, which also
 normalizes the user-facing spellings (the **assignment resolution order**):
@@ -72,6 +81,17 @@ SKEW_MIN = 0.05
 # it over the network: a pinned-host DMA is cheaper than an all_to_all round
 # trip but not free (PCIe/DMA bandwidth + the probe).
 L2_HOST_FACTOR = 0.5
+
+# The narrow (hot/cold heterogeneous width) master only pays off for groups
+# whose parameter volume dominates the budget: below this many packed rows
+# the k-fold vparam saving is noise while the projection still costs a
+# matmul + psum per step.
+NARROW_MIN_ROWS = 65536
+
+# Minimum cold lookup mass (the share neither tier absorbs) for the narrow
+# wire to matter: a hot-headed group serves almost everything full-width
+# from the tiers, so narrowing its master mostly adds projection error.
+NARROW_COLD_MIN = 0.3
 
 
 @dataclass(frozen=True)
@@ -181,15 +201,33 @@ def estimate_l2_gain(group: PackedGroup, cache_rows: int, l2_rows: int,
         1.0, l2_rows / max(cache_rows, 1))
 
 
+def estimate_narrow_gain(group: PackedGroup, cache_rows: int, l2_rows: int,
+                         counts: Optional[np.ndarray] = None, *,
+                         ranked: bool = False) -> float:
+    """Cold lookup mass: the fraction of lookups served by NEITHER tier —
+    exactly the traffic (and, weighted by residency, the parameter bytes)
+    that the picasso_narrow candidate moves to the narrow width. With
+    measured FCounter ``counts`` this is the lookup share of the rows ranked
+    below ``cache_rows + l2_rows``; without stats, the complement of the
+    warm-skew priors. ``ranked=True`` as in ``estimate_skew``."""
+    skew = estimate_skew(group, cache_rows, counts, ranked=ranked)
+    l2 = estimate_l2_gain(group, cache_rows, l2_rows, counts, ranked=ranked)
+    return float(max(0.0, 1.0 - skew - l2))
+
+
 def _score_group(group: PackedGroup, world: int, ids_per_shard: int,
                  cache_rows: int, skew: float, *,
                  l2_rows: int = 0, l2_gain: float = 0.0,
+                 narrow_dim: int = 0, narrow_gain: float = 0.0,
                  ps_max_rows: int = PS_MAX_ROWS,
-                 skew_min: float = SKEW_MIN) -> GroupScore:
+                 skew_min: float = SKEW_MIN,
+                 narrow_min_rows: int = NARROW_MIN_ROWS,
+                 narrow_cold_min: float = NARROW_COLD_MIN) -> GroupScore:
     """Score one group: comm-volume estimates plus the replicability /
     skew gates that pick ps for tiny groups, picasso for large skewed
-    ones, hybrid for the middle — and picasso_l2 where an L2 budget
-    captures working set that overflows the hot tier."""
+    ones, hybrid for the middle — picasso_l2 where an L2 budget captures
+    working set that overflows the hot tier, and picasso_narrow where a
+    vparam-dominated group's cold tail can ride the narrow wire."""
     n, d = float(max(ids_per_shard, 1)), float(group.dim)
     # ps: all_gather n ids from every shard, psum the [world*n, D] partials.
     ps = world * n * (d + 1.0)
@@ -200,6 +238,7 @@ def _score_group(group: PackedGroup, world: int, ids_per_shard: int,
     # over flush_iters (psum mode) or rides a small second a2a (stale mode).
     picasso = 2.0 * n * (1.0 - skew) * (1.0 + d) + ROUTE_OVERHEAD_ELEMS
     costs = {"ps": ps, "hybrid": hybrid, "picasso": picasso}
+    l2_maint = 0.0
     if l2_rows > 0:
         # picasso_l2: L2 hits leave the network entirely but pay a host-DMA
         # read charged at L2_HOST_FACTOR of a network element, plus the
@@ -212,10 +251,31 @@ def _score_group(group: PackedGroup, world: int, ids_per_shard: int,
             + L2_HOST_FACTOR * 2.0 * n * l2_gain * (1.0 + d)
             + l2_maint
             + ROUTE_OVERHEAD_ELEMS)
+    narrow_ok = (0 < narrow_dim < group.dim
+                 and group.rows >= narrow_min_rows
+                 and narrow_gain >= narrow_cold_min)
+    if narrow_ok:
+        # picasso_narrow: the cold tail (neither tier) routes at width nd
+        # instead of D — both back-a2a directions shrink — while tier hits
+        # cost what they cost under picasso_l2; the learned projection adds
+        # a per-step nd x D grad psum. Tier maintenance matches picasso_l2
+        # (the tiers themselves stay full-width).
+        nd = float(narrow_dim)
+        costs["picasso_narrow"] = (
+            2.0 * n * narrow_gain * (1.0 + nd)
+            + L2_HOST_FACTOR * 2.0 * n * l2_gain * (1.0 + d)
+            + l2_maint
+            + nd * d
+            + ROUTE_OVERHEAD_ELEMS)
     if group.rows <= ps_max_rows and ps <= hybrid:
         choice, reason = "ps", "tiny/replicable: PS transfer under routing overhead"
     elif cache_rows > 0 and skew >= skew_min:
-        if (l2_rows > 0 and l2_gain >= skew_min
+        if (narrow_ok and costs["picasso_narrow"]
+                <= min(costs["picasso"], costs.get("picasso_l2", np.inf))):
+            choice = "picasso_narrow"
+            reason = (f"cold tail (~{narrow_gain:.2f} of lookups) rides the "
+                      f"narrow wire at d={narrow_dim}")
+        elif (l2_rows > 0 and l2_gain >= skew_min
                 and costs["picasso_l2"] <= costs["picasso"]):
             choice = "picasso_l2"
             reason = (f"working set overflows L1 (hit~{skew:.2f}); host tier "
@@ -299,8 +359,16 @@ def compile_assignment(
         counts = _ranked(stats.get(g.gid) if stats else None, False)
         skew = estimate_skew(g, cache_rows, counts, ranked=True)
         l2_gain = estimate_l2_gain(g, cache_rows, l2_rows, counts, ranked=True)
+        # the narrow candidate is only offered where the plan budgets an
+        # actually-narrowing width (plan_narrow records dim = "no narrowing")
+        nd = int(plan.narrow_dim.get(g.gid, g.dim))
+        narrow_gain = (estimate_narrow_gain(g, cache_rows, l2_rows, counts,
+                                            ranked=True)
+                       if 0 < nd < g.dim else 0.0)
         sc = _score_group(g, world, batch * g.ids_per_sample, cache_rows, skew,
                           l2_rows=l2_rows, l2_gain=l2_gain,
+                          narrow_dim=nd if nd < g.dim else 0,
+                          narrow_gain=narrow_gain,
                           ps_max_rows=ps_max_rows, skew_min=skew_min)
         strategy[g.gid] = sc.choice
         scores[g.gid] = sc
@@ -366,7 +434,10 @@ def resolve_assignment(plan: PicassoPlan, spec: StrategySpec,
                        use_cache: bool = True) -> Dict[int, str]:
     """Normalize any user-facing strategy spelling into a full gid -> name map.
 
-    - a registry name broadcasts to every group (the PR 1 constructor sugar);
+    - a registry name broadcasts to every group (the PR 1 constructor
+      sugar); a ``'picasso_narrow'`` broadcast is additionally **recorded**
+      on the plan, because the narrow master widths
+      (``PicassoPlan.narrow_width``) gate on ``plan.strategy``;
     - ``'mixed'`` / ``'auto'`` uses ``plan.strategy`` when the plan carries
       one, else compiles a fresh assignment from the plan's own statistics
       (``plan.microbatch`` id volume — the training unit; callers issuing a
@@ -396,7 +467,13 @@ def resolve_assignment(plan: PicassoPlan, spec: StrategySpec,
             apply_assignment(plan, mapping)
     else:
         _validate_name(spec)
-        return {g.gid: spec for g in plan.groups}
+        mapping = {g.gid: spec for g in plan.groups}
+        if spec == "picasso_narrow":
+            # narrow gating (PicassoPlan.narrow_width) reads plan.strategy:
+            # record the broadcast so state init, sharding specs, and the
+            # migration see the narrow master widths this engine runs with.
+            apply_assignment(plan, mapping)
+        return mapping
 
     gids = {g.gid for g in plan.groups}
     missing = sorted(gids - set(mapping))

@@ -144,6 +144,10 @@ class LookupCtx(NamedTuple):
     recv_valid: jnp.ndarray  # [world, cap]
     l2_hit: Optional[jnp.ndarray] = None   # [n] served by L2 host tier
     l2_slot: Optional[jnp.ndarray] = None  # [n] clamped position in l2_keys
+    narrow_rows: Optional[jnp.ndarray] = None  # [n, d] routed narrow rows
+    #   (picasso_narrow only: the gather_project residual — zero at tier-hit
+    #   and padded positions — from which the projection gradient is one
+    #   ``narrow^T @ g_u`` matmul in the backward)
 
 
 def cache_probe(uniq: jnp.ndarray, uvalid: jnp.ndarray,
@@ -250,6 +254,99 @@ def mp_lookup(
     return rows_u, ctx
 
 
+def mp_lookup_narrow(
+    table_shard: jnp.ndarray,      # [rows_per_shard, d] NARROW master shard
+    ids: jnp.ndarray,              # [n] packed global row ids
+    *,
+    proj: jnp.ndarray,             # [d, D] learned up-projection (replicated)
+    axes: Axes,
+    world: int,
+    capacity: int,
+    hot_keys: Optional[jnp.ndarray] = None,   # [H1] sorted; tier rows are WIDE
+    hot_rows: Optional[jnp.ndarray] = None,   # [H1, D]
+    l2_keys: Optional[jnp.ndarray] = None,    # [H2] sorted
+    l2_rows: Optional[jnp.ndarray] = None,    # [H2, D]
+    fused: bool = False,
+) -> Tuple[jnp.ndarray, LookupCtx]:
+    """``mp_lookup`` with hot/cold heterogeneous widths: tier-resident (hot)
+    ids are served full-width ``D`` rows exactly as in the L2 path, while the
+    misses ride the Shuffle at the narrow width ``d`` — the owner gathers
+    ``[d]`` rows from the narrow master shard, the return hop carries
+    ``world*cap*d`` elements, and the Stitch is one fused
+    ``ops.gather_project`` pass that projects the routed-back narrow rows up
+    through ``proj`` (no ``[n, d]``-then-``[n, D]`` op chain). The narrow
+    rows land in ``ctx.narrow_rows`` (zeros at tier-hit/padded positions) as
+    the residual for the projection's gradient.
+
+    Probe order, overflow accounting, and the returned routing context are
+    identical to ``mp_lookup``; only the wire width and the Stitch differ.
+    """
+    rps, nd = table_shard.shape
+    rows_padded = rps * world
+
+    u = fixed_unique(ids, sentinel=rows_padded)
+    probe_l1 = (fused and hot_keys is not None and hot_keys.shape[0] > 0
+                and hot_rows is not None)
+    if probe_l1:
+        hit, cache_slot, l1_probe_rows = ops.tier_probe(
+            u.uniq, u.uvalid, hot_keys, hot_rows, fused=True)
+    else:
+        hit, cache_slot = cache_probe(u.uniq, u.uvalid, hot_keys)
+    use_l2 = l2_keys is not None and l2_keys.shape[0] > 0
+    if use_l2:
+        if fused:
+            l2_hit, l2_slot, l2_probe_rows = ops.tier_probe(
+                u.uniq, u.uvalid & ~hit, l2_keys, l2_rows, fused=True)
+        else:
+            l2_hit, l2_slot = cache_probe(u.uniq, u.uvalid & ~hit, l2_keys)
+        miss = u.uvalid & ~hit & ~l2_hit
+    else:
+        l2_hit, l2_slot = None, None
+        miss = u.uvalid & ~hit
+    r = partition(u.uniq, miss, rps, world, capacity)
+
+    # ---- Shuffle: route miss ids to owners --------------------------------
+    send_ids = jnp.full((world * capacity,), -1, jnp.int32)
+    send_ids = send_ids.at[r.send_slot].set(u.uniq.astype(jnp.int32), mode="drop")
+    recv_ids = _a2a(send_ids.reshape(world, capacity), axes)
+
+    my = lax.axis_index(axes)
+    base = my.astype(jnp.int32) * rps
+    recv_valid = recv_ids >= 0
+    recv_local = jnp.clip(recv_ids - base, 0, rps - 1)
+
+    # ---- local Gather (narrow width on the wire) ---------------------------
+    served = jnp.take(table_shard, recv_local.reshape(-1), axis=0)
+    served = served * recv_valid.reshape(-1, 1).astype(served.dtype)
+
+    # ---- Shuffle back + fused gather+project Stitch ------------------------
+    back = _a2a(served.reshape(world, capacity, nd), axes).reshape(
+        world * capacity, nd)
+    take_idx = jnp.minimum(r.send_slot, world * capacity - 1)
+    miss_rows, narrow = ops.gather_project(back, take_idx, r.kept, proj,
+                                           fused=fused)
+
+    if use_l2:
+        l2v = l2_probe_rows if fused else jnp.take(l2_rows, l2_slot, axis=0)
+        miss_rows = jnp.where(l2_hit[:, None], l2v.astype(miss_rows.dtype),
+                              miss_rows)
+    if probe_l1:
+        rows_u = jnp.where(hit[:, None], l1_probe_rows.astype(miss_rows.dtype),
+                           miss_rows)
+    elif hot_rows is not None and hot_rows.shape[0] > 0:
+        hot = jnp.take(hot_rows, cache_slot, axis=0)
+        rows_u = jnp.where(hit[:, None], hot.astype(miss_rows.dtype), miss_rows)
+    else:
+        rows_u = miss_rows
+
+    ctx = LookupCtx(
+        uniq=u.uniq, inv=u.inv, uvalid=u.uvalid, hit=hit, cache_slot=cache_slot,
+        routing=r, recv_ids=recv_ids, recv_local=recv_local, recv_valid=recv_valid,
+        l2_hit=l2_hit, l2_slot=l2_slot, narrow_rows=narrow,
+    )
+    return rows_u, ctx
+
+
 def pool(
     rows_u: jnp.ndarray,    # [n, D] unique rows (differentiation leaf)
     ctx_inv: jnp.ndarray,   # [n]
@@ -289,6 +386,16 @@ class CacheState(NamedTuple):
     keys: jnp.ndarray   # [H] sorted global row ids (sentinel = rows_padded)
     rows: jnp.ndarray   # [H, D]
     acc: jnp.ndarray    # [H, 1] adagrad accumulator
+
+
+class ProjState(NamedTuple):
+    """Learned per-group up-projection for hot/cold heterogeneous placement
+    (``picasso_narrow``): cold ids live as ``[d]``-narrow master rows and are
+    projected to the model width ``D`` at lookup. Replicated (like the tiers);
+    its gradient is psum'd, so replicas stay bit-identical."""
+
+    kernel: jnp.ndarray  # [d, D]
+    acc: jnp.ndarray     # [d, 1] row-wise adagrad accumulator
 
 
 def init_cache(h: int, d: int, rows_padded: int, dtype=jnp.float32) -> CacheState:
@@ -510,6 +617,78 @@ def apply_sparse_grads_l2(
     return w_shard, acc_shard, cache, l2
 
 
+def _proj_adagrad(proj: ProjState, g_proj: jnp.ndarray, lr: float,
+                  eps: float) -> ProjState:
+    """Row-wise adagrad on the replicated projection from a psum'd (replica-
+    consistent) gradient — the same update rule the tiers use, so the
+    projection trains in lockstep with the rows it serves."""
+    gsq = jnp.mean(jnp.square(g_proj), axis=-1, keepdims=True)
+    acc_new = proj.acc + gsq
+    upd = lr * g_proj / jnp.sqrt(acc_new + eps)
+    return ProjState(proj.kernel - upd.astype(proj.kernel.dtype),
+                     acc_new.astype(proj.acc.dtype))
+
+
+def apply_sparse_grads_narrow(
+    w_shard: jnp.ndarray,       # [rps, d] narrow master shard
+    acc_shard: jnp.ndarray,
+    cache: Optional[CacheState],  # L1 (wide rows)
+    l2: Optional[CacheState],     # L2 (wide rows); None = narrow w/o L2 tier
+    proj: ProjState,
+    ctx: LookupCtx,               # from mp_lookup_narrow (narrow_rows set)
+    g_u: jnp.ndarray,             # [n, D] grad wrt the (wide) unique rows
+    *,
+    axes: Axes,
+    world: int,
+    lr: float,
+    eps: float = 1e-8,
+    cache_update: str = "psum",
+    fused: bool = False,
+    compress: str = "none",
+) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[CacheState],
+           Optional[CacheState], ProjState]:
+    """Two-tier transposed path at heterogeneous widths.
+
+    The wide cotangent is folded through ``proj^T`` ONCE (``g_n = g_u @
+    proj.kernel.T``, one MXU pass); routed hops then carry the narrow
+    gradient — the same ``world*cap*d`` wire the forward used — through the
+    unchanged (compressible) ``_apply_miss_grads`` / ``_route_hit_grads``
+    machinery, and the owner-side dedup+adagrad updates the narrow master.
+    Tier-hit grads update the WIDE tiers exactly as in
+    ``apply_sparse_grads_l2`` (the tiers are authoritative full-width rows in
+    'psum' mode). The projection's own gradient is one ``narrow^T @ g_u``
+    matmul off the lookup's residual (only routed positions contribute — the
+    chain rule: tier hits never passed through ``proj``), psum'd so replicas
+    stay bit-identical, then adagrad'd.
+    """
+    g_n = (g_u @ proj.kernel.T).astype(g_u.dtype)   # [n, d]
+    w_shard, acc_shard = _apply_miss_grads(w_shard, acc_shard, ctx, g_n,
+                                           axes, world, lr, eps, fused,
+                                           compress)
+    if cache_update == "stale":
+        both = ctx.hit if ctx.l2_hit is None else (ctx.hit | ctx.l2_hit)
+        w_shard, acc_shard = _route_hit_grads(w_shard, acc_shard, ctx, both,
+                                              g_n, axes, world, lr, eps, fused,
+                                              compress)
+    else:
+        if cache is not None and cache.keys.shape[0] > 0:
+            cache = _psum_into_tier(cache, ctx.hit, ctx.cache_slot, g_u, axes,
+                                    lr, eps, fused)
+        h2 = 0 if l2 is None else l2.keys.shape[0]
+        if h2 > 0 and ctx.l2_hit is not None:
+            n, d = g_u.shape
+            gather_elems = (world - 1) * n * (d + 1)
+            if gather_elems < h2 * d:
+                l2 = _allgather_into_tier(l2, ctx.l2_hit, ctx.l2_slot, g_u,
+                                          axes, lr, eps, fused)
+            else:
+                l2 = _psum_into_tier(l2, ctx.l2_hit, ctx.l2_slot, g_u, axes,
+                                     lr, eps, fused)
+    g_proj = lax.psum(ctx.narrow_rows.T @ g_u, axes)   # [d, D]
+    proj = _proj_adagrad(proj, g_proj, lr, eps)
+    return w_shard, acc_shard, cache, l2, proj
+
+
 # ---------------------------------------------------------------------------
 # frequency statistics + HybridHash flush (Algorithm 1)
 # ---------------------------------------------------------------------------
@@ -686,6 +865,134 @@ def flush_cache_l2(
     # ---- 3. reload both tiers from master -----------------------------------
     new_l1 = _load_tier(w_shard, acc_shard, keys1, base, rps, rows_padded, axes)
     new_l2 = _load_tier(w_shard, acc_shard, keys2, base, rps, rows_padded, axes)
+
+    counts_shard = (counts_shard.astype(jnp.float32) * decay).astype(counts_shard.dtype)
+    return w_shard, acc_shard, counts_shard, new_l1, new_l2
+
+
+def proj_pinv(proj_kernel: jnp.ndarray, ridge: float = 1e-6) -> jnp.ndarray:
+    """Regularized right pseudo-inverse of the ``[d, D]`` up-projection:
+    ``pinv = P^T (P P^T + ridge*I)^{-1}``, a ``[D, d]`` map with
+    ``narrow @ P @ pinv ~= narrow``. At init the projection's rows are
+    orthonormal, so ``pinv ~= P^T`` exactly; the ridge keeps the ``[d, d]``
+    solve well-posed as the kernel trains away from orthonormality. Used to
+    *narrow* wide rows (tier write-back, wide->narrow migration)."""
+    nd = proj_kernel.shape[0]
+    gram = proj_kernel @ proj_kernel.T
+    eye = jnp.eye(nd, dtype=proj_kernel.dtype)
+    return proj_kernel.T @ jnp.linalg.solve(gram + ridge * eye, eye)
+
+
+def _write_back_tier_narrow(w_shard, acc_shard, tier: CacheState, pinv,
+                            base, rps: int, rows_padded: int):
+    """Owner shards take their slice of a replicated WIDE tier, narrowed
+    through the projection's pseudo-inverse into the narrow master."""
+    local = tier.keys - base
+    mine = (local >= 0) & (local < rps) & (tier.keys < rows_padded)
+    safe_idx = jnp.where(mine, jnp.clip(local, 0, rps - 1), rps)
+    nrows = tier.rows @ pinv                                  # [H, d]
+    w_shard = w_shard.at[safe_idx].set(nrows.astype(w_shard.dtype), mode="drop")
+    acc_shard = acc_shard.at[safe_idx].set(tier.acc.astype(acc_shard.dtype),
+                                           mode="drop")
+    return w_shard, acc_shard
+
+
+def _load_tier_widened(w_shard, acc_shard, keys, proj_kernel, base, rps: int,
+                       rows_padded: int, axes: Axes) -> CacheState:
+    """psum of owner contributions at the narrow width, then ONE widening
+    matmul on the assembled tier — narrow master rows -> a fresh replicated
+    wide tier (never a per-id widen)."""
+    nlocal = keys - base
+    nmine = (nlocal >= 0) & (nlocal < rps) & (keys < rows_padded)
+    nclip = jnp.clip(nlocal, 0, rps - 1)
+    contrib_n = jnp.take(w_shard, nclip, axis=0) * nmine[:, None].astype(w_shard.dtype)
+    contrib_a = jnp.take(acc_shard, nclip, axis=0) * nmine[:, None].astype(acc_shard.dtype)
+    narrow = lax.psum(contrib_n, axes)
+    return CacheState(keys, (narrow @ proj_kernel).astype(w_shard.dtype),
+                      lax.psum(contrib_a, axes))
+
+
+def _carry_exact_rows(tier: CacheState, old1: CacheState, old2: CacheState,
+                      rows_padded: int) -> CacheState:
+    """Keep ids that stayed tier-resident at their EXACT wide rows: a hot id
+    that survives the re-rank must not round-trip through the rank-``d``
+    projection (which would crush the component of its row orthogonal to the
+    projection's span every flush). Freshly promoted ids keep their widened
+    (``narrow @ P``) reload."""
+    rows, acc = tier.rows, tier.acc
+    for old in (old1, old2):
+        if old.keys.shape[0] == 0:
+            continue
+        p = jnp.searchsorted(old.keys, tier.keys).astype(jnp.int32)
+        pc = jnp.clip(p, 0, old.keys.shape[0] - 1)
+        found = (old.keys[pc] == tier.keys) & (tier.keys < rows_padded)
+        rows = jnp.where(found[:, None], jnp.take(old.rows, pc, axis=0), rows)
+        acc = jnp.where(found[:, None], jnp.take(old.acc, pc, axis=0), acc)
+    return CacheState(tier.keys, rows, acc)
+
+
+def flush_cache_narrow(
+    w_shard: jnp.ndarray,       # [rps, d] narrow master shard
+    acc_shard: jnp.ndarray,
+    counts_shard: jnp.ndarray,
+    cache: CacheState,          # L1 (wide)
+    l2: CacheState,             # L2 (wide)
+    proj_kernel: jnp.ndarray,   # [d, D]
+    *,
+    axes: Axes,
+    world: int,
+    decay: float = 0.5,
+    write_back: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, CacheState, CacheState]:
+    """Two-tier flush at heterogeneous widths — the re-widening lifecycle:
+
+    1. write back both WIDE tiers into the narrow master through the
+       projection's pseudo-inverse ('psum' mode; adagrad scalars pass through
+       exactly);
+    2. one global top-(H1+H2) frequency ranking, split hottest-H1 / next-H2
+       (identical to ``flush_cache_l2``);
+    3. reload both tiers *widened* (``narrow @ P``, one matmul per tier) —
+       but ids that stayed tier-resident keep their exact pre-flush wide rows
+       (``_carry_exact_rows``): only ids crossing the hot/cold boundary pass
+       through the projection, so a persistently hot id trains at the full
+       width indefinitely while a cooled id is narrowed to its best
+       rank-``d`` approximation.
+
+    In 'stale' mode (``write_back=False``) the narrow master is already
+    exact and the tiers are read-only widened copies — no write-back, and no
+    exact-carry either (the master is the single source of truth).
+    """
+    rps, nd = w_shard.shape
+    h1, h2 = cache.keys.shape[0], l2.keys.shape[0]
+    h = h1 + h2
+    rows_padded = rps * world
+    my = lax.axis_index(axes).astype(jnp.int32)
+    base = my * rps
+
+    if write_back:
+        pinv = proj_pinv(proj_kernel)
+        w_shard, acc_shard = _write_back_tier_narrow(w_shard, acc_shard, cache,
+                                                     pinv, base, rps, rows_padded)
+        w_shard, acc_shard = _write_back_tier_narrow(w_shard, acc_shard, l2,
+                                                     pinv, base, rps, rows_padded)
+
+    k_local = min(rps, max(32, (4 * h + world - 1) // world))
+    lvals, lidx = lax.top_k(counts_shard, k_local)
+    gids = base + lidx.astype(jnp.int32)
+    all_vals = lax.all_gather(lvals, axes, tiled=True)
+    all_ids = lax.all_gather(gids, axes, tiled=True)
+    tvals, tidx = lax.top_k(all_vals, h)
+    keys_ranked = jnp.where(tvals > 0, all_ids[tidx], rows_padded)
+    keys1 = jnp.sort(keys_ranked[:h1])
+    keys2 = jnp.sort(keys_ranked[h1:])
+
+    new_l1 = _load_tier_widened(w_shard, acc_shard, keys1, proj_kernel,
+                                base, rps, rows_padded, axes)
+    new_l2 = _load_tier_widened(w_shard, acc_shard, keys2, proj_kernel,
+                                base, rps, rows_padded, axes)
+    if write_back:
+        new_l1 = _carry_exact_rows(new_l1, cache, l2, rows_padded)
+        new_l2 = _carry_exact_rows(new_l2, cache, l2, rows_padded)
 
     counts_shard = (counts_shard.astype(jnp.float32) * decay).astype(counts_shard.dtype)
     return w_shard, acc_shard, counts_shard, new_l1, new_l2

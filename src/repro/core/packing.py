@@ -95,6 +95,13 @@ class PicassoPlan:
     # 'mixed'/'auto' compile an assignment (repro.core.assign) and record
     # it here so later engines/flushes see the same mixing.
     strategy: Dict[int, str] = field(default_factory=dict)
+    # gid -> narrow master width d for the frequency-adaptive hot/cold split
+    # (picasso_narrow): cold ids live at width d in the sharded master and
+    # are projected up to the model dim at lookup; hot ids stay full-width
+    # in the tiers. Only *engaged* for groups whose recorded strategy is
+    # 'picasso_narrow' (see ``narrow_width``) — the budget can be planned
+    # ahead for every group and only bites where the assignment routes.
+    narrow_dim: Dict[int, int] = field(default_factory=dict)
     _by_gid: Dict[int, PackedGroup] = field(init=False, repr=False)
 
     def __post_init__(self):
@@ -103,6 +110,19 @@ class PicassoPlan:
     @property
     def n_interleave(self) -> int:
         return len(self.interleave)
+
+    def narrow_width(self, gid: int) -> int:
+        """Master-table width for one group: the planned narrow dim when the
+        recorded strategy is 'picasso_narrow' and the planned dim actually
+        narrows, else the full model dim. This is THE gating rule — state
+        init, sharding specs, migration, and the engine all consult it, so
+        a plan whose assignment routes a group elsewhere keeps it wide even
+        if a narrow budget was planned."""
+        dim = self.group(gid).dim
+        nd = int(self.narrow_dim.get(gid, dim))
+        if self.strategy.get(gid) == "picasso_narrow" and 0 < nd < dim:
+            return nd
+        return dim
 
     def group(self, gid: int) -> PackedGroup:
         """Resolve a group by its gid (NOT by list position: plans sliced or
@@ -381,6 +401,30 @@ def plan_l2(
     return out
 
 
+def plan_narrow(
+    groups: Sequence[PackedGroup],
+    narrow_dim: int,
+    min_dim: int = 4,
+) -> Dict[int, int]:
+    """gid -> narrow master width for the picasso_narrow hot/cold split.
+
+    Clamps the requested width per group: rounded down to the ``min_dim``
+    (sublane) multiple with a floor of ``min_dim``, and groups whose model
+    dim is already at or below the request keep their full dim (recording
+    ``dim`` means "no narrowing" under ``PicassoPlan.narrow_width``). The
+    budget is recorded for every group — it only engages where the strategy
+    assignment routes a group to 'picasso_narrow'.
+    """
+    out: Dict[int, int] = {}
+    for g in groups:
+        nd = int(narrow_dim)
+        if nd <= 0 or nd >= g.dim:
+            out[g.gid] = g.dim
+        else:
+            out[g.gid] = min(g.dim, max(min_dim, (nd // min_dim) * min_dim))
+    return out
+
+
 def make_plan(
     cfg: WDLConfig,
     world: int,
@@ -392,6 +436,7 @@ def make_plan(
     n_micro: Optional[int] = None,
     hot_bytes: int = 1 << 30,
     l2_bytes: int = 0,
+    narrow_dim: Optional[int] = None,
     capacity_slack: float = 2.0,
     exact_capacity: bool = False,
     freq_share: Optional[Dict[str, float]] = None,
@@ -423,6 +468,8 @@ def make_plan(
         l2_rows=l2_rows,
         hot_bytes=hot_bytes if enable_cache else 0,
         l2_bytes=l2_bytes if enable_cache else 0,
+        narrow_dim=(plan_narrow(groups, narrow_dim)
+                    if narrow_dim is not None else {}),
     )
 
 

@@ -21,7 +21,7 @@ import jax
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro.core.packed_embedding import CacheState
+from repro.core.packed_embedding import CacheState, ProjState
 from repro.core.packing import PicassoPlan
 from repro.embedding.state import EmbeddingState
 
@@ -48,14 +48,17 @@ def batch_specs(batch: Any, axes: Axes) -> Any:
         lambda x: P(axes, *((None,) * (len(x.shape) - 1))), batch)
 
 
-def emb_state_specs(axes: Axes, with_l2: bool = False) -> EmbeddingState:
+def emb_state_specs(axes: Axes, with_l2: bool = False,
+                    with_proj: bool = False) -> EmbeddingState:
     """Specs for one packed group's EmbeddingState (table MP, tiers DP).
 
     ``with_l2`` mirrors whether the group's state carries an L2 host tier
     (``plan.l2_rows[gid] > 0``); like the hot tier it is replicated across
     the mesh — on TPU its leaves additionally live in pinned host memory
     (see ``repro.embedding.state.pin_l2_to_host``), which PartitionSpecs do
-    not express.
+    not express. ``with_proj`` mirrors a narrow master
+    (``plan.narrow_width(gid) < dim``): the learned ``[d, D]`` up-projection
+    is replicated — its gradient is psum'd so replicas stay bit-identical.
     """
     return EmbeddingState(
         w=P(axes, None),
@@ -63,13 +66,16 @@ def emb_state_specs(axes: Axes, with_l2: bool = False) -> EmbeddingState:
         counts=P(axes),
         cache=CacheState(keys=P(), rows=P(), acc=P()),
         l2=CacheState(keys=P(), rows=P(), acc=P()) if with_l2 else None,
+        proj=ProjState(kernel=P(None, None), acc=P(None, None))
+        if with_proj else None,
     )
 
 
 def emb_specs(plan: PicassoPlan, axes: Axes) -> Dict[str, EmbeddingState]:
     """Specs for the full per-group embedding dict (the ``"emb"`` subtree)."""
-    return {str(g.gid): emb_state_specs(axes,
-                                        with_l2=plan.l2_rows.get(g.gid, 0) > 0)
+    return {str(g.gid): emb_state_specs(
+        axes, with_l2=plan.l2_rows.get(g.gid, 0) > 0,
+        with_proj=plan.narrow_width(g.gid) < g.dim)
             for g in plan.groups}
 
 

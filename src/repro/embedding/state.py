@@ -22,22 +22,52 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.packed_embedding import CacheState, init_cache
+from repro.core.packed_embedding import (CacheState, ProjState, init_cache,
+                                         proj_pinv)
 from repro.core.packing import PackedGroup, PicassoPlan
 
 
 class EmbeddingState(NamedTuple):
-    w: jnp.ndarray       # [rows, D]   (sharded over the whole mesh)
+    w: jnp.ndarray       # [rows, D]   (sharded over the whole mesh; D is the
+    #                      group's NARROW width for picasso_narrow groups)
     acc: jnp.ndarray     # [rows, 1]   adagrad accumulator
     counts: jnp.ndarray  # [rows]      FCounter (warm-up + running stats)
-    cache: CacheState    # replicated hot tier (L1)
+    cache: CacheState    # replicated hot tier (L1) — always model width
     l2: Optional[CacheState] = None  # host-memory tier (L2), None = no tier
+    proj: Optional[ProjState] = None  # learned [d, D] up-projection; set
+    #   exactly when the master is narrow (None keeps the pre-narrow pytree
+    #   structure for every other group, like the l2 leaf does)
+
+
+def _np_proj_kernel(gid: int, nd: int, d: int) -> np.ndarray:
+    """Deterministic projection init, shared by the jit init path and the
+    host-side migration (a re-widened group must get bit-identical fresh
+    projections in both): orthonormal ROWS (QR of a seeded normal), so at
+    init ``P @ P^T = I`` — widening is an isometry and the pseudo-inverse is
+    exactly ``P^T``. Seeded per (gid, d, D) so groups decorrelate."""
+    rng = np.random.default_rng(
+        np.random.SeedSequence(entropy=0x91CA550, spawn_key=(gid, nd, d)))
+    a = rng.standard_normal((d, nd))
+    q, _ = np.linalg.qr(a)            # [D, nd], orthonormal columns
+    return np.ascontiguousarray(q.T.astype(np.float32))  # [nd, D]
+
+
+def init_proj(gid: int, nd: int, d: int, dtype=jnp.float32) -> ProjState:
+    return ProjState(kernel=jnp.asarray(_np_proj_kernel(gid, nd, d), dtype),
+                     acc=jnp.zeros((nd, 1), dtype))
 
 
 def init_group_state(key: jax.Array, group: PackedGroup, hot_rows: int,
-                     dtype=jnp.float32, l2_rows: int = 0) -> EmbeddingState:
-    scale = 1.0 / jnp.sqrt(jnp.asarray(max(group.dim, 1), jnp.float32))
-    w = jax.random.normal(key, (group.rows, group.dim), dtype) * scale
+                     dtype=jnp.float32, l2_rows: int = 0,
+                     narrow_dim: Optional[int] = None) -> EmbeddingState:
+    """``narrow_dim`` < the group dim makes the MASTER table narrow (cold ids
+    live at width ``d`` and are projected up at lookup); the cache tiers stay
+    at the full model width — hot ids are always wide on device."""
+    nd = group.dim if narrow_dim is None else int(narrow_dim)
+    narrow = 0 < nd < group.dim
+    width = nd if narrow else group.dim
+    scale = 1.0 / jnp.sqrt(jnp.asarray(max(width, 1), jnp.float32))
+    w = jax.random.normal(key, (group.rows, width), dtype) * scale
     return EmbeddingState(
         w=w,
         acc=jnp.zeros((group.rows, 1), dtype),
@@ -45,6 +75,8 @@ def init_group_state(key: jax.Array, group: PackedGroup, hot_rows: int,
         cache=init_cache(hot_rows, group.dim, group.rows, dtype),
         l2=(init_cache(l2_rows, group.dim, group.rows, dtype)
             if l2_rows > 0 else None),
+        proj=(init_proj(group.gid, width, group.dim, dtype)
+              if narrow else None),
     )
 
 
@@ -53,7 +85,8 @@ def init_embedding_state(key: jax.Array, plan: PicassoPlan,
     keys = jax.random.split(key, len(plan.groups))
     return {
         g.gid: init_group_state(keys[i], g, plan.cache_rows.get(g.gid, 0),
-                                dtype, l2_rows=plan.l2_rows.get(g.gid, 0))
+                                dtype, l2_rows=plan.l2_rows.get(g.gid, 0),
+                                narrow_dim=plan.narrow_width(g.gid))
         for i, g in enumerate(plan.groups)
     }
 
@@ -64,8 +97,9 @@ def abstract_embedding_state(plan: PicassoPlan, dtype=jnp.float32) -> Dict[int, 
     for g in plan.groups:
         h = plan.cache_rows.get(g.gid, 0)
         h2 = plan.l2_rows.get(g.gid, 0)
+        nd = plan.narrow_width(g.gid)
         out[g.gid] = EmbeddingState(
-            w=jax.ShapeDtypeStruct((g.rows, g.dim), dtype),
+            w=jax.ShapeDtypeStruct((g.rows, nd), dtype),
             acc=jax.ShapeDtypeStruct((g.rows, 1), dtype),
             counts=jax.ShapeDtypeStruct((g.rows,), jnp.int32),
             cache=CacheState(
@@ -78,6 +112,10 @@ def abstract_embedding_state(plan: PicassoPlan, dtype=jnp.float32) -> Dict[int, 
                 rows=jax.ShapeDtypeStruct((h2, g.dim), dtype),
                 acc=jax.ShapeDtypeStruct((h2, 1), dtype),
             ) if h2 > 0 else None),
+            proj=(ProjState(
+                kernel=jax.ShapeDtypeStruct((nd, g.dim), dtype),
+                acc=jax.ShapeDtypeStruct((nd, 1), dtype),
+            ) if nd < g.dim else None),
         )
     return out
 
@@ -120,6 +158,42 @@ def pin_l2_to_host(state: Any, mesh=None) -> Any:
     if isinstance(state, dict):
         return {k: move(v) for k, v in state.items()}
     return move(state)
+
+
+def l2_pinning_supported() -> bool:
+    """True when this backend exposes a ``pinned_host`` memory space (the
+    precondition for ``pin_l2_to_host`` to do anything)."""
+    try:
+        jax.local_devices()[0].memory("pinned_host")
+        return True
+    except Exception:
+        return False
+
+
+_PIN_L2_WARNED = False
+
+
+def warn_pin_l2_limits() -> None:
+    """One-time ``--pin-l2`` caveat, printed by both launchers.
+
+    The sharding specs in ``repro.dist.sharding`` carry no memory kinds yet,
+    so even where pinning succeeds the jitted step re-stages the L2 tier into
+    device memory on entry; and on backends without a ``pinned_host`` memory
+    space the flag is a no-op outright. Either way the user asked for host
+    residency they are not fully getting — say so once."""
+    global _PIN_L2_WARNED
+    if _PIN_L2_WARNED:
+        return
+    _PIN_L2_WARNED = True
+    if not l2_pinning_supported():
+        print("[pin-l2] warning: this backend exposes no 'pinned_host' "
+              "memory kind — --pin-l2 is a no-op here (see the --pin-l2 "
+              "row in README.md for the flag's documented limits)")
+    else:
+        print("[pin-l2] warning: sharding specs carry no memory kinds yet, "
+              "so the jitted step re-stages the L2 tier into device memory "
+              "between pinnings (documented limit — see the --pin-l2 row "
+              "in README.md and docs/architecture.md 'host tier' notes)")
 
 
 # ---------------------------------------------------------------------------
@@ -193,49 +267,118 @@ def _rank_tier_keys(counts: np.ndarray, h1: int, h2: int, rows_padded: int
     return keys1, keys2
 
 
+def _np_proj_pinv(kernel: np.ndarray, ridge: float = 1e-6) -> np.ndarray:
+    """Host mirror of ``packed_embedding.proj_pinv`` (regularized right
+    pseudo-inverse ``P^T (P P^T + lam I)^{-1}``), used when migration must
+    narrow wide rows."""
+    k = np.asarray(kernel, np.float64)
+    gram = k @ k.T
+    eye = np.eye(gram.shape[0])
+    return (k.T @ np.linalg.solve(gram + ridge * eye, eye)).astype(np.float32)
+
+
 def _migrate_group(group: PackedGroup, st: EmbeddingState,
                    gates_old: Tuple[bool, bool], gates_new: Tuple[bool, bool],
-                   h1_new: int, h2_new: int, cache_update: str
-                   ) -> EmbeddingState:
+                   h1_new: int, h2_new: int, cache_update: str,
+                   nd_old: int, nd_new: int) -> EmbeddingState:
     """Move one group's live state onto new tier budgets/gating (host numpy).
 
     1. In 'psum' mode, active tiers are authoritative for their rows between
        flushes: write both back into the master shard first, so no update is
        lost when the tier shrinks or disappears. ('stale' mode: the master
        is already exact; tiers are read-only snapshots — no write-back.)
+       Narrow masters (``nd_old < dim``) take the write-back through the
+       projection's pseudo-inverse.
     2. Re-rank tier residency from the measured FCounter: the hottest
        ``h1_new`` rows seed the new L1 and the next ``h2_new`` the new L2
        (disjoint, like the two-tier flush), loaded from the just-synced
-       master so rows and adagrad slots migrate together.
-    3. Master rows, optimizer slots, and FCounter mass are preserved exactly
-       (modulo the write-back, which *restores* authoritative values).
+       master so rows and adagrad slots migrate together. New tiers load
+       from a full-width view: ids resident in the old tiers carry their
+       EXACT wide rows across (psum mode); everything else is widened
+       through the projection.
+    3. Width transitions re-master the table: ``nd`` widening re-projects
+       every row up (``w @ P``, exact for tier-carried ids), narrowing goes
+       through a fresh deterministic projection's pseudo-inverse. An
+       unchanged narrow width keeps the learned projection AND the narrow
+       master bitwise (no lossy widen/narrow round trip).
+    4. Optimizer slots and FCounter mass are preserved exactly for ids that
+       don't change tier (``acc`` is per-row and width-independent).
     """
     cache_on_old, l2_on_old = gates_old
     cache_on_new, l2_on_new = gates_new
+    dim = group.dim
     w = np.array(jax.device_get(st.w))      # mutable host copies
     acc = np.array(jax.device_get(st.acc))
     counts = np.asarray(jax.device_get(st.counts))
     dtype = w.dtype
     rows_padded = group.rows
 
+    narrow_old = st.proj is not None and w.shape[1] < dim
+    proj_old = (np.asarray(jax.device_get(st.proj.kernel), np.float32)
+                if narrow_old else None)
+    pinv_old = _np_proj_pinv(proj_old) if narrow_old else None
+
+    old_tiers = []
+    if cache_on_old:
+        old_tiers.append(_np_tier(st.cache))
+    if l2_on_old and st.l2 is not None:
+        old_tiers.append(_np_tier(st.l2))
+
     if cache_update == "psum":
-        if cache_on_old:
-            _np_write_back(w, acc, _np_tier(st.cache))
-        if l2_on_old and st.l2 is not None:
-            _np_write_back(w, acc, _np_tier(st.l2))
+        for tier in old_tiers:
+            if narrow_old:  # wide tier rows -> narrow master via pinv
+                keys = np.asarray(tier.keys)
+                mine = keys < rows_padded
+                w[keys[mine]] = (np.asarray(tier.rows)[mine].astype(np.float32)
+                                 @ pinv_old).astype(dtype)
+                acc[keys[mine]] = np.asarray(tier.acc)[mine].astype(acc.dtype)
+            else:
+                _np_write_back(w, acc, tier)
+
+    # Full-width view used for tier loads and width transitions. For narrow
+    # masters the widened rows are approximations — except for ids the old
+    # tiers held, whose exact wide rows override (psum mode: the tier was
+    # authoritative; stale mode: tiers are snapshots, master wins).
+    if narrow_old:
+        w_wide = (w.astype(np.float32) @ proj_old).astype(dtype)
+        if cache_update == "psum":
+            for tier in old_tiers:
+                keys = np.asarray(tier.keys)
+                mine = keys < rows_padded
+                w_wide[keys[mine]] = np.asarray(tier.rows)[mine].astype(dtype)
+    else:
+        w_wide = w
+
+    proj: Optional[ProjState] = None
+    if 0 < nd_new < dim:
+        if narrow_old and nd_new == nd_old:
+            w_new = w  # exact narrow pass-through; learned projection survives
+            proj = ProjState(
+                kernel=np.asarray(jax.device_get(st.proj.kernel)),
+                acc=np.asarray(jax.device_get(st.proj.acc)))
+        else:  # widening round trip or first narrowing: fresh projection
+            kern = _np_proj_kernel(group.gid, nd_new, dim)
+            w_new = (w_wide.astype(np.float32)
+                     @ _np_proj_pinv(kern)).astype(dtype)
+            proj = ProjState(kernel=kern.astype(dtype),
+                             acc=np.zeros((nd_new, 1), dtype))
+    else:
+        w_new = w_wide  # re-widened (or was never narrow)
 
     keys1, keys2 = _rank_tier_keys(counts,
                                    h1_new if cache_on_new else 0,
                                    h2_new if l2_on_new else 0, rows_padded)
     if cache_on_new:
-        cache = _np_load_tier(w, acc, keys1, rows_padded, dtype)
+        cache = _np_load_tier(w_wide, acc, keys1, rows_padded, dtype)
     else:  # allocated (plan budgets rows) but inert under the new strategy
         cache = _np_empty_tier(h1_new, group.dim, rows_padded, dtype)
     l2: Optional[CacheState] = None
     if h2_new > 0:
-        l2 = (_np_load_tier(w, acc, keys2, rows_padded, dtype) if l2_on_new
+        l2 = (_np_load_tier(w_wide, acc, keys2, rows_padded, dtype)
+              if l2_on_new
               else _np_empty_tier(h2_new, group.dim, rows_padded, dtype))
-    return EmbeddingState(w=w, acc=acc, counts=counts, cache=cache, l2=l2)
+    return EmbeddingState(w=w_new, acc=acc, counts=counts, cache=cache,
+                          l2=l2, proj=proj)
 
 
 def migrate_state(old_plan: PicassoPlan, new_plan: PicassoPlan, state: Any, *,
@@ -255,7 +398,10 @@ def migrate_state(old_plan: PicassoPlan, new_plan: PicassoPlan, state: Any, *,
     - otherwise the group is migrated on host (``_migrate_group``): 'psum'
       tiers are written back so every master row and adagrad slot survives
       exactly, then the new tiers are re-seeded with the measured top-(H1+H2)
-      rows split hottest-H1 -> L1 / next-H2 -> L2.
+      rows split hottest-H1 -> L1 / next-H2 -> L2. Narrow-width changes
+      (``plan.narrow_width``) re-master the table across the projection:
+      ids heating into a tier re-widen, cooling ids narrow through the
+      pseudo-inverse, and ids staying tier-resident carry exact wide rows.
 
     ``use_cache``/``use_l2``/``cache_update`` MUST mirror the engine flags
     the state was trained under (same contract as ``make_flush_fn``).
@@ -291,10 +437,13 @@ def migrate_state(old_plan: PicassoPlan, new_plan: PicassoPlan, state: Any, *,
                                use_l2=use_l2)
         gates_new = tier_gates(new_plan, g.gid, use_cache=use_cache,
                                use_l2=use_l2)
+        nd_old = old_plan.narrow_width(g.gid)
+        nd_new = new_plan.narrow_width(g.gid)
         st = state[str(g.gid)]
-        if h_old == h_new and gates_old == gates_new:
+        if h_old == h_new and gates_old == gates_new and nd_old == nd_new:
             out[str(g.gid)] = st  # bitwise pass-through
         else:
             out[str(g.gid)] = _migrate_group(g, st, gates_old, gates_new,
-                                             h_new[0], h_new[1], cache_update)
+                                             h_new[0], h_new[1], cache_update,
+                                             nd_old, nd_new)
     return out

@@ -1,8 +1,9 @@
 """Unified embedding engine: one sparse path for train / serve / retrieval.
 
 ``EmbeddingEngine`` executes a ``PicassoPlan`` with per-group pluggable
-``LookupStrategy``s (``'picasso' | 'hybrid' | 'ps' | 'picasso_l2'`` plus the
-``'mp_nodedup' | 'allgather_rows'`` benchmark baselines, see ``strategies``):
+``LookupStrategy``s (``'picasso' | 'hybrid' | 'ps' | 'picasso_l2' |
+'picasso_narrow'`` plus the ``'mp_nodedup' | 'allgather_rows'`` benchmark
+baselines, see ``strategies``):
 a single name broadcasts, ``'mixed'``/``'auto'`` uses the plan's assignment
 or compiles one with the ``repro.core.assign`` cost model.
 
@@ -13,14 +14,16 @@ place (``from repro.engine import ...``).
 """
 from repro.core.assign import (AUTO_NAMES, GroupScore, StrategyAssignment,
                                apply_assignment, compile_assignment,
-                               estimate_l2_gain, estimate_skew, maybe_compile,
+                               estimate_l2_gain, estimate_narrow_gain,
+                               estimate_skew, maybe_compile,
                                resolve_assignment)
 from repro.engine.engine import EmbeddingEngine, EngineContext, export_stats
 from repro.engine.strategies import (AllGatherRowsStrategy, HybridStrategy,
                                      LookupStrategy, MPNoDedupStrategy,
-                                     PicassoL2Strategy, PicassoStrategy,
-                                     PSStrategy, available_strategies,
-                                     get_strategy, register_strategy)
+                                     PicassoL2Strategy, PicassoNarrowStrategy,
+                                     PicassoStrategy, PSStrategy,
+                                     available_strategies, get_strategy,
+                                     register_strategy)
 
 __all__ = [
     "AUTO_NAMES",
@@ -33,12 +36,14 @@ __all__ = [
     "MPNoDedupStrategy",
     "PSStrategy",
     "PicassoL2Strategy",
+    "PicassoNarrowStrategy",
     "PicassoStrategy",
     "StrategyAssignment",
     "apply_assignment",
     "available_strategies",
     "compile_assignment",
     "estimate_l2_gain",
+    "estimate_narrow_gain",
     "estimate_skew",
     "export_stats",
     "get_strategy",

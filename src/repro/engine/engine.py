@@ -27,9 +27,9 @@ Strategy is a **per-packed-group property of the plan**, not an engine-wide
 flag: the engine owns a ``Dict[gid, LookupStrategy]`` and dispatches per
 group in every entry point. The ``strategy=`` argument accepts
 
-- a registry name (``'picasso' | 'hybrid' | 'ps' | 'picasso_l2'``) —
-  broadcast to every group (the original single-strategy constructor, kept
-  as sugar);
+- a registry name (``'picasso' | 'hybrid' | 'ps' | 'picasso_l2' |
+  'picasso_narrow'``) — broadcast to every group (the original
+  single-strategy constructor, kept as sugar);
 - ``'mixed'`` / ``'auto'`` — use ``plan.strategy`` when the planner recorded
   an assignment, else compile one with the ``repro.core.assign`` cost model
   (tiny tables PS-replicated, big skewed tables routed + cached);
@@ -161,6 +161,20 @@ class EmbeddingEngine:
         # host-flush engine and later call sites gate caches identically)
         self.assignment: Dict[int, str] = resolve_assignment(
             plan, strategy, world=world, use_cache=use_cache)
+        # narrow masters are only readable through picasso_narrow: a plan
+        # that narrows a group (recorded assignment + narrow budget) cannot
+        # be driven by an engine assigning that group elsewhere — the master
+        # shard is [rows, d], every other strategy expects [rows, D]
+        for g in plan.groups:
+            if (plan.narrow_width(g.gid) < g.dim
+                    and self.assignment.get(g.gid) != "picasso_narrow"):
+                raise ValueError(
+                    f"g{g.gid}: the plan narrows this group's master to "
+                    f"width {plan.narrow_width(g.gid)} (< dim {g.dim}), but "
+                    f"this engine assigns {self.assignment.get(g.gid)!r}; "
+                    "narrow state is only readable through 'picasso_narrow' "
+                    "— keep the recorded assignment or re-plan without "
+                    "narrow_dim")
         names = tuple(sorted(set(self.assignment.values())))
         self.strategy_names = names
         self.strategy_name = names[0] if len(names) == 1 else "mixed"
@@ -317,7 +331,25 @@ class EmbeddingEngine:
                 continue
             st = out[str(g.gid)]
             wb = self.cache_update == "psum"
-            if self.l2_on.get(g.gid, False) and st.l2 is not None:
+            if st.proj is not None:
+                # narrow master: heterogeneous-width flush (write-back via
+                # the projection pseudo-inverse, widened reload, exact carry
+                # for ids staying tier-resident). A missing L2 tier flushes
+                # as an empty wide tier and stays absent.
+                l2t = st.l2
+                if l2t is None:
+                    l2t = pe.CacheState(
+                        keys=jnp.full((0,), g.rows, jnp.int32),
+                        rows=jnp.zeros((0, g.dim), st.cache.rows.dtype),
+                        acc=jnp.zeros((0, 1), st.cache.acc.dtype))
+                w2, acc2, counts2, cache2, l22 = pe.flush_cache_narrow(
+                    st.w, st.acc, st.counts, st.cache, l2t,
+                    st.proj.kernel, axes=self.axes, world=self.world,
+                    write_back=wb)
+                out[str(g.gid)] = EmbeddingState(
+                    w2, acc2, counts2, cache2,
+                    l22 if st.l2 is not None else None, st.proj)
+            elif self.l2_on.get(g.gid, False) and st.l2 is not None:
                 w2, acc2, counts2, cache2, l22 = pe.flush_cache_l2(
                     st.w, st.acc, st.counts, st.cache, st.l2, axes=self.axes,
                     world=self.world, write_back=wb)

@@ -34,6 +34,12 @@ Concrete strategies (selected by name through the registry):
     only the remainder rides the all_to_all Shuffle. Write-back and re-rank
     happen at flush time for both tiers at once. Cold or absent L2 is
     bitwise-identical to ``picasso``.
+``picasso_narrow``
+    The picasso_l2 path with frequency-adaptive widths: tier-resident (hot)
+    ids are served full-width ``D`` rows on device while the cold master
+    stores/routes narrow ``d = plan.narrow_dim`` rows, projected up at
+    lookup by a learned per-group ``[d, D]`` map. With no narrow budget the
+    strategy is bitwise-identical to ``picasso_l2``.
 ``mp_nodedup``
     The Shuffle *without* K-Packed dedup: every raw id (duplicates included)
     rides the all_to_all. Prices the Unique&Partition fusion itself; exact
@@ -280,6 +286,73 @@ class PicassoL2Strategy(PicassoStrategy):
     def tier_metrics(self, ctx):
         return {"cache_hits/l1": pe.cache_hit_count(ctx).astype(jnp.int32),
                 "cache_hits/l2": pe.l2_hit_count(ctx).astype(jnp.int32)}
+
+
+@register_strategy("picasso_narrow")
+class PicassoNarrowStrategy(PicassoL2Strategy):
+    """Frequency-adaptive embedding widths: hot ids wide, cold ids narrow.
+
+    The two-tier picasso_l2 machinery with a heterogeneous-width master: ids
+    resident in either cache tier are served full-width ``D`` rows exactly as
+    in ``picasso_l2``, while the cold remainder rides the Shuffle at the
+    planned narrow width ``d = plan.narrow_dim`` — the master shard stores
+    ``[rows, d]``, both routed hops carry ``d``-wide payloads, and one fused
+    ``ops.gather_project`` pass stitches the routed-back narrow rows up
+    through a learned per-group ``[d, D]`` projection (``st.proj``).
+
+    Backward mirrors the forward wire: the wide cotangent folds through
+    ``proj^T`` once, routed grads travel narrow, tier-hit grads update the
+    wide tiers, and the projection trains from the lookup's narrow residual
+    (psum'd, adagrad'd) — see ``pe.apply_sparse_grads_narrow``. The flush
+    (``pe.flush_cache_narrow``) implements the re-widening lifecycle: ids
+    heating into a tier are widened ``narrow @ P``, ids staying resident
+    keep their exact wide rows, cooling ids narrow through the projection's
+    pseudo-inverse.
+
+    Degenerate case: a plan that doesn't actually narrow this group
+    (``narrow_dim >= D``, or the assignment routed it elsewhere) initializes
+    no projection (``st.proj is None``) and every path below delegates to
+    ``PicassoL2Strategy`` — bitwise-identical to ``picasso_l2``.
+    """
+
+    def lookup(self, st, gid, ids, *, cache_on=False, l2_on=False):
+        if st.proj is None:  # not narrowed on this plan: exact L2 path
+            return super().lookup(st, gid, ids, cache_on=cache_on, l2_on=l2_on)
+        with_l2 = l2_on and st.l2 is not None
+        return pe.mp_lookup_narrow(
+            st.w, ids, proj=st.proj.kernel, axes=self.axes, world=self.world,
+            capacity=self.capacity[gid],
+            hot_keys=st.cache.keys if cache_on else None,
+            hot_rows=st.cache.rows if cache_on else None,
+            l2_keys=st.l2.keys if with_l2 else None,
+            l2_rows=st.l2.rows if with_l2 else None,
+            fused=self.use_fused)
+
+    def apply_grads(self, st, gid, ctx, g_rows, *, cache_on=False, l2_on=False):
+        if st.proj is None:
+            return super().apply_grads(st, gid, ctx, g_rows,
+                                       cache_on=cache_on, l2_on=l2_on)
+        with_l2 = l2_on and st.l2 is not None and ctx.l2_hit is not None
+        w2, acc2, cache2, l22, proj2 = pe.apply_sparse_grads_narrow(
+            st.w, st.acc, st.cache if cache_on else None,
+            st.l2 if with_l2 else None, st.proj, ctx, g_rows,
+            axes=self.axes, world=self.world, lr=self.lr, eps=self.eps,
+            cache_update=self.cache_update, fused=self.use_fused,
+            compress=self.grad_compress)
+        counts2 = pe.count_frequencies(st.counts, ctx)
+        if cache_on or with_l2:
+            both = (ctx.hit if ctx.l2_hit is None
+                    else ctx.hit | ctx.l2_hit)
+            counts2 = pe.count_hit_frequencies(counts2, ctx, both,
+                                               axes=self.axes,
+                                               world=self.world)
+        st2 = EmbeddingState(w=w2, acc=acc2, counts=counts2,
+                             cache=cache2 if cache2 is not None else st.cache,
+                             l2=l22 if with_l2 else st.l2,
+                             proj=proj2)
+        hits = pe.cache_hit_count(ctx) + pe.l2_hit_count(ctx)
+        return (st2, ctx.routing.overflow.astype(jnp.int32),
+                hits.astype(jnp.int32))
 
 
 class PSCtx(NamedTuple):

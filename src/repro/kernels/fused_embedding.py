@@ -46,6 +46,16 @@ never materializes the ``[n, D]`` per-id intermediate:
     rows)`` with miss rows exactly zero, so the caller's stitch is a single
     ``where``.
 
+``gather_project_pallas`` / ``gather_project_grad_pallas``
+    The narrow-row stitch of ``picasso_narrow``: gather a ``[d]`` narrow row
+    from the routed-back buffer and project it up through the learned
+    ``[d, D]`` map in one grid step (per-row DMA + a tiny MXU dot), so the
+    ``[n, d]`` gather and the ``[n, D]`` projection never exist as separate
+    memory-bound XLA ops. The backward folds the wide cotangent through
+    ``proj^T`` and run-accumulates onto the routed-buffer slots (positions
+    pre-sorted by slot, one zero ghost per slot so every output block is
+    written) — again one pass, no per-id intermediate.
+
 All kernels run in ``interpret=True`` on non-TPU backends (the dispatch in
 ``kernels.ops`` decides); the CI soak forces every call through the
 interpreter against the pure-jnp references.
@@ -307,3 +317,142 @@ def tier_probe_pallas(
     )(uniq.astype(jnp.int32), uvalid.astype(jnp.int32),
       keys.reshape(1, h).astype(jnp.int32), rows)
     return hit[:, 0].astype(bool), slot[:, 0], out_rows
+
+
+# ---------------------------------------------------------------------------
+# fused narrow-row gather + up-projection (picasso_narrow's stitch) and its
+# transpose
+# ---------------------------------------------------------------------------
+
+
+def _gproject_kernel(idx_ref, kept_ref, proj_blk, back_any,
+                     wide_out, narrow_out, rowbuf, sem, *, m):
+    i = pl.program_id(0)
+    j = jnp.minimum(idx_ref[i], m - 1)
+    ok = jnp.logical_and(kept_ref[i] != 0, idx_ref[i] < m)
+
+    @pl.when(ok)
+    def _hit():
+        cp = pltpu.make_async_copy(back_any.at[pl.ds(j, 1)], rowbuf, sem)
+        cp.start()
+        cp.wait()
+        narrow_out[...] = rowbuf[...]
+        wide_out[...] = jax.lax.dot_general(
+            rowbuf[...], proj_blk[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=wide_out.dtype)
+
+    @pl.when(jnp.logical_not(ok))
+    def _miss():
+        narrow_out[...] = jnp.zeros_like(narrow_out)
+        wide_out[...] = jnp.zeros_like(wide_out)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_project_pallas(
+    back: jnp.ndarray,   # [m, d] routed-back narrow rows (may live off-device)
+    idx: jnp.ndarray,    # [n] routed-buffer slot per position
+    kept: jnp.ndarray,   # [n] mask: padded / served-above positions drop out
+    proj: jnp.ndarray,   # [d, D] learned up-projection
+    interpret: bool = False,
+):
+    """Fused narrow stitch: per position, DMA the ``[d]`` narrow row out of
+    the routed buffer and push it through the VMEM-resident projection on
+    the MXU — one grid step per position, no ``[n, d]``-then-``[n, D]``
+    op chain. Returns ``(wide [n, D], narrow [n, d])``; not-kept positions
+    are exact zeros in both outputs (the caller's where-merge contract, and
+    what makes ``narrow`` directly usable as the projection-grad residual)."""
+    m, nd = back.shape
+    n = idx.shape[0]
+    d = proj.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,   # idx, kept
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((nd, d), lambda i, ix, k: (0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, d), lambda i, ix, k: (i, 0)),
+            pl.BlockSpec((1, nd), lambda i, ix, k: (i, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, nd), back.dtype),
+            pltpu.SemaphoreType.DMA(()),
+        ],
+    )
+    kern = functools.partial(_gproject_kernel, m=m)
+    wide, narrow = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((n, d), back.dtype),
+                   jax.ShapeDtypeStruct((n, nd), back.dtype)],
+        interpret=interpret,
+    )(idx.astype(jnp.int32), kept.astype(jnp.int32), proj, back)
+    return wide, narrow
+
+
+def _gproject_bwd_kernel(si_ref, gw_blk, gn_blk, proj_blk, out_blk):
+    i = pl.program_id(0)
+    idx = si_ref[i]
+    first = jnp.logical_or(i == 0, idx != si_ref[jnp.maximum(i - 1, 0)])
+    contrib = jax.lax.dot_general(
+        gw_blk[...], proj_blk[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=gn_blk.dtype) + gn_blk[...]
+
+    @pl.when(first)
+    def _init():
+        out_blk[...] = contrib
+
+    @pl.when(jnp.logical_not(first))
+    def _acc():
+        out_blk[...] += contrib
+
+
+@functools.partial(jax.jit, static_argnames=("m", "interpret"))
+def gather_project_grad_pallas(
+    g_wide: jnp.ndarray,    # [n, D] cotangent of the projected rows
+    g_narrow: jnp.ndarray,  # [n, d] cotangent of the narrow residual
+    idx: jnp.ndarray,       # [n] routed-buffer slot per position
+    kept: jnp.ndarray,      # [n] mask
+    proj: jnp.ndarray,      # [d, D]
+    m: int,                 # routed-buffer rows
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Transpose of ``gather_project`` w.r.t. the routed buffer:
+    ``g_back[j] = sum_{idx[i]=j} kept[i] * (g_wide[i] @ proj^T +
+    g_narrow[i])`` — the fold through ``proj^T`` happens per grid step on
+    the MXU and duplicate slots run-accumulate in the (sorted-slot) output
+    block, so no ``[n, d]`` folded intermediate is materialized. One zero
+    ghost position per output slot guarantees every block is written (slots
+    nothing routes to come out exactly zero)."""
+    n = idx.shape[0]
+    nd, d = proj.shape
+    keptf = kept.astype(g_wide.dtype)
+    # not-kept positions contribute zero; ghosts (one per slot) likewise
+    slots = jnp.concatenate([
+        jnp.where(kept.astype(bool), idx.astype(jnp.int32), m - 1),
+        jnp.arange(m, dtype=jnp.int32)])
+    gw = jnp.concatenate([g_wide * keptf[:, None],
+                          jnp.zeros((m, g_wide.shape[1]), g_wide.dtype)])
+    gn = jnp.concatenate([g_narrow * keptf[:, None],
+                          jnp.zeros((m, nd), g_narrow.dtype)])
+    order = jnp.argsort(slots, stable=True).astype(jnp.int32)
+    si = jnp.take(slots, order)
+    sgw = jnp.take(gw, order, axis=0)
+    sgn = jnp.take(gn, order, axis=0)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,   # si
+        grid=(n + m,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, si: (i, 0)),
+            pl.BlockSpec((1, nd), lambda i, si: (i, 0)),
+            pl.BlockSpec((nd, d), lambda i, si: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, nd), lambda i, si: (si[i], 0)),
+    )
+    return pl.pallas_call(
+        _gproject_bwd_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, nd), g_wide.dtype),
+        interpret=interpret,
+    )(si, sgw, sgn, proj)

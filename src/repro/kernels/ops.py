@@ -43,6 +43,8 @@ from repro.kernels.embedding_bag import embedding_bag_pallas
 from repro.kernels.fm_interaction import fm_interaction_pallas
 from repro.kernels.fused_embedding import (dedup_adagrad_pallas,
                                            gather_pool_pallas,
+                                           gather_project_grad_pallas,
+                                           gather_project_pallas,
                                            segment_grad_pallas,
                                            tier_probe_pallas)
 from repro.kernels.grad_compress import (fp16_compress_pallas,
@@ -68,10 +70,20 @@ def _backend() -> Tuple[bool, bool]:
     return _BACKEND
 
 
+# spelling -> resolved bool, memoized per process so repeated engine
+# constructions skip the validation/branching. Keyed by the spelling itself;
+# the 'auto'/None entries depend on _BACKEND, so the memo MUST die with it
+# (reset_backend_cache clears both — an interpret-soak test that flipped the
+# env var must not leak its resolved dispatch into later tests).
+_RESOLVE_MEMO: dict = {}
+
+
 def reset_backend_cache() -> None:
-    """Forget the cached backend decision (tests that flip the env var)."""
+    """Forget the cached backend decision (tests that flip the env var) and
+    the per-spelling ``resolve_fused`` memo derived from it."""
     global _BACKEND
     _BACKEND = None
+    _RESOLVE_MEMO.clear()
 
 
 def _use_pallas() -> bool:
@@ -82,23 +94,40 @@ def _interpret() -> bool:
     return _backend()[1]
 
 
+def interpret_mode() -> bool:
+    """Whether Pallas kernels run through the interpreter in this process
+    (TPU-less backend or the ``REPRO_FORCE_PALLAS_INTERPRET`` soak). Public
+    so the bench harness can stamp its rows — interpreter timings must never
+    be mistaken for silicon numbers."""
+    return _interpret()
+
+
 def resolve_fused(spec: Union[str, bool, None]) -> bool:
     """Map a ``use_fused_kernels`` spelling to a static bool, once.
 
     ``'auto'``/``None`` follow the backend (Pallas on TPU or under the
     interpret-soak env var, reference on CPU); booleans and ``'on'``/
     ``'off'`` force it. Raises on anything else so config typos fail at
-    construction, not silently at dispatch."""
+    construction, not silently at dispatch. Resolutions are memoized per
+    spelling; ``reset_backend_cache`` clears the memo together with the
+    backend decision it is derived from."""
+    try:
+        return _RESOLVE_MEMO[spec]
+    except KeyError:
+        pass
     if spec is None or spec == "auto":
-        return _use_pallas()
-    if isinstance(spec, bool):
-        return spec
-    if spec == "on":
-        return True
-    if spec == "off":
-        return False
-    raise ValueError(
-        f"use_fused_kernels must be 'auto', 'on', 'off' or a bool; got {spec!r}")
+        out = _use_pallas()
+    elif isinstance(spec, bool):
+        out = spec
+    elif spec == "on":
+        out = True
+    elif spec == "off":
+        out = False
+    else:
+        raise ValueError(
+            f"use_fused_kernels must be 'auto', 'on', 'off' or a bool; got {spec!r}")
+    _RESOLVE_MEMO[spec] = out
+    return out
 
 
 def _fused(fused: Optional[bool]) -> bool:
@@ -295,6 +324,67 @@ def tier_probe(uniq, uvalid, keys, rows, fused: Optional[bool] = None):
         return tier_probe_pallas(uniq, uvalid, keys, rows,
                                  interpret=_interpret())
     return ref.tier_probe_ref(uniq, uvalid, keys, rows)
+
+
+def _gather_project_impl(back, idx, kept, proj, fused: bool):
+    if fused:
+        return gather_project_pallas(back, idx, kept, proj,
+                                     interpret=_interpret())
+    return ref.gather_project_ref(back, idx, kept, proj)
+
+
+def _gather_project_grad_impl(g_wide, g_narrow, idx, kept, proj, m: int,
+                              fused: bool):
+    if fused:
+        return gather_project_grad_pallas(g_wide, g_narrow, idx, kept, proj,
+                                          m, interpret=_interpret())
+    return ref.gather_project_grad_ref(g_wide, g_narrow, idx, kept, proj, m)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _gather_project(back, idx, kept, proj, fused: bool):
+    return _gather_project_impl(back, idx, kept, proj, fused)
+
+
+def _gather_project_fwd(back, idx, kept, proj, fused: bool):
+    out = _gather_project_impl(back, idx, kept, proj, fused)
+    # the narrow residual is already kept-masked, so the projection cotangent
+    # below needs no re-mask
+    return out, (idx, kept, out[1], proj, back.shape[0])
+
+
+def _gather_project_bwd(fused: bool, res, g):
+    idx, kept, narrow, proj, m = res
+    g_wide, g_narrow = g
+    g_back = _gather_project_grad_impl(g_wide, g_narrow, idx, kept, proj,
+                                       m, fused)
+    g_proj = narrow.T @ g_wide          # [d, D], one MXU pass
+    return g_back, None, None, g_proj
+
+
+_gather_project.defvjp(_gather_project_fwd, _gather_project_bwd)
+
+
+def gather_project(back, idx, kept, proj, fused: Optional[bool] = None):
+    """Narrow-row stitch for hot/cold heterogeneous placement: gather
+    ``[d]``-narrow rows out of the routed-back buffer and project them up
+    through the learned per-group ``[d, D]`` map in one fused pass —
+    ``(wide [n, D], narrow [n, d])``, with not-kept positions exact zeros in
+    both. A ``jax.custom_vjp``: the backward folds the wide cotangent
+    through ``proj^T`` and run-accumulates onto the buffer slots (no
+    ``[n, d]``-then-``[n, D]`` chain in either direction), and the
+    projection's gradient is one ``narrow^T @ g_wide`` matmul off the
+    forward's residual."""
+    return _gather_project(back, idx, kept, proj, _fused(fused))
+
+
+def gather_project_grad(g_wide, g_narrow, idx, kept, proj, m: int,
+                        fused: Optional[bool] = None):
+    """Transpose of ``gather_project`` w.r.t. the routed buffer, standalone
+    (the engine's explicit backward path): ``g_back[j] = sum_{idx[i]=j}
+    kept[i] * (g_wide[i] @ proj^T + g_narrow[i])``."""
+    return _gather_project_grad_impl(g_wide, g_narrow, idx, kept, proj,
+                                     int(m), _fused(fused))
 
 
 # ---------------------------------------------------------------------------

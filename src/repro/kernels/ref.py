@@ -66,6 +66,27 @@ def tier_probe_ref(uniq: jnp.ndarray, uvalid: jnp.ndarray, keys: jnp.ndarray,
     return hit, slot, out
 
 
+def gather_project_ref(back: jnp.ndarray, idx: jnp.ndarray, kept: jnp.ndarray,
+                       proj: jnp.ndarray):
+    """Unfused narrow-row stitch: gather ``[n, d]`` narrow rows out of the
+    routed-back buffer, mask the not-kept (padded / served-above) positions,
+    and project up through the learned ``[d, D]`` map. Returns ``(wide
+    [n, D], narrow [n, d])`` — the narrow rows are the VJP residual for the
+    projection gradient (``g_proj = narrow^T @ g_wide``)."""
+    narrow = jnp.take(back, idx, axis=0) * kept[:, None].astype(back.dtype)
+    return narrow @ proj, narrow
+
+
+def gather_project_grad_ref(g_wide: jnp.ndarray, g_narrow: jnp.ndarray,
+                            idx: jnp.ndarray, kept: jnp.ndarray,
+                            proj: jnp.ndarray, m: int) -> jnp.ndarray:
+    """Transpose of ``gather_project_ref`` w.r.t. ``back``: fold the wide
+    cotangent back through ``proj`` and scatter-sum onto the routed-buffer
+    slots. ``g_narrow`` is the cotangent of the narrow residual output."""
+    per = (g_wide @ proj.T + g_narrow) * kept[:, None].astype(g_wide.dtype)
+    return jax.ops.segment_sum(per, idx.astype(jnp.int32), num_segments=m)
+
+
 def fm_interaction_ref(fields: jnp.ndarray) -> jnp.ndarray:
     """[B, F, D] -> [B, 1]: 0.5 * sum_d ((sum_f v)^2 - sum_f v^2)."""
     s = fields.sum(axis=1)

@@ -41,6 +41,12 @@ def main():
                     help="host-memory L2 cache budget in bytes (0 disables; "
                          ">0 budgets an L2 tier behind the hot tier for the "
                          "scoring path)")
+    ap.add_argument("--narrow-dim", type=int, default=0, metavar="D",
+                    help="narrow master width for picasso_narrow groups "
+                         "(0 disables): cold ids are stored at D columns and "
+                         "up-projected at lookup; takes effect for groups "
+                         "assigned 'picasso_narrow' (broadcast it or let "
+                         "mixed/auto pick it per group)")
     ap.add_argument("--pin-l2", action="store_true",
                     help="place L2 host-tier leaves in pinned host memory "
                          "(pin_l2_to_host; no-op on backends without "
@@ -65,7 +71,7 @@ def main():
 
     from repro.configs import get_config
     from repro.core.packing import make_plan
-    from repro.engine import maybe_compile
+    from repro.engine import maybe_compile, resolve_assignment
     from repro.data.synthetic import make_batch
     from repro.dist.sharding import batch_specs, to_named
     from repro.launch.mesh import make_mesh
@@ -85,15 +91,17 @@ def main():
         spec = maybe_compile(plan, args.strategy, per_device_batch=per_dev_batch,
                              use_cache=use_cache,
                              log=lambda s: print(f"[serve] {s}"))
+        # record broadcast assignments (notably 'picasso_narrow', which
+        # gates the master widths) on the plan before init_state sizes it
+        resolve_assignment(plan, spec, world=world, use_cache=use_cache)
         return ServeConfig(strategy=spec, use_cache=use_cache,
                            use_fused_kernels=args.fused_kernels)
 
     cfg = get_config(args.arch, smoke=args.smoke)
     if args.retrieval:
         plan = make_plan(cfg, world=world, per_device_batch=1, enable_cache=False,
-                         exact_capacity=True)
+                         exact_capacity=True, narrow_dim=args.narrow_dim or None)
         model = WDLModel(cfg, plan)
-        state = init_state(model, plan, jax.random.PRNGKey(0), mesh=mesh, axes=axes)
         n_cand = args.n_candidates or args.candidates
         nc = (n_cand // world) * world
         chunk = args.score_chunk or nc // world
@@ -104,10 +112,12 @@ def main():
                           if f.pooling == "none" and f.max_len > 1)
         ips = plan.group(field_index(plan)[item_field].gid).ids_per_sample
         proxy_batch = max(1, min(chunk, nc // world) // max(ips, 1))
+        # resolve the strategy before init_state: a 'picasso_narrow'
+        # assignment is recorded on the plan and gates the master widths
+        scfg = serve_cfg(plan, proxy_batch, use_cache=False)
+        state = init_state(model, plan, jax.random.PRNGKey(0), mesh=mesh, axes=axes)
         step = make_retrieval_step(model, plan, mesh, axes, nc, top_k=10,
-                                   scfg=serve_cfg(plan, proxy_batch,
-                                                  use_cache=False),
-                                   score_chunk=args.score_chunk)
+                                   scfg=scfg, score_chunk=args.score_chunk)
         user = make_batch(cfg, 1, np.random.default_rng(1))
         from jax.sharding import NamedSharding, PartitionSpec as P
         cand = jax.device_put(jnp.arange(nc, dtype=jnp.int32) % cfg.fields[0].vocab,
@@ -117,14 +127,16 @@ def main():
         return
 
     plan = make_plan(cfg, world=world, per_device_batch=args.batch // world,
-                     l2_bytes=args.l2_budget)
+                     l2_bytes=args.l2_budget,
+                     narrow_dim=args.narrow_dim or None)
     model = WDLModel(cfg, plan)
+    scfg = serve_cfg(plan, args.batch // world)
     state = init_state(model, plan, jax.random.PRNGKey(0), mesh=mesh, axes=axes)
     if args.pin_l2:
-        from repro.embedding.state import pin_l2_to_host
+        from repro.embedding.state import pin_l2_to_host, warn_pin_l2_limits
+        warn_pin_l2_limits()
         state = pin_l2_to_host(state, mesh)
-    serve = make_serve_step(model, plan, mesh, axes, args.batch,
-                            scfg=serve_cfg(plan, args.batch // world))
+    serve = make_serve_step(model, plan, mesh, axes, args.batch, scfg=scfg)
     rng = np.random.default_rng(0)
     lat = []
     for i in range(args.n_requests):

@@ -32,6 +32,13 @@ def main():
                     help="host-memory L2 cache budget in bytes (0 disables; "
                          ">0 budgets an L2 tier behind the hot tier, used by "
                          "picasso_l2 and offered to the mixed/auto cost model)")
+    ap.add_argument("--narrow-dim", type=int, default=0, metavar="D",
+                    help="narrow master width for the picasso_narrow "
+                         "hot/cold split (0 disables): cold ids are stored "
+                         "and routed at this width and projected up to the "
+                         "model dim at lookup, hot ids stay full-width in "
+                         "the cache tiers; used by picasso_narrow and "
+                         "offered to the mixed/auto cost model")
     ap.add_argument("--replan-iters", type=int, default=0, metavar="N",
                     help="adaptive replanning: every N steps harvest the live "
                          "FCounter, recompile tier budgets + the strategy "
@@ -105,7 +112,7 @@ def main():
     from repro.data.pipeline import device_put_stream
     from repro.data.synthetic import batch_stream
     from repro.dist.sharding import batch_specs
-    from repro.embedding.state import pin_l2_to_host
+    from repro.embedding.state import pin_l2_to_host, warn_pin_l2_limits
     from repro.launch.mesh import make_mesh
     from repro.models.wdl import WDLModel
     from repro.runtime import Replanner, apply_plan_meta, plan_meta
@@ -129,6 +136,7 @@ def main():
                      n_micro=args.n_micro,
                      hot_bytes=1 << 24 if args.smoke else 1 << 30,
                      l2_bytes=args.l2_budget,
+                     narrow_dim=args.narrow_dim or None,
                      flush_iters=20, warmup_iters=10)
     if args.ckpt_dir:
         # a checkpointed run may have replanned: revise the structural plan
@@ -165,6 +173,7 @@ def main():
     model, tcfg, step_fn = build_step(plan)
     state = init_state(model, plan, jax.random.PRNGKey(args.seed), mesh=mesh, axes=axes)
     if args.pin_l2:
+        warn_pin_l2_limits()  # one-time: specs carry no memory kinds yet
         state = pin_l2_to_host(state, mesh)
 
     replanner = None

@@ -70,6 +70,7 @@ def plan_delta(old: PicassoPlan, new: PicassoPlan) -> Dict[int, str]:
         h2o, h2n = old.l2_rows.get(g.gid, 0), new.l2_rows.get(g.gid, 0)
         so = old.strategy.get(g.gid, "picasso")
         sn = new.strategy.get(g.gid, "picasso")
+        ndo, ndn = old.narrow_width(g.gid), new.narrow_width(g.gid)
         parts = []
         if so != sn:
             parts.append(f"{so}->{sn}")
@@ -77,6 +78,10 @@ def plan_delta(old: PicassoPlan, new: PicassoPlan) -> Dict[int, str]:
             parts.append(f"L1 {h1o}->{h1n}")
         if h2o != h2n:
             parts.append(f"L2 {h2o}->{h2n}")
+        if ndo != ndn:
+            # master width changed: migration re-masters the group (narrow
+            # rows re-widened through the projection, or wide rows narrowed)
+            parts.append(f"narrow {ndo}->{ndn}")
         if parts:
             changed[g.gid] = " ".join(parts)
     return changed
@@ -97,13 +102,14 @@ def plan_meta(plan: PicassoPlan) -> Dict[str, Any]:
         "cache_rows": {str(gid): int(r) for gid, r in plan.cache_rows.items()},
         "l2_rows": {str(gid): int(r) for gid, r in plan.l2_rows.items()},
         "strategy": {str(gid): name for gid, name in plan.strategy.items()},
+        "narrow_dim": {str(gid): int(d) for gid, d in plan.narrow_dim.items()},
     }
 
 
 def apply_plan_meta(plan: PicassoPlan, meta: Mapping[str, Any]) -> PicassoPlan:
     """Revise a freshly-compiled structural ``plan`` back to a checkpointed
-    revision: tier budgets and strategy come from ``meta``, everything
-    structural from ``plan``. Call *before* building the state template so
+    revision: tier budgets, strategy, and narrow master widths come from
+    ``meta``, everything structural from ``plan``. Call *before* building the state template so
     restore sees the tier shapes the checkpoint was written with."""
     gids = {g.gid for g in plan.groups}
     meta_gids = {int(k) for k in meta.get("cache_rows", {})}
@@ -123,6 +129,8 @@ def apply_plan_meta(plan: PicassoPlan, meta: Mapping[str, Any]) -> PicassoPlan:
         hot_bytes=int(meta.get("hot_bytes", plan.hot_bytes)),
         l2_bytes=int(meta.get("l2_bytes", plan.l2_bytes)),
         strategy={int(k): v for k, v in meta.get("strategy", {}).items()},
+        narrow_dim=({int(k): int(v) for k, v in meta["narrow_dim"].items()}
+                    if "narrow_dim" in meta else dict(plan.narrow_dim)),
     )
 
 

@@ -32,6 +32,9 @@ Strategies (paper §II-C / §IV baselines) are selected per packed group via
   'picasso_l2' — picasso plus an L2 host-memory cache tier behind the hot
       tier (requires a plan built with ``l2_bytes > 0``; emits per-tier
       ``cache_hits/l1`` / ``cache_hits/l2`` counters);
+  'picasso_narrow' — picasso_l2 with frequency-adaptive widths: hot ids
+      full-width in the tiers, the cold master narrow (requires a plan
+      built with ``narrow_dim``; cold rows are projected up at lookup);
   'hybrid'  — MP all_to_all per group but no HybridHash tier;
   'ps'      — PS-style all_gather+psum lookups (the fragmentary baseline);
   'mixed'/'auto' — per-group assignment from the plan (or compiled by the

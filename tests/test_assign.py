@@ -9,8 +9,8 @@ import pytest
 
 from repro.configs.base import FeatureField, InteractionSpec, WDLConfig
 from repro.core.assign import (AUTO_NAMES, StrategyAssignment, apply_assignment,
-                               compile_assignment, estimate_skew,
-                               resolve_assignment)
+                               compile_assignment, estimate_narrow_gain,
+                               estimate_skew, resolve_assignment)
 from repro.core.packing import make_plan
 
 
@@ -96,6 +96,29 @@ def test_overrides_fail_fast():
 
 
 # ---------------------------------------------------------- normalization
+def test_cost_model_routes_cold_heavy_group_to_narrow():
+    """A big group with a skewed head but a dominant cold tail goes to
+    picasso_narrow when the plan records a narrow budget — and only then."""
+    fields = [FeatureField("big", 200_000, 16, max_len=1, pooling="sum")]
+    kw = dict(world=1, per_device_batch=64, hot_bytes=1 << 13,
+              l2_bytes=1 << 14)
+    plan = make_plan(_cfg(fields), narrow_dim=4, **kw)
+    gid = plan.groups[0].gid
+    g = plan.group(gid)
+    # zipf head (caches well) + a long cold tail (dominates lookups)
+    counts = np.maximum(
+        (1e5 / np.arange(1, g.rows + 1) ** 0.7).astype(np.int32), 1)
+    gain = estimate_narrow_gain(g, plan.cache_rows[gid], plan.l2_rows[gid],
+                                counts=counts, ranked=True)
+    assert gain > 0.5  # the tail really is most of the traffic
+    asg = compile_assignment(plan, stats={gid: counts})
+    assert asg.strategy[gid] == "picasso_narrow"
+    # same traffic, no narrow budget recorded -> the candidate is not offered
+    base = compile_assignment(make_plan(_cfg(fields), **kw),
+                              stats={gid: counts})
+    assert base.strategy[gid] != "picasso_narrow"
+
+
 def test_resolve_broadcast_and_auto():
     plan = _mixed_plan()
     gids = {g.gid for g in plan.groups}

@@ -1,0 +1,313 @@
+"""Frequency-adaptive embedding dims (the 'picasso_narrow' hot/cold split).
+
+Pins the contracts of the narrow master:
+
+1. degenerate parity — ``narrow_dim == dim`` records no narrowing, and a
+   'picasso_narrow' run is bitwise-identical to 'picasso_l2' on the same
+   plan (same state pytree, same flush, same tier gating);
+2. the narrow master actually narrows ([rows, d] + a learned orthonormal
+   [d, D] projection) and still learns, with projection gradients flowing;
+3. migration tier transitions: no-change pass-through returns the same
+   arrays; a forced tier resize on a narrow group preserves the FCounter,
+   the adagrad slots, and the learned projection exactly; a full
+   wide -> narrow -> wide round trip re-widens tier-resident rows exactly
+   (they travel full-width in the tiers) and keeps FCounter/adagrad intact;
+4. the revision plumbing: ``plan_delta`` reports narrow-width changes,
+   ``plan_meta``/``apply_plan_meta`` round-trip the narrow budget, and an
+   engine driving a narrowed group with any other strategy fails fast.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.assign import apply_assignment, resolve_assignment
+from repro.core.packing import make_plan, plan_narrow, revise_plan
+from repro.data.synthetic import batch_stream
+from repro.dist.sharding import batch_specs, to_named
+from repro.embedding.state import migrate_state
+from repro.engine import EmbeddingEngine
+from repro.models.wdl import WDLModel
+from repro.runtime import apply_plan_meta, plan_delta, plan_meta
+from repro.train.train_step import TrainConfig, init_state, make_train_step
+
+GB = 64
+ND = 4
+PLAN_KW = dict(hot_bytes=1 << 14, l2_bytes=1 << 16, flush_iters=5,
+               warmup_iters=2)
+
+
+def _put(mesh, axes, batch):
+    return jax.device_put(batch, to_named(mesh, batch_specs(batch, axes)))
+
+
+def _setup(mesh1, axes, strategy="picasso_narrow", narrow_dim=ND, **plan_kw):
+    cfg = get_config("deepfm", smoke=True)
+    kw = dict(PLAN_KW)
+    kw.update(plan_kw)
+    plan = make_plan(cfg, world=1, per_device_batch=GB, narrow_dim=narrow_dim,
+                     **kw)
+    # record the broadcast before init_state: narrow master widths gate on
+    # the plan's strategy assignment (the launchers do the same)
+    apply_assignment(plan, resolve_assignment(plan, strategy))
+    model = WDLModel(cfg, plan)
+    state = init_state(model, plan, jax.random.PRNGKey(0), mesh=mesh1, axes=axes)
+    step, _ = make_train_step(model, plan, mesh1, axes, GB,
+                              TrainConfig(strategy=strategy))
+    return cfg, plan, model, state, step
+
+
+def _train(state, step, mesh1, axes, cfg, n, seed=3):
+    stream = batch_stream(cfg, GB, seed=seed)
+    for _ in range(n):
+        state, m = step(state, _put(mesh1, axes, next(stream)))
+    return state
+
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ------------------------------------------------------------------- plan
+
+
+def test_plan_narrow_clamps_per_group():
+    cfg = get_config("deepfm", smoke=True)
+    plan = make_plan(cfg, world=1, per_device_batch=GB)
+    dims = {g.gid: g.dim for g in plan.groups}
+    # 0 / >= dim -> full dim (recorded as "no narrowing")
+    assert plan_narrow(plan.groups, 0) == dims
+    assert plan_narrow(plan.groups, max(dims.values())) == dims
+    # a small request rounds to the min_dim quantum with a floor
+    w = plan_narrow(plan.groups, 1)
+    assert all(0 < v <= dims[g] and v % 4 == 0 for g, v in w.items()
+               if v < dims[g])
+
+
+def test_narrow_width_gates_on_strategy():
+    cfg = get_config("deepfm", smoke=True)
+    plan = make_plan(cfg, world=1, per_device_batch=GB, narrow_dim=ND)
+    gid = plan.groups[0].gid
+    dim = plan.group(gid).dim
+    # budget recorded but no picasso_narrow assignment -> full width
+    assert plan.narrow_dim[gid] == ND
+    assert plan.narrow_width(gid) == dim
+    apply_assignment(plan, resolve_assignment(plan, "picasso_narrow"))
+    assert plan.narrow_width(gid) == ND
+    # revise_plan carries the budget (strategy resets, so width gates off
+    # again until the new revision's assignment is recorded)
+    new = revise_plan(plan)
+    assert new.narrow_dim == plan.narrow_dim
+    assert new.narrow_width(gid) == dim
+
+
+# ------------------------------------------- degenerate parity (nd == dim)
+
+
+def test_full_width_narrow_is_bitwise_picasso_l2(mesh1, axes):
+    """narrow_dim == dim records no narrowing: the picasso_narrow run is
+    bitwise-identical to picasso_l2 on the same plan — same state pytree
+    (no projection leaf), same lookup, same flush."""
+    cfg, plan_a, _, state_a, step_a = _setup(mesh1, axes,
+                                             strategy="picasso_l2",
+                                             narrow_dim=None)
+    dim = plan_a.groups[0].dim
+    cfg, plan_b, _, state_b, step_b = _setup(mesh1, axes,
+                                             strategy="picasso_narrow",
+                                             narrow_dim=dim)
+    assert all(plan_b.narrow_width(g.gid) == g.dim for g in plan_b.groups)
+    assert all(st.proj is None for st in state_b["emb"].values())
+    _leaves_equal(state_a, state_b)
+    # through a flush boundary (flush_iters=5) and beyond
+    state_a = _train(state_a, step_a, mesh1, axes, cfg, 7)
+    state_b = _train(state_b, step_b, mesh1, axes, cfg, 7)
+    _leaves_equal(state_a, state_b)
+
+
+# ------------------------------------------------------ the narrow master
+
+
+def test_narrow_master_shapes_and_learning(mesh1, axes):
+    cfg, plan, _, state, step = _setup(mesh1, axes)
+    gid = plan.groups[0].gid
+    g = plan.group(gid)
+    st = state["emb"][str(gid)]
+    assert st.w.shape == (g.rows, ND)
+    assert st.proj is not None and st.proj.kernel.shape == (ND, g.dim)
+    # deterministic orthonormal-row init: P @ P^T == I (so the pseudo-inverse
+    # used at re-widen time starts as the exact transpose)
+    k = np.asarray(st.proj.kernel)
+    np.testing.assert_allclose(k @ k.T, np.eye(ND), atol=1e-5)
+    # tiers stay full-width: hot rows are exact wide rows
+    assert st.cache.rows.shape[1] == g.dim
+    k0 = np.array(k)
+    state = _train(state, step, mesh1, axes, cfg, 7)
+    st = state["emb"][str(gid)]
+    # projection gradient flowed (learned through the routed wire)
+    assert not np.array_equal(np.asarray(st.proj.kernel), k0)
+    assert np.isfinite(np.asarray(st.w)).all()
+    # the flush at step 5 warmed the tier from the live FCounter
+    assert np.asarray(st.counts).sum() > 0
+
+
+# -------------------------------------------------------------- migration
+
+
+def test_migrate_passthrough_identity_narrow(mesh1, axes):
+    """A no-change revision of a narrow plan passes every array through
+    untouched (same objects — projection included)."""
+    cfg, plan, _, state, step = _setup(mesh1, axes)
+    state = _train(state, step, mesh1, axes, cfg, 6)
+    new = revise_plan(plan)
+    new.cache_rows, new.l2_rows = dict(plan.cache_rows), dict(plan.l2_rows)
+    apply_assignment(new, resolve_assignment(new, "picasso_narrow"))
+    assert not plan_delta(plan, new)
+    out = migrate_state(plan, new, state)
+    for k, st in state["emb"].items():
+        assert out["emb"][k] is st
+
+
+def test_forced_narrow_resize_preserves_fcounter_adagrad_and_proj(mesh1, axes):
+    """Shrinking both tiers under a narrow group: the FCounter and the
+    learned projection survive bitwise, adagrad slots survive exactly (tier
+    slots via write-back, the rest untouched), and master rows outside the
+    old tiers are not perturbed."""
+    cfg, plan, _, state, step = _setup(mesh1, axes)
+    state = _train(state, step, mesh1, axes, cfg, 9)
+    gid = plan.groups[0].gid
+    g = plan.group(gid)
+    st = state["emb"][str(gid)]
+    counts = np.asarray(jax.device_get(st.counts))
+    kern = np.asarray(jax.device_get(st.proj.kernel))
+    pacc = np.asarray(jax.device_get(st.proj.acc))
+    w_old = np.asarray(jax.device_get(st.w))
+    acc_exp = np.array(jax.device_get(st.acc))
+    tier_keys = []
+    for tier in (st.cache, st.l2):
+        keys = np.asarray(jax.device_get(tier.keys))
+        mine = keys < g.rows
+        acc_exp[keys[mine]] = np.asarray(jax.device_get(tier.acc))[mine]
+        tier_keys.append(keys[mine])
+    in_tier = np.zeros(g.rows, bool)
+    in_tier[np.concatenate(tier_keys)] = True
+
+    new = revise_plan(plan, hot_bytes=1 << 10, l2_bytes=1 << 15)
+    apply_assignment(new, resolve_assignment(new, "picasso_narrow"))
+    assert plan_delta(plan, new)
+    out = migrate_state(plan, new, state)
+    mg = out["emb"][str(gid)]
+    assert mg.w.shape == (g.rows, ND)
+    np.testing.assert_array_equal(np.asarray(mg.counts), counts)
+    np.testing.assert_array_equal(np.asarray(mg.proj.kernel), kern)
+    np.testing.assert_array_equal(np.asarray(mg.proj.acc), pacc)
+    np.testing.assert_array_equal(np.asarray(mg.acc), acc_exp)
+    # same-width re-master: rows the tiers never shadowed pass through
+    np.testing.assert_array_equal(np.asarray(mg.w)[~in_tier], w_old[~in_tier])
+    # resized tiers stay full-width and disjoint
+    h1, h2 = new.cache_rows[gid], new.l2_rows[gid]
+    k1 = np.asarray(mg.cache.keys)
+    k2 = np.asarray(mg.l2.keys)
+    assert k1.shape[0] == h1 and k2.shape[0] == h2
+    assert mg.cache.rows.shape[1] == g.dim
+    assert not set(k1[k1 < g.rows]) & set(k2[k2 < g.rows])
+
+
+def test_wide_narrow_wide_round_trip(mesh1, axes):
+    """Strategy-driven width transitions across revisions: a wide group is
+    narrowed (rows projected down through the fresh deterministic kernel)
+    and re-widened (projected back up); tier-resident ids travel full-width
+    in the tiers and come back exactly; FCounter and adagrad survive the
+    whole trip."""
+    cfg, plan, _, state, step = _setup(mesh1, axes, strategy="picasso_l2")
+    gid = plan.groups[0].gid
+    g = plan.group(gid)
+    # the budget is recorded but gated off under picasso_l2
+    assert state["emb"][str(gid)].w.shape == (g.rows, g.dim)
+    assert state["emb"][str(gid)].proj is None
+    state = _train(state, step, mesh1, axes, cfg, 7)
+    st = state["emb"][str(gid)]
+    counts = np.asarray(jax.device_get(st.counts))
+    acc_exp = np.array(jax.device_get(st.acc))
+    w_exp = np.array(jax.device_get(st.w))
+    for tier in (st.cache, st.l2):
+        keys = np.asarray(jax.device_get(tier.keys))
+        mine = keys < g.rows
+        w_exp[keys[mine]] = np.asarray(jax.device_get(tier.rows))[mine]
+        acc_exp[keys[mine]] = np.asarray(jax.device_get(tier.acc))[mine]
+    live1 = np.asarray(jax.device_get(st.cache.keys))
+    live1 = live1[live1 < g.rows]
+
+    # ---- narrow: rev 1 assigns picasso_narrow ----------------------------
+    p2 = revise_plan(plan)
+    p2.cache_rows, p2.l2_rows = dict(plan.cache_rows), dict(plan.l2_rows)
+    apply_assignment(p2, resolve_assignment(p2, "picasso_narrow"))
+    delta = plan_delta(plan, p2)
+    assert f"narrow {g.dim}->{ND}" in delta[gid]
+    s2 = migrate_state(plan, p2, state)
+    st2 = s2["emb"][str(gid)]
+    assert st2.w.shape == (g.rows, ND) and st2.proj is not None
+    np.testing.assert_array_equal(np.asarray(st2.counts), counts)
+    np.testing.assert_array_equal(np.asarray(st2.acc), acc_exp)
+    # tiers hold the exact wide rows for the ids they kept
+    k1 = np.asarray(st2.cache.keys)
+    np.testing.assert_array_equal(
+        np.asarray(st2.cache.rows)[k1 < g.rows], w_exp[k1[k1 < g.rows]])
+    k2 = np.asarray(st2.l2.keys)
+    tier2 = np.concatenate([k1[k1 < g.rows], k2[k2 < g.rows]])
+    # rev-0 hot ids that stayed tier-resident through the narrow revision
+    survivors = np.intersect1d(live1, tier2)
+    assert survivors.size  # the head of the skew does stay resident
+
+    # ---- widen back: rev 2 returns to picasso_l2 -------------------------
+    p3 = revise_plan(p2)
+    p3.cache_rows, p3.l2_rows = dict(p2.cache_rows), dict(p2.l2_rows)
+    apply_assignment(p3, resolve_assignment(p3, "picasso_l2"))
+    assert f"narrow {ND}->{g.dim}" in plan_delta(p2, p3)[gid]
+    s3 = migrate_state(p2, p3, s2)
+    st3 = s3["emb"][str(gid)]
+    assert st3.w.shape == (g.rows, g.dim) and st3.proj is None
+    np.testing.assert_array_equal(np.asarray(st3.counts), counts)
+    np.testing.assert_array_equal(np.asarray(st3.acc), acc_exp)
+    assert np.isfinite(np.asarray(st3.w)).all()
+    # ids that stayed tier-resident across both hops round-trip exactly:
+    # the tiers carried their full-width rows, no projection loss
+    np.testing.assert_array_equal(np.asarray(st3.w)[survivors],
+                                  w_exp[survivors])
+
+
+# ------------------------------------------------------- revision plumbing
+
+
+def test_plan_meta_roundtrips_narrow_dim():
+    cfg = get_config("deepfm", smoke=True)
+    plan = make_plan(cfg, world=1, per_device_batch=GB, narrow_dim=ND,
+                     **PLAN_KW)
+    apply_assignment(plan, resolve_assignment(plan, "picasso_narrow"))
+    meta = json.loads(json.dumps(plan_meta(plan)))  # survives JSON
+    seed = make_plan(cfg, world=1, per_device_batch=GB, **PLAN_KW)
+    gid = plan.groups[0].gid
+    assert seed.narrow_width(gid) == plan.group(gid).dim
+    planR = apply_plan_meta(seed, meta)
+    assert planR.narrow_dim == plan.narrow_dim
+    assert planR.strategy == plan.strategy
+    assert planR.narrow_width(gid) == ND
+    # legacy meta without the key keeps the structural plan's budget
+    legacy = {k: v for k, v in meta.items() if k != "narrow_dim"}
+    planL = apply_plan_meta(make_plan(cfg, world=1, per_device_batch=GB,
+                                      narrow_dim=ND, **PLAN_KW), legacy)
+    assert planL.narrow_dim == plan.narrow_dim
+
+
+def test_engine_rejects_non_narrow_assignment_on_narrow_plan(mesh1, axes):
+    cfg = get_config("deepfm", smoke=True)
+    plan = make_plan(cfg, world=1, per_device_batch=GB, narrow_dim=ND,
+                     **PLAN_KW)
+    apply_assignment(plan, resolve_assignment(plan, "picasso_narrow"))
+    with pytest.raises(ValueError, match="picasso_narrow"):
+        EmbeddingEngine(plan, ("data", "model"), 1,
+                        strategy={g.gid: "picasso" for g in plan.groups})
