@@ -17,6 +17,10 @@ the tiers, the cold master stored at d = D // 4 and up-projected through a
 learned [d, D] kernel at lookup) and 'narrow_vs_full' (the derived per-group
 vparam-bytes reduction: narrow master + projection vs the full master).
 
+PR8 row: 'reshard_8to4' — the elastic-reshard stall (host-side world=8 state
+permuted onto world=4 row cuts and re-placed), reported as rows/sec migrated
+plus the stall walltime a live ``--reshard-to`` pays mid-run.
+
 ``--smoke`` runs one model at a reduced batch with fewer timing iters — the
 fast CI pass wired into scripts/ci.sh (and the only place the auto-assignment
 and two-tier cache paths are executed on every CI run)."""
@@ -27,7 +31,8 @@ from repro.configs.paper_models import din, dlrm
 from repro.core.packing import make_plan, plan_narrow
 from repro.train.train_step import TrainConfig
 
-from benchmarks.common import bench_replan_ips, bench_train_ips, emit
+from benchmarks.common import (bench_replan_ips, bench_reshard,
+                               bench_train_ips, emit)
 
 GB = 128
 
@@ -150,6 +155,12 @@ def run(smoke: bool = False):
         emit(f"throughput/{name}/allgather_rows", agr["us_per_call"],
              f"ips={agr['ips']:.0f}")
         emit(f"throughput/{name}/speedup", 0.0, f"x{speedup:.2f}")
+        # elastic-reshard cost: world=8 state permuted to world=4 row cuts
+        # (the stall a live --reshard-to pays before training resumes)
+        rsh = bench_reshard(cfg, gb, world_from=8, world_to=4,
+                            l2_bytes=1 << 17)
+        emit(f"throughput/{name}/reshard_8to4", rsh["us_per_call"],
+             f"rows_per_s={rsh['rows_per_s']:.0f},stall_ms={rsh['stall_ms']:.1f}")
         if not smoke:
             # paper §II-C intermediate baseline: MP routing, but neither
             # D-Packing nor the HybridHash tier

@@ -133,10 +133,39 @@ def bench_replan_ips(cfg: WDLConfig, gb: int, iters: int = 5,
             "migrated": migrated, "rev": int(plan.rev)}
 
 
+def bench_reshard(cfg: WDLConfig, gb: int, world_from: int = 8,
+                  world_to: int = 4, **plan_kw) -> Dict[str, float]:
+    """The elastic-reshard cost row: how long a W -> W' migration stalls
+    training. State is built host-side at ``world_from`` row cuts (the same
+    arrays an elastic restore hands the permutation), the plan is recut to
+    ``world_to``, and the stall is the pure row permutation
+    (``reshard_state``) plus re-placement under the new plan's specs —
+    exactly the two steps ``runtime.reshard_live`` pays mid-run."""
+    from repro.core.packing import reshard_plan
+    from repro.embedding.state import reshard_state
+    from repro.runtime import place_state
+
+    plan_kw.setdefault("hot_bytes", 1 << 16)
+    plan_kw.setdefault("l2_bytes", 1 << 17)
+    plan = make_plan(cfg, world=world_from,
+                     per_device_batch=max(1, gb // world_from), **plan_kw)
+    model = WDLModel(cfg, plan)
+    state = init_state(model, plan, jax.random.PRNGKey(0))  # host-side rows
+    new_plan = reshard_plan(plan, world_to, max(1, gb // world_to))
+    t0 = time.perf_counter()
+    migrated = reshard_state(new_plan, state)
+    placed = place_state(migrated, new_plan, mesh1(), AXES)
+    jax.block_until_ready(placed)
+    stall = time.perf_counter() - t0
+    rows = sum(g.rows for g in new_plan.groups)
+    return {"us_per_call": stall * 1e6, "stall_ms": stall * 1e3,
+            "rows": rows, "rows_per_s": rows / stall}
+
+
 # every emit() lands here too, so drivers can persist the run as one JSON
 # artifact (the repo-root perf trajectory: BENCH_<pr>.json)
 _ROWS: List[Dict[str, Any]] = []
-BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_7.json"
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_8.json"
 
 
 def emit(name: str, us: float, derived: str) -> None:
@@ -167,9 +196,10 @@ def write_bench_json(path: Optional[pathlib.Path] = None) -> pathlib.Path:
     fresh = {r["name"] for r in _ROWS}
     rows = [r for r in rows if r["name"] not in fresh] + _ROWS
     payload = {
-        "bench": ("PR7: frequency-adaptive embedding dims (picasso_narrow "
-                  "hot/cold split, fused gather_project) on top of the PR6 "
-                  "interleaved step"),
+        "bench": ("PR8: elastic resharding across world-size changes "
+                  "(reshard_plan/reshard_state pure permutation, live "
+                  "--reshard-to, streaming driver with publish/pickup) on "
+                  "top of the PR7 frequency-adaptive dims"),
         "rows": rows,
     }
     path.write_text(json.dumps(payload, indent=1) + "\n")

@@ -57,26 +57,34 @@ echo "$bench_out" | grep -q "/picasso_narrow" \
     || { echo "ci.sh: bench smoke missing the 'picasso_narrow' row" >&2; exit 1; }
 echo "$bench_out" | grep -q "/narrow_vs_full.*vparam_bytes x" \
     || { echo "ci.sh: bench smoke missing the 'narrow_vs_full' row" >&2; exit 1; }
-test -f BENCH_7.json \
-    || { echo "ci.sh: bench smoke did not write BENCH_7.json" >&2; exit 1; }
-grep -q "picasso+fused" BENCH_7.json \
-    || { echo "ci.sh: BENCH_7.json has no fused-vs-reference rows" >&2; exit 1; }
-grep -q "overlap=on" BENCH_7.json \
-    || { echo "ci.sh: BENCH_7.json missing the overlap rows" >&2; exit 1; }
-grep -q "grad_compress" BENCH_7.json \
-    || { echo "ci.sh: BENCH_7.json missing the grad_compress rows" >&2; exit 1; }
+# the elastic-reshard cost row (rows/sec migrated + stall walltime of the
+# world=8 -> world=4 permutation) must be timed on every CI run
+echo "$bench_out" | grep -q "/reshard_8to4.*rows_per_s=.*stall_ms=" \
+    || { echo "ci.sh: bench smoke missing the 'reshard_8to4' row" >&2; exit 1; }
+test -f BENCH_8.json \
+    || { echo "ci.sh: bench smoke did not write BENCH_8.json" >&2; exit 1; }
+grep -q "picasso+fused" BENCH_8.json \
+    || { echo "ci.sh: BENCH_8.json has no fused-vs-reference rows" >&2; exit 1; }
+grep -q "overlap=on" BENCH_8.json \
+    || { echo "ci.sh: BENCH_8.json missing the overlap rows" >&2; exit 1; }
+grep -q "grad_compress" BENCH_8.json \
+    || { echo "ci.sh: BENCH_8.json missing the grad_compress rows" >&2; exit 1; }
 # narrow rows land in the artifact, every row stamped with the backend and
 # the interpret flag (interpreter timings must never read as silicon), and
 # the derived vparam-bytes reduction clears 2x
 python - <<'PY'
 import json
-rows = {r["name"]: r for r in json.load(open("BENCH_7.json"))["rows"]}
+rows = {r["name"]: r for r in json.load(open("BENCH_8.json"))["rows"]}
 nar = [r for n, r in rows.items() if "/picasso_narrow" in n]
-assert nar, "BENCH_7.json missing the picasso_narrow rows"
+assert nar, "BENCH_8.json missing the picasso_narrow rows"
 assert all("backend" in r and "interpret" in r for r in rows.values()), \
-    "BENCH_7.json rows missing backend/interpret stamps"
+    "BENCH_8.json rows missing backend/interpret stamps"
 nvf = [r for n, r in rows.items() if "/narrow_vs_full" in n]
-assert nvf, "BENCH_7.json missing the narrow_vs_full rows"
+assert nvf, "BENCH_8.json missing the narrow_vs_full rows"
+rsh = [r for n, r in rows.items() if "/reshard_8to4" in n]
+assert rsh, "BENCH_8.json missing the reshard_8to4 rows"
+assert all("rows_per_s=" in r["derived"] and "stall_ms=" in r["derived"]
+           for r in rsh), "reshard rows missing rows_per_s/stall_ms"
 for r in nvf:
     x = float(r["derived"].split("x")[1].split(",")[0])
     assert x >= 2.0, f"narrow master reduction below 2x: {r['derived']}"
@@ -86,10 +94,10 @@ PY
 # isolated fused-vs-reference microbench rows (gather+pool / dedup+adagrad /
 # gather+project / tier probe) merge into the same artifact
 python -m benchmarks.bench_kernels --smoke
-grep -q "kernels/gather_pool" BENCH_7.json \
-    || { echo "ci.sh: BENCH_7.json missing the kernel microbench rows" >&2; exit 1; }
-grep -q "kernels/gather_project" BENCH_7.json \
-    || { echo "ci.sh: BENCH_7.json missing the gather_project rows" >&2; exit 1; }
+grep -q "kernels/gather_pool" BENCH_8.json \
+    || { echo "ci.sh: BENCH_8.json missing the kernel microbench rows" >&2; exit 1; }
+grep -q "kernels/gather_project" BENCH_8.json \
+    || { echo "ci.sh: BENCH_8.json missing the gather_project rows" >&2; exit 1; }
 
 echo "== tier-1: fused-kernel interpret soak =="
 # every Pallas kernel (sparse + interaction) forced through the interpreter
@@ -165,6 +173,54 @@ assert last < first * 0.95, \
     f"loss did not decrease under overlap+fp16: {first:.4f} -> {last:.4f}"
 print(f"overlap smoke: loss {first:.4f} -> {last:.4f} (overlap=on, fp16 wire)")
 PY
+
+echo "== tier-1: elastic reshard smoke =="
+# live world-size change mid-run: train on 8 host devices (4x2), reshard to
+# 4 (2x2) at step 30 — the run must log the reshard event and keep learning
+# across it (same loss-decrease criterion as the replan smoke)
+elastic_out=$(python -m repro.launch.train --arch deepfm --smoke --steps 120 \
+    --global-batch 128 --devices 8 --mesh 4x2 --reshard-to 2x2 --reshard-at 60 \
+    --strategy picasso_l2 --l2-budget 65536 --learnable \
+    --lr-emb 0.1 --lr-dense 3e-3 --log-every 1)
+echo "$elastic_out" | grep -v "^  step" >&2
+echo "$elastic_out" | grep -q "reshard world 8 -> 4" \
+    || { echo "ci.sh: elastic smoke never resharded (no 'reshard world' event)" >&2; exit 1; }
+ELASTIC_OUT="$elastic_out" python - <<'PY'
+import os, re, statistics as st
+losses = [float(m) for m in re.findall(r"loss=([0-9.]+)", os.environ["ELASTIC_OUT"])]
+assert len(losses) >= 60, f"too few logged losses: {len(losses)}"
+first, last = st.median(losses[:10]), st.median(losses[-20:])
+assert last < first * 0.95, \
+    f"loss did not decrease across the reshard: {first:.4f} -> {last:.4f}"
+print(f"elastic smoke: loss {first:.4f} -> {last:.4f} across a live 8->4 reshard")
+PY
+
+echo "== tier-1: streaming driver smoke =="
+# the unbounded-stream driver: consume the batch stream in segments,
+# checkpoint + publish at every boundary, and apply the pending reshard
+# in place at a segment boundary — no restart
+stream_dir=$(mktemp -d)
+stream_out=$(python -m repro.launch.train --arch deepfm --smoke \
+    --global-batch 64 --devices 8 --mesh 4x2 --stream --segment-steps 15 \
+    --stream-segments 3 --publish-dir "$stream_dir/pub" \
+    --ckpt-dir "$stream_dir/ckpt" --reshard-to 2x2 --reshard-at 15 \
+    --learnable --lr-emb 0.1 --lr-dense 3e-3 --log-every 10)
+echo "$stream_out" >&2
+echo "$stream_out" | grep -q "\[stream\] segment 3/3" \
+    || { echo "ci.sh: streaming smoke did not complete 3 segments" >&2; exit 1; }
+echo "$stream_out" | grep -q "reshard world 8 -> 4" \
+    || { echo "ci.sh: streaming smoke never resharded in place" >&2; exit 1; }
+echo "$stream_out" | grep -q "stream done at step 45 (world=4)" \
+    || { echo "ci.sh: streaming smoke did not finish at the resharded world" >&2; exit 1; }
+test -f "$stream_dir/pub/LATEST" \
+    || { echo "ci.sh: streaming smoke published no LATEST pointer" >&2; exit 1; }
+# a serve process picks the published delta up (cross-world: server at 1x2)
+serve_out=$(python -m repro.launch.serve --arch deepfm --smoke --batch 64 \
+    --devices 2 --mesh 1x2 --n-requests 3 --reload-dir "$stream_dir/pub")
+echo "$serve_out" >&2
+echo "$serve_out" | grep -q "reloaded published step 45" \
+    || { echo "ci.sh: serve never picked up the published delta" >&2; exit 1; }
+rm -rf "$stream_dir"
 
 echo "== tier-1: docs sync =="
 # every registry strategy must be documented in README.md +

@@ -102,6 +102,13 @@ class PicassoPlan:
     # 'picasso_narrow' (see ``narrow_width``) — the budget can be planned
     # ahead for every group and only bites where the assignment routes.
     narrow_dim: Dict[int, int] = field(default_factory=dict)
+    # Device-mesh shape the plan was compiled for, e.g. (4, 2) for 8 shards
+    # on a data=4 x model=2 mesh. Empty = unrecorded (pre-elastic plans and
+    # host-only tests). ``plan_meta`` persists it into the checkpoint sidecar
+    # so a restore at a different world size is *detected* and routed through
+    # ``reshard_plan`` + ``embedding.state.reshard_state`` instead of
+    # shape-erroring against stale templates.
+    mesh_shape: Tuple[int, ...] = ()
     _by_gid: Dict[int, PackedGroup] = field(init=False, repr=False)
 
     def __post_init__(self):
@@ -443,7 +450,12 @@ def make_plan(
     flush_iters: int = 100,
     warmup_iters: int = 100,
     mem_budget_bytes: float = 8 * 2**30,
+    mesh_shape: Optional[Sequence[int]] = None,
 ) -> PicassoPlan:
+    if mesh_shape is not None and int(np.prod(mesh_shape)) != world:
+        raise ValueError(
+            f"mesh_shape {tuple(mesh_shape)} has {int(np.prod(mesh_shape))} "
+            f"devices but world={world}")
     groups = plan_packing(cfg, world, freq_share=freq_share, enable_packing=enable_packing)
     cache_rows = plan_cache(groups, hot_bytes, world) if enable_cache else {g.gid: 0 for g in groups}
     l2_rows = plan_l2(groups, l2_bytes if enable_cache else 0, cache_rows)
@@ -470,6 +482,7 @@ def make_plan(
         l2_bytes=l2_bytes if enable_cache else 0,
         narrow_dim=(plan_narrow(groups, narrow_dim)
                     if narrow_dim is not None else {}),
+        mesh_shape=tuple(int(x) for x in mesh_shape) if mesh_shape else (),
     )
 
 
@@ -524,4 +537,77 @@ def revise_plan(
         hot_bytes=hb,
         l2_bytes=lb,
         strategy={},  # deliberately unassigned: callers re-compile vs stats
+    )
+
+
+def reshard_plan(
+    plan: PicassoPlan,
+    new_world: int,
+    per_device_batch: int,
+    *,
+    mesh_shape: Optional[Sequence[int]] = None,
+    capacity_slack: float = 2.0,
+    exact_capacity: bool = False,
+) -> PicassoPlan:
+    """Recut the SAME plan revision for a different world size.
+
+    Unlike ``revise_plan`` (tier re-budget within one mesh), a reshard is a
+    pure permutation of the existing state: every revisable decision —
+    ``cache_rows``/``l2_rows`` budgets, the strategy mix, narrow widths,
+    ``rev`` itself — is carried over verbatim, because the migrated state
+    must stay bitwise-identical row for row. What changes is only what
+    *derives from the mesh*:
+
+    - each group's padded ``rows`` is recut to the new world multiple
+      (``_pad_to(logical_rows, new_world)`` — logical rows, i.e. the packed
+      table vocabs, never change);
+    - per-peer all_to_all ``capacity`` is re-planned for the new shard count
+      (fewer peers => more uniques per peer);
+    - ``microbatch`` is clamped to a divisor of the new per-device batch
+      (a world change at fixed global batch changes the local batch);
+    - ``mesh_shape``/``world`` record the new mesh.
+
+    ``embedding.state.reshard_state`` performs the matching state-side
+    permutation (pad/truncate padding rows, remap tier sentinel keys).
+    """
+    new_world = int(new_world)
+    if new_world <= 0:
+        raise ValueError(f"new_world must be positive, got {new_world}")
+    if mesh_shape is not None and int(np.prod(mesh_shape)) != new_world:
+        raise ValueError(
+            f"mesh_shape {tuple(mesh_shape)} has {int(np.prod(mesh_shape))} "
+            f"devices but new_world={new_world}")
+    groups = []
+    for g in plan.groups:
+        logical = max(g.table_offsets[t.name] + t.vocab for t in g.tables)
+        groups.append(dataclasses.replace(g, rows=_pad_to(logical, new_world)))
+    capacity = {}
+    for g in groups:
+        local_ids = per_device_batch * g.ids_per_sample
+        hit = 0.2 if plan.cache_rows.get(g.gid, 0) else 0.0
+        capacity[g.gid] = plan_capacity(g, local_ids, new_world,
+                                        slack=capacity_slack,
+                                        cache_hit_ratio=hit,
+                                        exact=exact_capacity)
+    micro = max(1, min(int(plan.microbatch), int(per_device_batch)))
+    while per_device_batch % micro:
+        micro -= 1
+    if mesh_shape is not None:
+        shape = tuple(int(x) for x in mesh_shape)
+    elif plan.mesh_shape and int(np.prod(plan.mesh_shape)) == new_world:
+        shape = tuple(plan.mesh_shape)
+    else:
+        shape = ()
+    return dataclasses.replace(
+        plan,
+        groups=groups,
+        world=new_world,
+        capacity=capacity,
+        interleave=[list(w) for w in plan.interleave],
+        microbatch=micro,
+        cache_rows=dict(plan.cache_rows),
+        l2_rows=dict(plan.l2_rows),
+        strategy=dict(plan.strategy),
+        narrow_dim=dict(plan.narrow_dim),
+        mesh_shape=shape,
     )

@@ -47,3 +47,35 @@ def make_mesh_compat(shape: Sequence[int], axes: Sequence[str]):
         return jax.make_mesh(tuple(shape), tuple(axes),
                              axis_types=(axis_type.Auto,) * len(axes))
     return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def make_submesh_compat(shape: Sequence[int], axes: Sequence[str]):
+    """A mesh over the FIRST ``prod(shape)`` available devices.
+
+    ``jax.make_mesh`` insists on using every device in the process, so an
+    elastic scale-down (world 8 -> 4 within one process) needs the raw
+    ``jax.sharding.Mesh`` constructor over a device-array subset. When the
+    shape covers all devices this defers to ``make_mesh_compat`` (identical
+    mesh, best available axis types / device order heuristics).
+    """
+    import numpy as np
+
+    n = 1
+    for s in shape:
+        n *= int(s)
+    devs = jax.devices()
+    if n > len(devs):
+        raise ValueError(
+            f"mesh shape {tuple(shape)} needs {n} devices but only "
+            f"{len(devs)} are available")
+    if n == len(devs):
+        return make_mesh_compat(shape, axes)
+    arr = np.asarray(devs[:n]).reshape(tuple(int(s) for s in shape))
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.sharding.Mesh(
+                arr, tuple(axes), axis_types=(axis_type.Auto,) * len(axes))
+        except TypeError:  # older Mesh without axis_types
+            pass
+    return jax.sharding.Mesh(arr, tuple(axes))

@@ -381,14 +381,97 @@ def _migrate_group(group: PackedGroup, st: EmbeddingState,
                           l2=l2, proj=proj)
 
 
+def _reshard_group_state(group: PackedGroup, st: EmbeddingState
+                         ) -> EmbeddingState:
+    """Re-cut one group's state for a new padded row count (host numpy).
+
+    A world-size change re-pads the packed table (``rows = _pad_to(logical,
+    world)``) without touching the logical rows, so the migration is a pure
+    permutation plus padding surgery:
+
+    - master ``w``/``acc``/FCounter ``counts`` are zero-extended (scale-down
+      in world can mean MORE padding) or truncated — only ever padding rows,
+      which are never looked up; a nonzero FCounter in the truncated tail
+      would mean a real row is about to be dropped, so that raises;
+    - tier sentinel keys are remapped: an empty slot holds ``keys ==
+      rows_padded``, and every key >= ``min(r_old, r_new)`` is by
+      construction a sentinel (valid residents are logical rows, which fit
+      under both paddings), so they all move to the NEW sentinel value.
+      Resident keys, rows, and adagrad slots carry bitwise.
+    - the learned projection (narrow masters) is row-count-independent and
+      carries bitwise.
+    """
+    w = np.array(jax.device_get(st.w))
+    acc = np.array(jax.device_get(st.acc))
+    counts = np.array(jax.device_get(st.counts))
+    r_old, r_new = int(w.shape[0]), int(group.rows)
+    dtype = w.dtype
+    if r_new > r_old:
+        pad = r_new - r_old
+        w = np.concatenate([w, np.zeros((pad, w.shape[1]), dtype)])
+        acc = np.concatenate([acc, np.zeros((pad, 1), acc.dtype)])
+        counts = np.concatenate([counts, np.zeros((pad,), counts.dtype)])
+    elif r_new < r_old:
+        if np.asarray(counts[r_new:]).any():
+            raise ValueError(
+                f"g{group.gid}: resharding {r_old} -> {r_new} rows would "
+                "drop rows with nonzero FCounter mass — the truncated tail "
+                "must be pure padding")
+        w, acc, counts = w[:r_new], acc[:r_new], counts[:r_new]
+    cut = min(r_old, r_new)
+
+    def remap(tier: Optional[CacheState]) -> Optional[CacheState]:
+        if tier is None:
+            return None
+        keys = np.asarray(jax.device_get(tier.keys))
+        keys = np.where(keys >= cut, r_new, keys).astype(np.int32)
+        return CacheState(keys=keys,
+                          rows=np.asarray(jax.device_get(tier.rows)),
+                          acc=np.asarray(jax.device_get(tier.acc)))
+
+    proj = None
+    if st.proj is not None:
+        proj = ProjState(kernel=np.asarray(jax.device_get(st.proj.kernel)),
+                         acc=np.asarray(jax.device_get(st.proj.acc)))
+    return EmbeddingState(w=w, acc=acc, counts=counts,
+                          cache=remap(st.cache), l2=remap(st.l2), proj=proj)
+
+
+def reshard_state(new_plan: PicassoPlan, state: Any) -> Any:
+    """Re-cut live embedding state onto ``new_plan``'s padded row counts.
+
+    The state-side half of ``core.packing.reshard_plan``: per group, pad or
+    truncate the padding rows and remap tier sentinel keys
+    (``_reshard_group_state``); groups whose rows already match pass through
+    untouched. Accepts the full train/serve state dict (``{"emb": ...}``) or
+    the bare per-group emb dict. Returns host (numpy) arrays for resharded
+    groups — callers re-place the state under the new mesh's shardings
+    (``runtime.elastic.place_state``) before stepping.
+    """
+    if isinstance(state, dict) and "emb" in state:
+        return {**state, "emb": reshard_state(new_plan, state["emb"])}
+    out = {}
+    for g in new_plan.groups:
+        key = str(g.gid) if str(g.gid) in state else g.gid
+        st = state[key]
+        if int(np.shape(st.w)[0]) == g.rows:
+            out[key] = st
+        else:
+            out[key] = _reshard_group_state(g, st)
+    return out
+
+
 def migrate_state(old_plan: PicassoPlan, new_plan: PicassoPlan, state: Any, *,
                   use_cache: bool = True, use_l2: bool = True,
                   cache_update: str = "psum") -> Any:
     """Carry live embedding state from ``old_plan`` to ``new_plan``.
 
     The two plans must be revisions of one structural plan (same gids, same
-    packed rows/dims — ``revise_plan`` guarantees this); what may differ is
-    ``cache_rows``/``l2_rows`` and the per-group strategy assignment.
+    packed dims — ``revise_plan`` and ``reshard_plan`` guarantee this); what
+    may differ is ``cache_rows``/``l2_rows``, the per-group strategy
+    assignment, and — across a world-size change (``reshard_plan``) — the
+    padded row counts, which are re-cut first via ``_reshard_group_state``
+    (a pure padding/sentinel permutation, exact for every logical row).
 
     Per group:
 
@@ -424,11 +507,11 @@ def migrate_state(old_plan: PicassoPlan, new_plan: PicassoPlan, state: Any, *,
     out: Dict[str, EmbeddingState] = {}
     for g in new_plan.groups:
         og = old_plan.group(g.gid)
-        if (og.rows, og.dim) != (g.rows, g.dim):
+        if og.dim != g.dim:
             raise ValueError(
-                f"g{g.gid}: packed shape changed across revisions "
+                f"g{g.gid}: packed dim changed across revisions "
                 f"({og.rows}x{og.dim} -> {g.rows}x{g.dim}); only tier "
-                "budgets and strategy may change")
+                "budgets, strategy, and world padding may change")
         h_old = (old_plan.cache_rows.get(g.gid, 0),
                  old_plan.l2_rows.get(g.gid, 0))
         h_new = (new_plan.cache_rows.get(g.gid, 0),
@@ -440,6 +523,8 @@ def migrate_state(old_plan: PicassoPlan, new_plan: PicassoPlan, state: Any, *,
         nd_old = old_plan.narrow_width(g.gid)
         nd_new = new_plan.narrow_width(g.gid)
         st = state[str(g.gid)]
+        if og.rows != g.rows:  # world resize: recut padding/sentinels first
+            st = _reshard_group_state(g, st)
         if h_old == h_new and gates_old == gates_new and nd_old == nd_new:
             out[str(g.gid)] = st  # bitwise pass-through
         else:

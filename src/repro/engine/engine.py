@@ -150,6 +150,15 @@ class EmbeddingEngine:
                  use_fused_kernels: Any = "auto",
                  grad_compress: str = "none",
                  capacity: Optional[Dict[int, int]] = None):
+        if int(plan.world) != int(world):
+            # a stale engine after an elastic reshard: the plan's padded row
+            # counts and capacities derive from plan.world, so collectives
+            # built for `world` shards would mis-route rows silently
+            raise ValueError(
+                f"plan was compiled for world={plan.world} but the engine is "
+                f"built for world={world} — after a reshard, rebuild the "
+                "engine/step from the resharded plan (core.packing."
+                "reshard_plan), not the stale one")
         self.plan = plan
         self.axes = axes
         self.world = world

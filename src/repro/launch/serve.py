@@ -56,6 +56,13 @@ def main():
                     help="fused Pallas sparse kernels: 'auto' wherever "
                          "Pallas runs (TPU / REPRO_FORCE_PALLAS_INTERPRET), "
                          "'on' forces them, 'off' forces the jnp reference")
+    ap.add_argument("--reload-dir", default="", metavar="DIR",
+                    help="pick up model deltas a streaming trainer publishes "
+                         "(repro.launch.train --stream --publish-dir DIR): "
+                         "before each request, poll DIR/LATEST and hot-swap "
+                         "the emb+dense state in place — no restart; deltas "
+                         "published at a different world size are resharded "
+                         "onto this server's mesh on load")
     args = ap.parse_args()
 
     if args.devices:
@@ -128,7 +135,19 @@ def main():
 
     plan = make_plan(cfg, world=world, per_device_batch=args.batch // world,
                      l2_bytes=args.l2_budget,
-                     narrow_dim=args.narrow_dim or None)
+                     narrow_dim=args.narrow_dim or None,
+                     mesh_shape=shape)
+    if args.reload_dir:
+        # shape the serve state by the PUBLISHED plan revision (tier budgets,
+        # strategy, narrow widths) so hot-swapped deltas drop straight in;
+        # rows still follow THIS server's world (deltas reshard on load)
+        from repro.runtime import apply_plan_meta
+        from repro.train.checkpoint import load_checkpoint_meta
+        pub_meta = load_checkpoint_meta(args.reload_dir)
+        if pub_meta is not None:
+            plan = apply_plan_meta(plan, pub_meta)
+            print(f"[serve] following published plan rev {plan.rev} "
+                  f"from {args.reload_dir}")
     model = WDLModel(cfg, plan)
     scfg = serve_cfg(plan, args.batch // world)
     state = init_state(model, plan, jax.random.PRNGKey(0), mesh=mesh, axes=axes)
@@ -139,7 +158,27 @@ def main():
     serve = make_serve_step(model, plan, mesh, axes, args.batch, scfg=scfg)
     rng = np.random.default_rng(0)
     lat = []
+    last_pub = -1
     for i in range(args.n_requests):
+        if args.reload_dir:
+            from repro.runtime import place_state, poll_published, load_published
+            s_new = poll_published(args.reload_dir, last_pub)
+            if s_new is not None:
+                try:
+                    loaded, s_pub = load_published(
+                        args.reload_dir,
+                        {"emb": state["emb"], "dense": state["dense"]},
+                        plan=plan, step=s_new)
+                    state = {**state,
+                             **place_state(loaded, plan, mesh, axes)}
+                    last_pub = s_pub
+                    print(f"[serve] reloaded published step {s_pub} "
+                          f"from {args.reload_dir}", flush=True)
+                except (ValueError, KeyError, FileNotFoundError) as e:
+                    # a delta shaped by a NEWER plan revision than the one we
+                    # started under: keep serving the current model
+                    print(f"[serve] skipped published step {s_new}: {e}",
+                          flush=True)
         b = make_batch(cfg, args.batch, rng)
         b = jax.device_put(b, to_named(mesh, batch_specs(b, axes)))
         t0 = time.perf_counter()

@@ -81,6 +81,35 @@ def main():
                          "per-row amax-scaled float16 cast, 'topk' = per-row "
                          "magnitude top-(D/4) sparsification, 'none' keeps "
                          "training bitwise-exact")
+    ap.add_argument("--reshard-to", default="", metavar="MESH",
+                    help="elastic reshard target mesh, e.g. 2x2 or 4: at "
+                         "--reshard-at the run recuts the plan for the new "
+                         "world size, permutes the live state exactly (every "
+                         "master row, adagrad slot, and FCounter survives "
+                         "bitwise), rebuilds the jitted step, and continues "
+                         "on the first prod(MESH) devices without restart")
+    ap.add_argument("--reshard-at", type=int, default=0, metavar="STEP",
+                    help="step at which to apply --reshard-to (0 with "
+                         "--reshard-to set reshards at the first segment "
+                         "boundary)")
+    ap.add_argument("--stream", action="store_true",
+                    help="streaming driver: consume the unbounded batch "
+                         "stream in --stream-segments segments of "
+                         "--segment-steps (ignoring --steps), checkpoint "
+                         "incrementally per segment, publish model deltas "
+                         "to --publish-dir, and apply --reshard-to in place "
+                         "at a segment boundary")
+    ap.add_argument("--segment-steps", type=int, default=20, metavar="N",
+                    help="steps per streaming segment (the checkpoint/"
+                         "publish/resize granularity of --stream)")
+    ap.add_argument("--stream-segments", type=int, default=3, metavar="K",
+                    help="number of streaming segments to run under --stream")
+    ap.add_argument("--publish-dir", default="", metavar="DIR",
+                    help="streaming mode: publish the serveable state subset "
+                         "(emb+dense) here at every segment boundary, with "
+                         "an atomic LATEST pointer a running "
+                         "repro.launch.serve --reload-dir process picks up "
+                         "without restart")
     ap.add_argument("--no-cache", action="store_true")
     ap.add_argument("--no-interleave", action="store_true")
     ap.add_argument("--no-packing", action="store_true")
@@ -98,6 +127,8 @@ def main():
     args = ap.parse_args()
     if args.replan_iters < 0:
         ap.error("--replan-iters must be >= 0 (0 disables replanning)")
+    if args.reshard_at and not args.reshard_to:
+        ap.error("--reshard-at needs --reshard-to")
 
     if args.devices:
         os.environ["XLA_FLAGS"] = (
@@ -115,8 +146,11 @@ def main():
     from repro.embedding.state import pin_l2_to_host, warn_pin_l2_limits
     from repro.launch.mesh import make_mesh
     from repro.models.wdl import WDLModel
-    from repro.runtime import Replanner, apply_plan_meta, plan_meta
-    from repro.train.checkpoint import load_checkpoint_meta
+    from repro.runtime import (Replanner, apply_plan_meta, make_submesh,
+                               parse_mesh_shape, plan_meta, publish_state,
+                               reshard_live, restore_elastic, run_stream)
+    from repro.train.checkpoint import (AsyncCheckpointer, latest_step,
+                                        load_checkpoint_meta)
     from repro.train.fault_tolerance import Supervisor
     from repro.train.train_step import TrainConfig, init_state, make_train_step
 
@@ -137,7 +171,9 @@ def main():
                      hot_bytes=1 << 24 if args.smoke else 1 << 30,
                      l2_bytes=args.l2_budget,
                      narrow_dim=args.narrow_dim or None,
-                     flush_iters=20, warmup_iters=10)
+                     flush_iters=20, warmup_iters=10,
+                     mesh_shape=shape)
+    meta = None
     if args.ckpt_dir:
         # a checkpointed run may have replanned: revise the structural plan
         # back to the checkpointed revision BEFORE shaping state/templates
@@ -188,9 +224,13 @@ def main():
           f"micro={plan.microbatch}, ilv={len(plan.interleave)} waves, "
           f"world={world}, plan rev={plan.rev}")
 
-    stream = device_put_stream(batch_stream(cfg, args.global_batch, seed=args.seed,
-                                            learnable=args.learnable),
-                               mesh, lambda b: batch_specs(b, axes))
+    # the raw generator is held separately from the device-side Prefetcher:
+    # an elastic reshard closes the old Prefetcher (its queued batches are
+    # committed to the OLD mesh) and re-wraps the same source over the new one
+    raw_stream = batch_stream(cfg, args.global_batch, seed=args.seed,
+                              learnable=args.learnable)
+    stream = device_put_stream(raw_stream, mesh,
+                               lambda b: batch_specs(b, axes))
 
     def on_metrics(step, m):
         if replanner is not None:
@@ -199,10 +239,49 @@ def main():
             print(f"  step {step:5d} loss={float(m['loss']):.4f} "
                   f"hits={int(m['cache_hits'])} ovf={int(m['overflow'])}", flush=True)
 
+    reshard_pending = bool(args.reshard_to)
+
+    def do_reshard(state, step):
+        """In-place elastic reshard to --reshard-to: recut the plan, permute
+        the state exactly, re-place it on the sub-mesh, rebuild the jitted
+        step, and re-wrap the batch source. One-shot."""
+        nonlocal plan, model, tcfg, step_fn, mesh, world, stream, \
+            reshard_pending
+        new_shape = parse_mesh_shape(args.reshard_to, len(axes))
+        new_world = int(np.prod(new_shape))
+        reshard_pending = False  # applied (or a no-op) — never re-fires
+        if new_world == world:
+            return state
+        if args.global_batch % new_world:
+            raise SystemExit(f"[train] --reshard-to {args.reshard_to}: "
+                             f"global batch {args.global_batch} not divisible "
+                             f"by new world {new_world}")
+        print(f"[train] reshard world {world} -> {new_world} "
+              f"(mesh {'x'.join(map(str, new_shape))}) at step {step}",
+              flush=True)
+        new_mesh = make_submesh(new_shape, axes)
+        plan, state = reshard_live(
+            plan, state, new_world, args.global_batch // new_world,
+            mesh=new_mesh, axes=axes, mesh_shape=new_shape,
+            use_cache=not args.no_cache, cache_update=tcfg.cache_update)
+        mesh, world = new_mesh, new_world
+        model, tcfg, step_fn = build_step(plan)  # build_step reads `mesh`
+        stream.close()
+        stream = device_put_stream(raw_stream, mesh,
+                                   lambda b: batch_specs(b, axes))
+        if replanner is not None:
+            replanner.plan, replanner.mesh = plan, mesh
+        if args.pin_l2:
+            state = pin_l2_to_host(state, mesh)
+        return state
+
     def next_boundary(step):
-        """Next replan step strictly after ``step`` (multiples of the knob)."""
+        """Next replan/reshard step strictly after ``step``."""
         ri = args.replan_iters
-        return min(args.steps, (step // ri + 1) * ri) if ri else args.steps
+        b = min(args.steps, (step // ri + 1) * ri) if ri else args.steps
+        if reshard_pending and step < args.reshard_at:
+            b = min(b, args.reshard_at)
+        return b
 
     def do_replan(state, step):
         """Harvest + recompile; on a real change, migrate + rebuild the step.
@@ -217,15 +296,61 @@ def main():
             state = pin_l2_to_host(state, mesh)
         return state, True
 
+    if args.stream:
+        # streaming driver: segments over the unbounded stream (--steps is
+        # ignored); each segment boundary checkpoints, publishes, and may
+        # apply the in-place reshard — no restart anywhere in the lifecycle
+        ckpt = AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
+        start = 0
+        if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+            state, start = restore_elastic(
+                args.ckpt_dir, plan, state, mesh=mesh, axes=axes,
+                log=lambda s: print(f"[train] elastic {s}", flush=True))
+            print(f"[train] stream resumed at step {start}", flush=True)
+
+        publisher = None
+        if args.publish_dir:
+            def publisher(step, state):
+                publish_state(args.publish_dir, step, state,
+                              meta=plan_meta(plan))
+                print(f"[stream] published step {step} -> {args.publish_dir}",
+                      flush=True)
+
+        def on_segment(seg, step, state):
+            if reshard_pending and step >= args.reshard_at:
+                state = do_reshard(state, step)
+                return state, step_fn, stream
+            return None
+
+        state, last = run_stream(
+            state, step_fn, stream,
+            segment_steps=args.segment_steps,
+            n_segments=args.stream_segments, start_step=start,
+            checkpointer=ckpt, meta_fn=lambda: plan_meta(plan),
+            publisher=publisher, on_metrics=on_metrics,
+            on_segment=on_segment)
+        if ckpt is not None:
+            ckpt.wait()
+        stream.close()
+        print(f"[train] stream done at step {last} (world={world})")
+        return
+
     if args.ckpt_dir:
         sup = Supervisor(args.ckpt_dir, ckpt_every=args.ckpt_every)
-        if replanner is not None or plan.rev > 0:
-            # keep the plan-revision sidecar on every checkpoint — including
-            # resumed runs that replan no further: dropping it would make the
-            # NEXT resume restore revision-shaped tiers into the seed-plan
-            # template (silent truncate/zero-pad)
-            sup.meta = plan_meta(plan)
-        state, start = sup.maybe_restore(state)
+        # keep the plan sidecar on EVERY checkpoint: it records the world/
+        # mesh the state was written under (elastic-restore detection) and —
+        # for replanned runs — the plan revision; dropping it would make the
+        # NEXT resume restore revision-shaped tiers into the seed-plan
+        # template or shape-error on a world change
+        sup.meta = plan_meta(plan)
+        if meta is not None and int(meta.get("world", world)) != world:
+            # checkpoint written at a different world size: route the restore
+            # through the exact resharding path instead of the stale template
+            state, start = restore_elastic(
+                args.ckpt_dir, plan, state, mesh=mesh, axes=axes,
+                log=lambda s: print(f"[train] elastic {s}", flush=True))
+        else:
+            state, start = sup.maybe_restore(state)
         step = start
         # known limitation: a failure-restore *inside* a segment replays the
         # restored window without re-hitting an already-passed replan
@@ -238,6 +363,14 @@ def main():
             state = sup.run(state, step_fn, stream, seg_end, start_step=step,
                             on_metrics=on_metrics)
             step = seg_end
+            if reshard_pending and step >= args.reshard_at \
+                    and step < args.steps:
+                state = do_reshard(state, step)
+                # durable, mesh-consistent restore point: a later failure
+                # must restore post-reshard row counts + the new world meta
+                sup.meta = plan_meta(plan)
+                sup.ckpt.save(step, state, meta=sup.meta)
+                sup.ckpt.wait()
             if replanner is not None and step < args.steps:
                 state, migrated = do_replan(state, step)
                 if migrated:
@@ -255,6 +388,9 @@ def main():
                 break              # matching the Supervisor path's semantics
             state, m = step_fn(state, batch)
             on_metrics(i, m)
+            if reshard_pending and i >= args.reshard_at and i < args.steps:
+                state = do_reshard(state, i)
+                it = iter(stream)  # the Prefetcher was rebuilt for the new mesh
             if (replanner is not None and i % args.replan_iters == 0
                     and i < args.steps):
                 state, _ = do_replan(state, i)

@@ -4,15 +4,32 @@
 ``repro.runtime`` closes the loop at runtime — harvest the engine's live
 frequency statistics, recompile the plan's revisable decisions (tier
 budgets, per-group strategy mix), and migrate live training state across
-plan revisions. See ``replanner`` for the full loop contract.
+plan revisions. See ``replanner`` for the full loop contract, ``elastic``
+for world-size resharding (plan recut + exact state permutation + elastic
+checkpoint restore), and ``stream`` for the segmented streaming driver with
+publish/pickup train-to-serve handoff.
 """
+from repro.runtime.elastic import (make_submesh, parse_mesh_shape,
+                                   place_state, reshard_live,
+                                   restore_elastic)
 from repro.runtime.replanner import (ReplanEvent, Replanner, apply_plan_meta,
                                      plan_delta, plan_meta)
+from repro.runtime.stream import (load_published, poll_published,
+                                  publish_state, run_stream)
 
 __all__ = [
     "ReplanEvent",
     "Replanner",
     "apply_plan_meta",
+    "load_published",
+    "make_submesh",
+    "parse_mesh_shape",
+    "place_state",
     "plan_delta",
     "plan_meta",
+    "poll_published",
+    "publish_state",
+    "reshard_live",
+    "restore_elastic",
+    "run_stream",
 ]

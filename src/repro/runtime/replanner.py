@@ -93,9 +93,14 @@ def plan_meta(plan: PicassoPlan) -> Dict[str, Any]:
     Only the *revisable* decisions are recorded — groups/capacity/interleave
     re-derive deterministically from the config and mesh via ``make_plan``;
     what resume cannot re-derive is which revision the checkpointed state
-    was shaped by.
+    was shaped by. ``world``/``mesh_shape`` additionally record the mesh the
+    state was written under: a resume at a different world size is detected
+    from them (``runtime.elastic.restore_elastic``) and routed through
+    resharding instead of shape-erroring against a stale template.
     """
     return {
+        "world": int(plan.world),
+        "mesh_shape": [int(x) for x in plan.mesh_shape],
         "plan_rev": int(plan.rev),
         "hot_bytes": int(plan.hot_bytes),
         "l2_bytes": int(plan.l2_bytes),

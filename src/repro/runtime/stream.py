@@ -1,0 +1,130 @@
+"""Minimal streaming driver: segments over an unbounded batch stream.
+
+The continuous-delivery loop PICASSO motivates (daily retrains racing the
+clock) never sees a fixed ``--steps``: batches arrive indefinitely, the
+trainer consumes them in *segments*, and at every segment boundary it
+
+1. checkpoints incrementally (the segment is the failure/restart unit),
+2. publishes a model delta (``publish_state``) a RUNNING serve process picks
+   up without restart (``poll_published`` + ``load_published`` — the
+   Merlin/HugeCTR train-to-serve handoff pattern), and
+3. offers the caller a resize hook (``on_segment``) that may swap in a new
+   ``(state, step_fn, stream)`` triple — the in-place elastic reshard
+   (``runtime.elastic``) plugs in here, so a world-size change is just
+   another segment boundary, not a restart.
+
+Publication layout: ``publish_dir/step_<n>/`` is an ordinary checkpoint of
+the serveable subset (``{"emb", "dense"}``) plus an atomically-renamed
+``LATEST`` pointer file, so a poller never reads a half-written delta.
+"""
+from __future__ import annotations
+
+import os
+from pathlib import Path
+from typing import Any, Callable, Dict, Iterable, Optional, Tuple
+
+from repro.embedding.state import reshard_state
+from repro.train.checkpoint import restore_checkpoint, save_checkpoint
+
+
+def run_stream(state: Any, step_fn: Callable, batches: Iterable, *,
+               segment_steps: int, n_segments: int, start_step: int = 0,
+               checkpointer=None, meta_fn: Optional[Callable] = None,
+               publisher: Optional[Callable] = None,
+               on_metrics: Optional[Callable] = None,
+               on_segment: Optional[Callable] = None,
+               log: Optional[Callable] = None) -> Tuple[Any, int]:
+    """Consume ``batches`` in ``n_segments`` segments of ``segment_steps``.
+
+    Per segment boundary (in order): ``checkpointer.save(step, state,
+    meta=meta_fn())`` (an ``AsyncCheckpointer`` or anything with its
+    ``save`` signature), ``publisher(step, state)``, a ``[stream] segment``
+    log line, then ``on_segment(seg, step, state)`` — which may return a
+    replacement ``(state, step_fn, batches)`` triple to adopt (the elastic
+    reshard path) or ``None`` to continue unchanged.
+
+    A drained source ends the run early (graceful, like the launchers).
+    Returns ``(state, final_step)``.
+    """
+    log = log or (lambda s: print(s, flush=True))
+    it = iter(batches)
+    step = start_step
+    for seg in range(1, n_segments + 1):
+        done = 0
+        for _ in range(segment_steps):
+            try:
+                batch = next(it)
+            except StopIteration:
+                break
+            state, m = step_fn(state, batch)
+            step += 1
+            done += 1
+            if on_metrics is not None:
+                on_metrics(step, m)
+        if checkpointer is not None:
+            checkpointer.save(step, state,
+                              meta=meta_fn() if meta_fn is not None else None)
+        if publisher is not None:
+            publisher(step, state)
+        log(f"[stream] segment {seg}/{n_segments}: +{done} steps -> "
+            f"step {step}")
+        if on_segment is not None:
+            out = on_segment(seg, step, state)
+            if out is not None:
+                state, step_fn, batches = out
+                it = iter(batches)
+        if done < segment_steps:
+            log(f"[stream] source drained at step {step}; stopping")
+            break
+    return state, step
+
+
+def publish_state(publish_dir: str, step: int, state: Dict[str, Any],
+                  meta: Optional[Dict[str, Any]] = None, keep: int = 2
+                  ) -> str:
+    """Publish the serveable subset of ``state`` as an atomic model delta.
+
+    Writes ``publish_dir/step_<n>/`` ({"emb", "dense"} — no optimizer, no
+    step counter) via ``save_checkpoint`` (atomic rename), then atomically
+    replaces the ``LATEST`` pointer. ``meta`` is typically ``plan_meta(plan)``
+    so a consumer can detect the revision/world the delta was shaped by.
+    """
+    doc = {"emb": state["emb"], "dense": state["dense"]}
+    path = save_checkpoint(publish_dir, step, doc, keep=keep, meta=meta)
+    d = Path(publish_dir)
+    tmp = d / ".LATEST.tmp"
+    tmp.write_text(f"{step}\n")
+    os.replace(tmp, d / "LATEST")
+    return path
+
+
+def poll_published(publish_dir: str, last_step: int = -1) -> Optional[int]:
+    """Newest published step strictly after ``last_step``, else ``None``.
+
+    Cheap enough to call before every serve request: one small file read,
+    no directory scan.
+    """
+    p = Path(publish_dir) / "LATEST"
+    if not p.exists():
+        return None
+    try:
+        s = int(p.read_text().strip())
+    except (ValueError, OSError):
+        return None
+    return s if s > last_step else None
+
+
+def load_published(publish_dir: str, template: Any,
+                   plan=None, step: Optional[int] = None) -> Tuple[Any, int]:
+    """Load one published delta into ``template`` (the serve {"emb","dense"}
+    subset). With ``plan``, a delta published at a different world size is
+    resharded onto the consumer's row padding (``reshard_state``) — the
+    cross-world train-to-serve handoff; without it a row mismatch raises.
+    Returns host arrays — callers place them (``elastic.place_state``).
+    """
+    state, s = restore_checkpoint(
+        publish_dir, template, step=step,
+        on_row_mismatch="keep" if plan is not None else "error")
+    if plan is not None:
+        state = reshard_state(plan, state)
+    return state, s

@@ -4,7 +4,9 @@ Layout: <dir>/step_<n>/ manifest.json + one .npy per leaf (zstd-compressed).
 Embedding tables are stored *logically* (gathered, world-size padding kept but
 recorded), so a checkpoint written on 512 chips restores onto any mesh: the
 row space is world-independent (scramble + offsets derive from raw vocabs;
-only the tail padding differs and is re-cut on load).
+only the tail padding differs). A world-size mismatch is *detected* here
+(``on_row_mismatch``) and re-cut by the elastic path
+(``runtime.elastic.restore_elastic``), which remaps tier sentinel keys.
 """
 from __future__ import annotations
 
@@ -142,12 +144,30 @@ def load_checkpoint_meta(ckpt_dir: str, step: Optional[int] = None
 
 
 def restore_checkpoint(ckpt_dir: str, template: Any, step: Optional[int] = None,
-                       shardings: Any = None) -> Tuple[Any, int]:
+                       shardings: Any = None,
+                       on_row_mismatch: str = "error") -> Tuple[Any, int]:
     """Restore into ``template`` (abstract or concrete pytree).
 
-    Elastic re-mesh: a leaf whose leading dim differs from the stored one
-    (world-padding) is zero-extended / truncated to the template's rows.
+    ``on_row_mismatch`` decides what happens when a stored leaf's leading dim
+    (world-padding) differs from the template's:
+
+    - ``"error"`` (default): raise with the leaf name and both shapes, plus
+      the elastic-restore pointer. A row mismatch means the checkpoint was
+      written at a different world size, and blindly re-padding corrupts
+      tier sentinel keys (an old-sentinel ``rows_padded_old`` entry becomes
+      a valid-looking key into a padding row) — the caller must go through
+      ``runtime.elastic.restore_elastic`` / ``embedding.state.reshard_state``
+      instead, which remap the sentinels.
+    - ``"keep"``: return the leaf at its STORED leading dim (the template's
+      trailing dims must match). The elastic restore path uses this to pull
+      the world-W state out before resharding it properly.
+    - ``"repad"``: legacy behavior — zero-extend / truncate to the
+      template's rows. Only safe for states without cache tiers (no
+      sentinel keys), e.g. dense-only models.
     """
+    if on_row_mismatch not in ("error", "keep", "repad"):
+        raise ValueError(f"on_row_mismatch must be 'error', 'keep', or "
+                         f"'repad', got {on_row_mismatch!r}")
     step = step if step is not None else latest_step(ckpt_dir)
     if step is None:
         raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
@@ -173,13 +193,22 @@ def restore_checkpoint(ckpt_dir: str, template: Any, step: Optional[int] = None,
         arr = _np_from_bytes(raw)
         tshape = tuple(t.shape)
         if tuple(arr.shape) != tshape:
-            if arr.ndim >= 1 and arr.shape[1:] == tshape[1:]:
+            if not (arr.ndim >= 1 and arr.shape[1:] == tshape[1:]):
+                raise ValueError(f"{name}: stored {arr.shape} vs template {tshape}")
+            if on_row_mismatch == "error":
+                raise ValueError(
+                    f"{name}: stored {arr.shape} vs template {tshape} — row "
+                    "count (world padding) differs, so this checkpoint was "
+                    "written at a different world size. Restore through the "
+                    "elastic path (runtime.elastic.restore_elastic / "
+                    "embedding.state.reshard_state), which remaps tier "
+                    "sentinel keys; a blind re-pad would corrupt them.")
+            if on_row_mismatch == "repad":
                 new = np.zeros(tshape, arr.dtype)
                 n = min(arr.shape[0], tshape[0])
                 new[:n] = arr[:n]
-                arr = new  # elastic re-pad (world-size change)
-            else:
-                raise ValueError(f"{name}: stored {arr.shape} vs template {tshape}")
+                arr = new  # legacy elastic re-pad (no-tier states only)
+            # 'keep': hand back the stored rows untouched for resharding
         out[name] = arr.astype(t.dtype)
     state = _unflatten_into(template, out)
     if shardings is not None:

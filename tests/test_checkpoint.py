@@ -32,18 +32,29 @@ def test_roundtrip_exact(tmp_path):
 
 
 def test_elastic_repad(tmp_path):
-    """Restore onto a template with different world-padding (rows 16 -> 24)."""
+    """A row-count (world-padding) mismatch is detected: the default restore
+    raises with the elastic-path pointer (the old silent zero-extend
+    corrupted tier sentinel keys), 'keep' hands back the stored rows for
+    resharding, and 'repad' opts into the legacy zero-extend/truncate."""
     save_checkpoint(str(tmp_path), 1, _state(rows=16))
     template = _state(rows=24)
-    r, _ = restore_checkpoint(str(tmp_path), template)
+    with pytest.raises(ValueError, match="different world size"):
+        restore_checkpoint(str(tmp_path), template)
+    # 'keep': stored leading dims come back untouched (reshard-side input)
+    r, _ = restore_checkpoint(str(tmp_path), template, on_row_mismatch="keep")
+    assert np.asarray(r["emb"]["0"]["w"]).shape == (16, 4)
+    # 'repad': the legacy behavior, now opt-in (tier-free states only)
+    r, _ = restore_checkpoint(str(tmp_path), template, on_row_mismatch="repad")
     w = np.asarray(r["emb"]["0"]["w"])
     assert w.shape == (24, 4)
     np.testing.assert_array_equal(w[:16], np.arange(64, dtype=np.float32).reshape(16, 4))
     np.testing.assert_array_equal(w[16:], 0)
     # shrink direction
     template = _state(rows=8)
-    r, _ = restore_checkpoint(str(tmp_path), template)
+    r, _ = restore_checkpoint(str(tmp_path), template, on_row_mismatch="repad")
     assert np.asarray(r["emb"]["0"]["w"]).shape == (8, 4)
+    with pytest.raises(ValueError, match="on_row_mismatch"):
+        restore_checkpoint(str(tmp_path), template, on_row_mismatch="bogus")
 
 
 def test_keep_gc(tmp_path):

@@ -1,0 +1,390 @@
+"""Elastic resharding: plan recut, exact state permutation, elastic
+checkpoint restore, publish/pickup handoff — plus the property harness
+(random chains of plan revisions: tier resize, narrow<->wide, strategy
+re-mix, world resize) that proves every migration exact.
+
+Everything here is host-side (no mesh): ``init_state`` without a mesh builds
+plain arrays, migrations run in numpy, and the multi-device placement is
+covered by the subprocess parity test in test_distributed.py.
+"""
+import jax
+import numpy as np
+import pytest
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:
+    from hypothesis_fallback import given, settings, st
+
+from repro.configs.base import FeatureField, InteractionSpec, WDLConfig
+from repro.core.assign import apply_assignment
+from repro.core.packing import make_plan, reshard_plan, revise_plan
+from repro.embedding.state import migrate_state, reshard_state
+from repro.models.wdl import WDLModel
+from repro.runtime import (apply_plan_meta, load_published, plan_meta,
+                           poll_published, publish_state, restore_elastic)
+from repro.train.checkpoint import restore_checkpoint, save_checkpoint
+from repro.train.train_step import init_state
+
+PDB = 8  # per-device batch used for capacity planning in every recut
+PLAN_KW = dict(hot_bytes=1 << 12, l2_bytes=1 << 13, narrow_dim=4,
+               flush_iters=5, warmup_iters=2)
+
+
+def _cfg():
+    """Three packed groups with three distinct dims (4 / 8 / 16)."""
+    fields = (FeatureField("a", 1001, 8, max_len=2),
+              FeatureField("b", 515, 16, max_len=1),
+              FeatureField("c", 259, 4, max_len=3))
+    return WDLConfig(name="elastic3", fields=fields, n_dense=0,
+                     interactions=(InteractionSpec("fm"),), mlp_dims=(16, 8))
+
+
+def _plan(world, **kw):
+    merged = dict(PLAN_KW)
+    merged.update(kw)
+    return make_plan(_cfg(), world=world, per_device_batch=PDB, **merged)
+
+
+def _logical(g):
+    """Row count of the packed vocabs (the world-independent part)."""
+    return max(g.table_offsets[t.name] + t.vocab for t in g.tables)
+
+
+def _seed_counts(plan, state, seed=123):
+    """Surgically seed the FCounter on logical rows (padding stays zero)."""
+    rng = np.random.default_rng(seed)
+    emb = dict(state["emb"])
+    for g in plan.groups:
+        st_g = emb[str(g.gid)]
+        counts = np.zeros(g.rows, np.int32)
+        n = _logical(g)
+        counts[:n] = rng.integers(0, 50, size=n).astype(np.int32)
+        emb[str(g.gid)] = st_g._replace(counts=counts)
+    return {**state, "emb": emb}
+
+
+def _host_state(plan, seed=0):
+    model = WDLModel(_cfg(), plan)
+    return _seed_counts(plan, init_state(model, plan, jax.random.PRNGKey(seed)))
+
+
+# ----------------------------------------------------------- reshard_plan
+
+
+def test_reshard_plan_recuts_rows_and_carries_revisables():
+    plan = _plan(4)
+    apply_assignment(plan, {0: "picasso", 1: "picasso_l2",
+                            2: "picasso_narrow"})
+    new = reshard_plan(plan, 3, PDB, mesh_shape=(3, 1))
+    assert new.world == 3 and new.mesh_shape == (3, 1)
+    for g in new.groups:
+        logical = _logical(g)
+        assert g.rows % 3 == 0 and 0 <= g.rows - logical < 3
+        assert g.dim == plan.group(g.gid).dim
+    # every revisable decision carries verbatim — the reshard is the SAME
+    # plan revision, permuted
+    assert new.rev == plan.rev
+    assert new.cache_rows == plan.cache_rows
+    assert new.l2_rows == plan.l2_rows
+    assert new.strategy == plan.strategy
+    assert new.narrow_dim == plan.narrow_dim
+    assert new.hot_bytes == plan.hot_bytes
+    # capacities re-planned for the new peer count
+    assert set(new.capacity) == set(plan.capacity)
+    # roundtrip lands on the original row cuts
+    back = reshard_plan(new, 4, PDB)
+    assert {g.gid: g.rows for g in back.groups} == \
+        {g.gid: g.rows for g in plan.groups}
+
+
+def test_reshard_plan_validates():
+    plan = _plan(2)
+    with pytest.raises(ValueError, match="positive"):
+        reshard_plan(plan, 0, PDB)
+    with pytest.raises(ValueError, match="devices"):
+        reshard_plan(plan, 4, PDB, mesh_shape=(3, 1))
+    with pytest.raises(ValueError, match="devices"):
+        make_plan(_cfg(), world=2, per_device_batch=PDB, mesh_shape=(4, 1))
+    assert _plan(2, mesh_shape=(2, 1)).mesh_shape == (2, 1)
+
+
+def test_plan_meta_records_world():
+    plan = _plan(2, mesh_shape=(2, 1))
+    meta = plan_meta(plan)
+    assert meta["world"] == 2 and meta["mesh_shape"] == [2, 1]
+    # apply_plan_meta keeps the TARGET plan's structural world
+    revived = apply_plan_meta(_plan(4), meta)
+    assert revived.world == 4
+
+
+# ---------------------------------------------------------- reshard_state
+
+
+def test_reshard_state_roundtrip_bitwise():
+    """4 -> 3 -> 4 devices: every logical row, optimizer slot, counter, and
+    tier resident survives bitwise; sentinel keys remap both directions."""
+    plan4 = _plan(4)
+    apply_assignment(plan4, {g.gid: "picasso_l2" for g in plan4.groups})
+    state = _host_state(plan4)
+    # populate the tiers from the seeded counts (tier resize -> re-rank)
+    bud = revise_plan(plan4, hot_bytes=1 << 11, l2_bytes=1 << 12)
+    apply_assignment(bud, {g.gid: "picasso_l2" for g in bud.groups})
+    state = migrate_state(plan4, bud, state)
+    plan4 = bud
+
+    plan3 = reshard_plan(plan4, 3, PDB)
+    s3 = reshard_state(plan3, state)
+    plan4b = reshard_plan(plan3, 4, PDB)
+    s4 = reshard_state(plan4b, s3)
+
+    for g in plan4.groups:
+        a, b = state["emb"][str(g.gid)], s4["emb"][str(g.gid)]
+        n = _logical(g)
+        np.testing.assert_array_equal(np.asarray(a.w)[:n], np.asarray(b.w)[:n])
+        np.testing.assert_array_equal(np.asarray(a.acc)[:n],
+                                      np.asarray(b.acc)[:n])
+        np.testing.assert_array_equal(np.asarray(a.counts)[:n],
+                                      np.asarray(b.counts)[:n])
+        for ta, tb in ((a.cache, b.cache), (a.l2, b.l2)):
+            if ta is None:
+                assert tb is None
+                continue
+            np.testing.assert_array_equal(np.asarray(ta.keys),
+                                          np.asarray(tb.keys))
+            np.testing.assert_array_equal(np.asarray(ta.rows),
+                                          np.asarray(tb.rows))
+            np.testing.assert_array_equal(np.asarray(ta.acc),
+                                          np.asarray(tb.acc))
+        # the intermediate world actually remapped sentinels (no stale
+        # old-world sentinel survives as a valid-looking key)
+        g3 = plan3.group(g.gid)
+        k3 = np.asarray(s3["emb"][str(g.gid)].cache.keys)
+        assert ((k3 == g3.rows) | (k3 < _logical(g3))).all()
+
+
+def test_reshard_state_refuses_to_drop_live_rows():
+    plan2 = _plan(2)
+    state = _host_state(plan2)
+    gid = max(g.gid for g in plan2.groups)
+    g = plan2.group(gid)
+    st_g = state["emb"][str(gid)]
+    counts = np.asarray(st_g.counts).copy()
+    counts[-1] = 7  # pretend the padding row carries live mass
+    state["emb"][str(gid)] = st_g._replace(counts=counts)
+    target = reshard_plan(plan2, 3, PDB)
+    if target.group(gid).rows < g.rows:
+        with pytest.raises(ValueError, match="nonzero FCounter"):
+            reshard_state(target, state)
+    else:  # direction grew this group: shrink instead
+        target = reshard_plan(plan2, 1, PDB)
+        assert target.group(gid).rows < g.rows
+        with pytest.raises(ValueError, match="nonzero FCounter"):
+            reshard_state(target, state)
+
+
+def test_migrate_state_rejects_dim_change():
+    plan = _plan(2)
+    other = _plan(2)
+    object.__setattr__(other.groups[0], "dim", other.groups[0].dim * 2)
+    with pytest.raises(ValueError, match="packed dim changed"):
+        migrate_state(plan, other, _host_state(plan))
+
+
+def test_engine_rejects_stale_world():
+    from repro.engine.engine import EmbeddingEngine
+    plan = _plan(2)
+    with pytest.raises(ValueError, match="world"):
+        EmbeddingEngine(plan, ("data", "model"), 1)
+
+
+# ------------------------------------------------ property harness (chains)
+
+
+_OPS = st.lists(
+    st.tuples(st.sampled_from(["rebudget", "strategy", "world"]),
+              st.integers(0, 5)),
+    min_size=1, max_size=4)
+_WORLDS = (1, 2, 3, 4, 8)
+_BUDGETS = ((1 << 11, 1 << 12), (1 << 12, 1 << 13), (1 << 13, 0),
+            (1 << 10, 1 << 14), (0, 0), (1 << 12, 0))
+_MIXES = (
+    {0: "picasso", 1: "picasso", 2: "picasso"},
+    {0: "picasso_l2", 1: "picasso_l2", 2: "picasso_l2"},
+    {0: "picasso", 1: "picasso_l2", 2: "picasso_narrow"},
+    {0: "picasso_narrow", 1: "picasso", 2: "picasso_l2"},
+    {0: "picasso_l2", 1: "picasso_narrow", 2: "picasso"},
+    {0: "picasso_narrow", 1: "picasso_narrow", 2: "picasso_narrow"},
+)
+
+
+def _check_invariants(plan, state):
+    for g in plan.groups:
+        st_g = state["emb"][str(g.gid)]
+        nd = plan.narrow_width(g.gid)
+        assert np.shape(st_g.w) == (g.rows, nd)
+        assert np.shape(st_g.acc) == (g.rows, 1)
+        assert np.shape(st_g.counts) == (g.rows,)
+        h1 = plan.cache_rows.get(g.gid, 0)
+        h2 = plan.l2_rows.get(g.gid, 0)
+        assert np.shape(st_g.cache.keys) == (h1,)
+        assert (st_g.l2 is None) == (h2 == 0)
+        if h2:  # L2 sits strictly behind L1 (plan invariant)
+            assert h1 > 0
+            k1 = np.asarray(st_g.cache.keys)
+            k2 = np.asarray(st_g.l2.keys)
+            live1 = set(k1[k1 < g.rows].tolist())
+            live2 = set(k2[k2 < g.rows].tolist())
+            assert not live1 & live2, "L1/L2 key sets must stay disjoint"
+        assert (st_g.proj is None) == (nd == g.dim)
+
+
+@settings(max_examples=6, deadline=None)
+@given(_OPS)
+def test_property_random_revision_chains_preserve_state(ops):
+    """Any chain of {tier resize, strategy re-mix, world resize} preserves
+    the FCounter and adagrad slots bitwise on every logical row, preserves
+    masters bitwise for groups narrow never touched, and never violates the
+    plan invariants (shape agreement, L1/L2 disjoint, narrow gating)."""
+    plan = _plan(4)
+    apply_assignment(plan, dict(_MIXES[0]))  # start wide: no narrow masters
+    state = _host_state(plan)
+    ref = {g.gid: (np.asarray(state["emb"][str(g.gid)].w).copy(),
+                   np.asarray(state["emb"][str(g.gid)].acc).copy(),
+                   np.asarray(state["emb"][str(g.gid)].counts).copy())
+           for g in plan.groups}
+    narrow_touched = {g.gid: False for g in plan.groups}
+
+    for kind, pick in ops:
+        if kind == "rebudget":
+            hot, l2b = _BUDGETS[pick % len(_BUDGETS)]
+            new = revise_plan(plan, hot_bytes=hot, l2_bytes=l2b)
+            apply_assignment(new, dict(plan.strategy))
+        elif kind == "strategy":
+            new = revise_plan(plan)
+            new.cache_rows = dict(plan.cache_rows)
+            new.l2_rows = dict(plan.l2_rows)
+            apply_assignment(new, dict(_MIXES[pick % len(_MIXES)]))
+        else:  # world resize
+            new = reshard_plan(plan, _WORLDS[pick % len(_WORLDS)], PDB)
+        for g in new.groups:
+            if plan.narrow_width(g.gid) != new.narrow_width(g.gid):
+                narrow_touched[g.gid] = True
+        state = migrate_state(plan, new, state)
+        plan = new
+        _check_invariants(plan, state)
+
+    for g in plan.groups:
+        st_g = state["emb"][str(g.gid)]
+        n = _logical(g)
+        w0, acc0, counts0 = ref[g.gid]
+        np.testing.assert_array_equal(np.asarray(st_g.counts)[:n],
+                                      counts0[:n])
+        np.testing.assert_array_equal(np.asarray(st_g.acc)[:n], acc0[:n])
+        if not narrow_touched[g.gid] and plan.narrow_width(g.gid) == g.dim:
+            # narrow never engaged for this group: with no training between
+            # revisions every tier load/write-back is an identity, so the
+            # master survives the whole chain bitwise
+            np.testing.assert_array_equal(np.asarray(st_g.w)[:n], w0[:n])
+
+
+# ------------------------------------------------- checkpoint portability
+
+
+def _portability_roundtrip(tmp_path, w_from, w_to):
+    src_plan = _plan(w_from, mesh_shape=(w_from, 1))
+    apply_assignment(src_plan, dict(_MIXES[2]))  # mixed incl. a narrow group
+    state = _host_state(src_plan)
+    bud = revise_plan(src_plan, hot_bytes=1 << 11, l2_bytes=1 << 12)
+    apply_assignment(bud, dict(src_plan.strategy))
+    state = migrate_state(src_plan, bud, state)
+    src_plan = bud
+    save_checkpoint(str(tmp_path), 5, state, meta=plan_meta(src_plan))
+
+    # --- fresh process at the other world size -----------------------------
+    dst_plan = apply_plan_meta(_plan(w_to, mesh_shape=(w_to, 1)),
+                               plan_meta(src_plan))
+    template = _host_state(dst_plan, seed=9)
+    restored, step = restore_elastic(str(tmp_path), dst_plan, template)
+    assert step == 5
+    for g in dst_plan.groups:
+        a = state["emb"][str(g.gid)]
+        b = restored["emb"][str(g.gid)]
+        n = _logical(g)
+        assert np.shape(b.w)[0] == g.rows
+        np.testing.assert_array_equal(np.asarray(a.w)[:n], np.asarray(b.w)[:n])
+        np.testing.assert_array_equal(np.asarray(a.acc)[:n],
+                                      np.asarray(b.acc)[:n])
+        np.testing.assert_array_equal(np.asarray(a.counts)[:n],
+                                      np.asarray(b.counts)[:n])
+        k = np.asarray(b.cache.keys)
+        assert ((k == g.rows) | (k < n)).all()  # sentinels remapped
+        if a.proj is not None:
+            np.testing.assert_array_equal(np.asarray(a.proj.kernel),
+                                          np.asarray(b.proj.kernel))
+
+
+def test_checkpoint_portable_scale_down(tmp_path):
+    _portability_roundtrip(tmp_path, 8, 3)
+
+
+def test_checkpoint_portable_scale_up(tmp_path):
+    _portability_roundtrip(tmp_path, 2, 8)
+
+
+def test_stale_meta_checkpoint(tmp_path):
+    """A checkpoint without a recorded world (pre-elastic meta) restores at
+    the matching world and fails with the elastic diagnosis — not a bare
+    shape error — on a mismatch."""
+    plan2 = _plan(2)
+    state = _host_state(plan2)
+    meta = plan_meta(plan2)
+    del meta["world"], meta["mesh_shape"]  # simulate a pre-elastic sidecar
+    save_checkpoint(str(tmp_path), 3, state, meta=meta)
+
+    same = apply_plan_meta(_plan(2), meta)
+    restored, _ = restore_elastic(str(tmp_path), same, _host_state(same, 1))
+    np.testing.assert_array_equal(np.asarray(restored["emb"]["1"].w),
+                                  np.asarray(state["emb"]["1"].w))
+
+    other = apply_plan_meta(_plan(3), meta)
+    with pytest.raises(ValueError, match="different world size"):
+        restore_elastic(str(tmp_path), other, _host_state(other, 1))
+
+
+# --------------------------------------------------- publish/pickup handoff
+
+
+def test_publish_poll_load_roundtrip(tmp_path):
+    plan = _plan(2, mesh_shape=(2, 1))
+    state = _host_state(plan)
+    pub = str(tmp_path / "pub")
+    assert poll_published(pub) is None  # nothing there yet
+    publish_state(pub, 10, state, meta=plan_meta(plan))
+    assert poll_published(pub) == 10
+    assert poll_published(pub, last_step=10) is None  # already consumed
+    tmpl = {"emb": state["emb"], "dense": state["dense"]}
+    loaded, s = load_published(pub, tmpl)
+    assert s == 10 and set(loaded) == {"emb", "dense"}
+    np.testing.assert_array_equal(np.asarray(loaded["emb"]["0"].w),
+                                  np.asarray(state["emb"]["0"].w))
+
+    # newer delta supersedes; the pointer moves atomically
+    publish_state(pub, 20, state, meta=plan_meta(plan))
+    assert poll_published(pub, last_step=10) == 20
+
+    # cross-world pickup: a consumer at world 3 reshards the delta on load
+    plan3 = reshard_plan(plan, 3, PDB)
+    tmpl3 = {"emb": _host_state(plan3, seed=4)["emb"],
+             "dense": state["dense"]}
+    loaded3, _ = load_published(pub, tmpl3, plan=plan3)
+    g = plan3.groups[0]
+    n = _logical(g)
+    assert np.shape(loaded3["emb"][str(g.gid)].w)[0] == g.rows
+    np.testing.assert_array_equal(
+        np.asarray(loaded3["emb"][str(g.gid)].w)[:n],
+        np.asarray(state["emb"][str(g.gid)].w)[:n])
+    # without a plan the row mismatch must raise, not silently re-pad
+    with pytest.raises(ValueError, match="different world size"):
+        load_published(pub, tmpl3)
