@@ -1,0 +1,73 @@
+"""Calibration suite: run the cost-model microbench grid, write the
+backend-stamped calibration file, and report the curve fits.
+
+Rows land in the BENCH_<n>.json trajectory:
+
+``calibrate/<op>``
+    the fitted cost at the op's largest measured grid point (us), with the
+    curve-fit quality in ``derived``: ``pts`` = grid points measured,
+    ``resid`` = median relative residual |measured - predicted| / measured
+    over the RAW samples (duplicate-x medians + the monotonicity projection
+    make this nonzero exactly where the microbench was noisy or measured a
+    non-monotone artifact — an honest fit-quality number, not a tautology).
+``calibrate/predict_step``
+    the fitted model's predicted sparse-path us/step for the smoke plan
+    under its auto assignment — the number the Replanner's feedback loop
+    compares against measured step walltime.
+
+The calibration file itself goes to ``--calib-file`` (default: the repo-root
+``calibration.json`` next to the BENCH artifact so CI can assert on it
+without touching ``~/.cache``).
+"""
+import argparse
+import pathlib
+
+from benchmarks.common import emit
+
+
+def run(smoke: bool = False, calib_file=None):
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core.assign import compile_assignment
+    from repro.core.packing import make_plan
+    from repro.perf import fit_cost_model, run_calibration, save_calibration
+
+    grid = "tiny" if smoke else "small"
+    samples = run_calibration(grid, log=lambda s: print(f"[calib] {s}",
+                                                        flush=True))
+    model = fit_cost_model(samples)
+    path = pathlib.Path(calib_file) if calib_file else (
+        pathlib.Path(__file__).resolve().parent.parent / "calibration.json")
+    save_calibration(path, samples, model)
+    print(f"[calib] wrote {path}", flush=True)
+
+    for op, pts in samples.items():
+        curve = model.curves[op]
+        resid = np.median([abs(y - curve(x)) / max(y, 1e-9) for x, y in pts])
+        x_max = max(x for x, _ in pts)
+        emit(f"calibrate/{op}", curve(x_max),
+             f"pts={len(pts)},resid={resid:.3f},x_max={x_max:.0f}")
+
+    # end-to-end query: price the smoke plan's auto assignment from the fit
+    cfg = get_config("deepfm", smoke=True)
+    plan = make_plan(cfg, world=1, per_device_batch=32, hot_bytes=1 << 16,
+                     l2_bytes=1 << 17)
+    asg = compile_assignment(plan, cost_model=model)
+    plan.strategy = dict(asg.strategy)
+    emit("calibrate/predict_step", model.predict_step_us(plan),
+         "strategies=" + "+".join(sorted(set(asg.strategy.values()))))
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid (CI fast pass)")
+    ap.add_argument("--calib-file", default="",
+                    help="calibration file destination (default: repo-root "
+                         "calibration.json)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke, calib_file=args.calib_file or None)
+    from benchmarks.common import write_bench_json
+    write_bench_json()

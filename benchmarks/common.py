@@ -165,17 +165,25 @@ def bench_reshard(cfg: WDLConfig, gb: int, world_from: int = 8,
 # every emit() lands here too, so drivers can persist the run as one JSON
 # artifact (the repo-root perf trajectory: BENCH_<pr>.json)
 _ROWS: List[Dict[str, Any]] = []
-BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_8.json"
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_9.json"
 
 
-def emit(name: str, us: float, derived: str) -> None:
+def emit(name: str, us: float, derived: str, *,
+         interpreted: bool = False) -> None:
     # backend + interpret recorded per row: merged artifacts can mix runs
     # from the CPU rig (interpreter timings) and TPU (real kernels) without
-    # mislabeling — an interpret=true row must never be read as silicon
-    _ROWS.append({"name": name, "us_per_call": float(us), "derived": derived,
-                  "backend": str(jax.default_backend()),
-                  "interpret": bool(ops.interpret_mode())})
-    print(f"{name},{us:.1f},{derived}", flush=True)
+    # mislabeling — an interpret=true row must never be read as silicon.
+    # ``interpreted=True`` additionally flags a DERIVED row (a ratio) whose
+    # inputs ran on the Pallas interpreter: the ratio is honest about this
+    # rig but says nothing about silicon and must never be quoted as such.
+    row = {"name": name, "us_per_call": float(us), "derived": derived,
+           "backend": str(jax.default_backend()),
+           "interpret": bool(ops.interpret_mode())}
+    if interpreted:
+        row["interpreted"] = True
+    _ROWS.append(row)
+    tag = ",interpreted" if interpreted else ""
+    print(f"{name},{us:.1f},{derived}{tag}", flush=True)
 
 
 def write_bench_json(path: Optional[pathlib.Path] = None) -> pathlib.Path:
@@ -196,10 +204,10 @@ def write_bench_json(path: Optional[pathlib.Path] = None) -> pathlib.Path:
     fresh = {r["name"] for r in _ROWS}
     rows = [r for r in rows if r["name"] not in fresh] + _ROWS
     payload = {
-        "bench": ("PR8: elastic resharding across world-size changes "
-                  "(reshard_plan/reshard_state pure permutation, live "
-                  "--reshard-to, streaming driver with publish/pickup) on "
-                  "top of the PR7 frequency-adaptive dims"),
+        "bench": ("PR9: measured cost model (calibrated per-op curves "
+                  "driving strategy/tier/narrow decisions + online "
+                  "correction) with honest interpreter-flagged ratios, on "
+                  "top of the PR8 elastic substrate"),
         "rows": rows,
     }
     path.write_text(json.dumps(payload, indent=1) + "\n")

@@ -13,17 +13,19 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
-                    help="comma list: throughput,kernels,ablation,packing,"
-                         "interleave,cache,fields,scaling")
+                    help="comma list: throughput,kernels,calibrate,ablation,"
+                         "packing,interleave,cache,fields,scaling")
     args = ap.parse_args()
 
-    from benchmarks import (bench_ablation, bench_cache, bench_fields,
-                            bench_interleave, bench_kernels, bench_packing,
-                            bench_scaling, bench_throughput, common)
+    from benchmarks import (bench_ablation, bench_cache, bench_calibrate,
+                            bench_fields, bench_interleave, bench_kernels,
+                            bench_packing, bench_scaling, bench_throughput,
+                            common)
 
     suites = {
         "throughput": bench_throughput.run,   # paper Tab. III / Fig. 10
         "kernels": bench_kernels.run,         # fused sparse-kernel microbench
+        "calibrate": bench_calibrate.run,     # cost-model curve fits + file
         "ablation": bench_ablation.run,       # paper Tab. IV
         "packing": bench_packing.run,         # paper Tab. V
         "interleave": bench_interleave.run,   # paper Fig. 14

@@ -61,43 +61,63 @@ echo "$bench_out" | grep -q "/narrow_vs_full.*vparam_bytes x" \
 # world=8 -> world=4 permutation) must be timed on every CI run
 echo "$bench_out" | grep -q "/reshard_8to4.*rows_per_s=.*stall_ms=" \
     || { echo "ci.sh: bench smoke missing the 'reshard_8to4' row" >&2; exit 1; }
-test -f BENCH_8.json \
-    || { echo "ci.sh: bench smoke did not write BENCH_8.json" >&2; exit 1; }
-grep -q "picasso+fused" BENCH_8.json \
-    || { echo "ci.sh: BENCH_8.json has no fused-vs-reference rows" >&2; exit 1; }
-grep -q "overlap=on" BENCH_8.json \
-    || { echo "ci.sh: BENCH_8.json missing the overlap rows" >&2; exit 1; }
-grep -q "grad_compress" BENCH_8.json \
-    || { echo "ci.sh: BENCH_8.json missing the grad_compress rows" >&2; exit 1; }
+test -f BENCH_9.json \
+    || { echo "ci.sh: bench smoke did not write BENCH_9.json" >&2; exit 1; }
+grep -q "picasso+fused" BENCH_9.json \
+    || { echo "ci.sh: BENCH_9.json has no fused-vs-reference rows" >&2; exit 1; }
+grep -q "overlap=on" BENCH_9.json \
+    || { echo "ci.sh: BENCH_9.json missing the overlap rows" >&2; exit 1; }
+grep -q "grad_compress" BENCH_9.json \
+    || { echo "ci.sh: BENCH_9.json missing the grad_compress rows" >&2; exit 1; }
 # narrow rows land in the artifact, every row stamped with the backend and
-# the interpret flag (interpreter timings must never read as silicon), and
-# the derived vparam-bytes reduction clears 2x
+# the interpret flag (interpreter timings must never read as silicon), the
+# derived vparam-bytes reduction clears 2x, and derived *ratio* rows whose
+# inputs ran the Pallas interpreter carry the honest interpreted=true flag
+# (fused_vs_ref forces the fused path on, so its flag must equal the row's
+# interpret stamp — true on this CPU rig, false on real silicon)
 python - <<'PY'
 import json
-rows = {r["name"]: r for r in json.load(open("BENCH_8.json"))["rows"]}
+rows = {r["name"]: r for r in json.load(open("BENCH_9.json"))["rows"]}
 nar = [r for n, r in rows.items() if "/picasso_narrow" in n]
-assert nar, "BENCH_8.json missing the picasso_narrow rows"
+assert nar, "BENCH_9.json missing the picasso_narrow rows"
 assert all("backend" in r and "interpret" in r for r in rows.values()), \
-    "BENCH_8.json rows missing backend/interpret stamps"
+    "BENCH_9.json rows missing backend/interpret stamps"
 nvf = [r for n, r in rows.items() if "/narrow_vs_full" in n]
-assert nvf, "BENCH_8.json missing the narrow_vs_full rows"
+assert nvf, "BENCH_9.json missing the narrow_vs_full rows"
 rsh = [r for n, r in rows.items() if "/reshard_8to4" in n]
-assert rsh, "BENCH_8.json missing the reshard_8to4 rows"
+assert rsh, "BENCH_9.json missing the reshard_8to4 rows"
 assert all("rows_per_s=" in r["derived"] and "stall_ms=" in r["derived"]
            for r in rsh), "reshard rows missing rows_per_s/stall_ms"
 for r in nvf:
     x = float(r["derived"].split("x")[1].split(",")[0])
     assert x >= 2.0, f"narrow master reduction below 2x: {r['derived']}"
+fvr = [r for n, r in rows.items() if "/fused_vs_ref" in n]
+assert fvr, "BENCH_9.json missing the fused_vs_ref rows"
+for r in fvr:
+    assert r.get("interpreted", False) == r["interpret"], \
+        f"fused_vs_ref interpreted flag dishonest: {r}"
 print(f"ci.sh: narrow rows ok ({nvf[0]['derived']}, "
-      f"backend={nvf[0]['backend']}, interpret={nvf[0]['interpret']})")
+      f"backend={nvf[0]['backend']}, interpret={nvf[0]['interpret']}); "
+      f"fused_vs_ref interpreted={fvr[0].get('interpreted', False)}")
 PY
 # isolated fused-vs-reference microbench rows (gather+pool / dedup+adagrad /
 # gather+project / tier probe) merge into the same artifact
 python -m benchmarks.bench_kernels --smoke
-grep -q "kernels/gather_pool" BENCH_8.json \
-    || { echo "ci.sh: BENCH_8.json missing the kernel microbench rows" >&2; exit 1; }
-grep -q "kernels/gather_project" BENCH_8.json \
-    || { echo "ci.sh: BENCH_8.json missing the gather_project rows" >&2; exit 1; }
+grep -q "kernels/gather_pool" BENCH_9.json \
+    || { echo "ci.sh: BENCH_9.json missing the kernel microbench rows" >&2; exit 1; }
+grep -q "kernels/gather_project" BENCH_9.json \
+    || { echo "ci.sh: BENCH_9.json missing the gather_project rows" >&2; exit 1; }
+# the calibration suite merges per-op curve-fit rows (+ the fitted model's
+# end-to-end step prediction) into the same artifact
+calib_bench=$(mktemp -u)
+python -m benchmarks.bench_calibrate --smoke --calib-file "$calib_bench"
+test -f "$calib_bench" \
+    || { echo "ci.sh: bench_calibrate wrote no calibration file" >&2; exit 1; }
+rm -f "$calib_bench"
+grep -q "calibrate/gather_pool" BENCH_9.json \
+    || { echo "ci.sh: BENCH_9.json missing the calibrate curve rows" >&2; exit 1; }
+grep -q "calibrate/predict_step" BENCH_9.json \
+    || { echo "ci.sh: BENCH_9.json missing the calibrate/predict_step row" >&2; exit 1; }
 
 echo "== tier-1: fused-kernel interpret soak =="
 # every Pallas kernel (sparse + interaction) forced through the interpreter
@@ -132,6 +152,36 @@ assert last < first * 0.95, \
     f"loss did not decrease across the replan: {first:.4f} -> {last:.4f}"
 print(f"replan smoke: loss {first:.4f} -> {last:.4f} across >=1 migration")
 PY
+
+echo "== tier-1: calibration smoke =="
+# the measured cost model end to end: force-calibrate a tiny grid, assert the
+# stamped calibration file lands, the auto assignment is priced from the
+# fitted curves (not the constants), and the Replanner's measured-vs-
+# predicted feedback loop fires (corr= on the replan events)
+calib_dir=$(mktemp -d)
+calib_out=$(python -m repro.launch.train --arch deepfm --smoke --steps 80 \
+    --global-batch 64 --strategy auto --calibrate force \
+    --calib-file "$calib_dir/calib.json" --l2-budget 65536 --replan-iters 40 \
+    --learnable --lr-emb 0.1 --lr-dense 3e-3 --log-every 20)
+echo "$calib_out" | grep -v "^  step" >&2
+test -f "$calib_dir/calib.json" \
+    || { echo "ci.sh: calibration smoke wrote no calib file" >&2; exit 1; }
+echo "$calib_out" | grep -q "calib wrote calibration to" \
+    || { echo "ci.sh: calibration smoke never wrote the calibration" >&2; exit 1; }
+echo "$calib_out" | grep -q "calibrated curves" \
+    || { echo "ci.sh: assignment was not priced from the fitted curves" >&2; exit 1; }
+echo "$calib_out" | grep -q "corr=" \
+    || { echo "ci.sh: cost-model feedback loop never fired (no corr= event)" >&2; exit 1; }
+# cached reload: 'auto' must load the backend-stamped file, not re-bench
+reload_out=$(python -m repro.launch.train --arch deepfm --smoke --steps 10 \
+    --global-batch 64 --strategy auto --calibrate auto \
+    --calib-file "$calib_dir/calib.json" --log-every 10)
+echo "$reload_out" | grep -v "^  step" >&2
+echo "$reload_out" | grep -q "calib loaded calibration from" \
+    || { echo "ci.sh: cached calibration was not reloaded" >&2; exit 1; }
+! echo "$reload_out" | grep -q "grid points" \
+    || { echo "ci.sh: cached reload re-ran the microbenches" >&2; exit 1; }
+rm -rf "$calib_dir"
 
 echo "== tier-1: narrow replan smoke =="
 # frequency-adaptive dims end to end: train with the narrow cold master

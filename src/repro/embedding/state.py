@@ -129,12 +129,10 @@ def pin_l2_to_host(state: Any, mesh=None) -> Any:
     leaves are re-placed replicated-over-``mesh`` in host memory (so the
     mesh-wide replication the sharding specs declare is preserved — this
     requires ``mesh``; without one, or on backends without host memory kinds
-    such as the CPU test rig, the state is returned unchanged). Caveat: the
-    jitted train/serve steps build their in-shardings from
-    ``repro.dist.sharding`` specs, which carry no memory kind yet — entering
-    a step re-stages the tier into device memory until those specs also
-    carry ``pinned_host`` for L2 leaves (the remaining follow-up for true
-    host residency on TPU).
+    such as the CPU test rig, the state is returned unchanged). The jitted
+    train step keeps the placement across steps via memory-kind-aware
+    ``out_shardings`` (``repro.dist.sharding.emb_shardings(pin_l2=True)``),
+    so this initial ``device_put`` is the only bulk host copy.
     """
     from jax.sharding import NamedSharding, PartitionSpec
 
@@ -176,11 +174,11 @@ _PIN_L2_WARNED = False
 def warn_pin_l2_limits() -> None:
     """One-time ``--pin-l2`` caveat, printed by both launchers.
 
-    The sharding specs in ``repro.dist.sharding`` carry no memory kinds yet,
-    so even where pinning succeeds the jitted step re-stages the L2 tier into
-    device memory on entry; and on backends without a ``pinned_host`` memory
-    space the flag is a no-op outright. Either way the user asked for host
-    residency they are not fully getting — say so once."""
+    On backends that expose ``pinned_host`` the placement is now real across
+    steps (memory-kind-aware jit shardings,
+    ``repro.dist.sharding.emb_shardings(pin_l2=True)``); on backends without
+    such a memory space the flag is a no-op outright — the user asked for
+    host residency they are not getting, so say so once."""
     global _PIN_L2_WARNED
     if _PIN_L2_WARNED:
         return
@@ -189,11 +187,6 @@ def warn_pin_l2_limits() -> None:
         print("[pin-l2] warning: this backend exposes no 'pinned_host' "
               "memory kind — --pin-l2 is a no-op here (see the --pin-l2 "
               "row in README.md for the flag's documented limits)")
-    else:
-        print("[pin-l2] warning: sharding specs carry no memory kinds yet, "
-              "so the jitted step re-stages the L2 tier into device memory "
-              "between pinnings (documented limit — see the --pin-l2 row "
-              "in README.md and docs/architecture.md 'host tier' notes)")
 
 
 # ---------------------------------------------------------------------------

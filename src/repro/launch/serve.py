@@ -51,6 +51,17 @@ def main():
                     help="place L2 host-tier leaves in pinned host memory "
                          "(pin_l2_to_host; no-op on backends without "
                          "pinned_host, e.g. the CPU rig)")
+    ap.add_argument("--calibrate", default="off",
+                    choices=("auto", "force", "off"),
+                    help="measured cost model for the mixed/auto assignment: "
+                         "'auto' loads the backend-stamped calibration file "
+                         "(--calib-file) or benches once and writes it, "
+                         "'force' always re-benches, 'off' (default) keeps "
+                         "the constant model")
+    ap.add_argument("--calib-file", default="", metavar="PATH",
+                    help="calibration cache for --calibrate (default: "
+                         "~/.cache/repro/calibration.json); reused only when "
+                         "its backend stamp matches this process")
     ap.add_argument("--fused-kernels", default="auto",
                     choices=("auto", "on", "off"),
                     help="fused Pallas sparse kernels: 'auto' wherever "
@@ -92,11 +103,19 @@ def main():
     mesh = make_mesh(shape, axes)
     world = int(np.prod(shape))
 
+    cost_model = None
+    if args.calibrate != "off":
+        from repro.perf import get_cost_model
+        cost_model = get_cost_model(
+            args.calibrate, args.calib_file or None,
+            grid="tiny" if args.smoke else "small",
+            log=lambda s: print(f"[serve] calib {s}", flush=True))
+
     def serve_cfg(plan, per_dev_batch, use_cache=True):
         # serving has no micro pipeline: the engine issues the full local
         # batch per step, so that is the id volume the cost model sees
         spec = maybe_compile(plan, args.strategy, per_device_batch=per_dev_batch,
-                             use_cache=use_cache,
+                             use_cache=use_cache, cost_model=cost_model,
                              log=lambda s: print(f"[serve] {s}"))
         # record broadcast assignments (notably 'picasso_narrow', which
         # gates the master widths) on the plan before init_state sizes it

@@ -7,6 +7,7 @@ tolerance.
 """
 import argparse
 import os
+import time
 
 
 def main():
@@ -54,9 +55,23 @@ def main():
                     help="L2 byte envelope for replan re-budgets (default: "
                          "keep the plan's compile-time envelope)")
     ap.add_argument("--pin-l2", action="store_true",
-                    help="place L2 host-tier leaves in pinned host memory "
-                         "(pin_l2_to_host; no-op on backends without "
-                         "pinned_host, e.g. the CPU rig)")
+                    help="place L2 host-tier leaves (and narrow masters) in "
+                         "pinned host memory, kept there across steps by "
+                         "memory-kind-aware jit shardings (no-op on backends "
+                         "without pinned_host, e.g. the CPU rig)")
+    ap.add_argument("--calibrate", default="off",
+                    choices=("auto", "force", "off"),
+                    help="measured cost model for mixed/auto assignment and "
+                         "replanning: 'auto' loads the backend-stamped "
+                         "calibration file (--calib-file) or microbenches "
+                         "the priced ops once and writes it, 'force' always "
+                         "re-benches, 'off' keeps the hand-tuned constant "
+                         "model (the default; bit-identical to previous "
+                         "releases)")
+    ap.add_argument("--calib-file", default="", metavar="PATH",
+                    help="calibration cache location for --calibrate "
+                         "(default: ~/.cache/repro/calibration.json); reused "
+                         "only when its backend stamp matches this process")
     ap.add_argument("--fused-kernels", default="auto",
                     choices=("auto", "on", "off"),
                     help="fused Pallas sparse kernels (gather+pool custom "
@@ -163,6 +178,14 @@ def main():
     mesh = make_mesh(shape, axes)
     world = int(np.prod(shape))
 
+    cost_model = None
+    if args.calibrate != "off":
+        from repro.perf import get_cost_model
+        cost_model = get_cost_model(
+            args.calibrate, args.calib_file or None,
+            grid="tiny" if args.smoke else "small",
+            log=lambda s: print(f"[train] calib {s}", flush=True))
+
     cfg = get_config(args.arch, smoke=args.smoke)
     plan = make_plan(cfg, world=world, per_device_batch=args.global_batch // world,
                      enable_packing=not args.no_packing,
@@ -191,7 +214,25 @@ def main():
         # per_device_batch=None: training issues plan.microbatch ids per step
         strategy = maybe_compile(plan, args.strategy,
                                  use_cache=not args.no_cache,
+                                 cost_model=cost_model,
                                  log=lambda s: print(f"[train] {s}"))
+
+    def wrap_timed(fn):
+        """Measured-vs-predicted feedback: time each step (blocking on the
+        loss scalar) and feed the wall time to the Replanner. Only wrapped
+        when a calibrated cost model is live — the per-step sync it costs is
+        exactly what the feedback loop needs to be honest."""
+        if cost_model is None:
+            return fn
+
+        def timed(state, batch):
+            t0 = time.perf_counter()
+            out = fn(state, batch)
+            jax.block_until_ready(out[1]["loss"])
+            if replanner is not None:
+                replanner.observe_timing((time.perf_counter() - t0) * 1e6)
+            return out
+        return timed
 
     def build_step(plan):
         """(Re)build the jitted step against a plan revision."""
@@ -202,22 +243,24 @@ def main():
                            use_fused_kernels=args.fused_kernels,
                            overlap=args.overlap,
                            grad_compress=args.grad_compress,
+                           pin_l2=args.pin_l2,
                            lr_emb=args.lr_emb, lr_dense=args.lr_dense)
-        return model, tcfg, make_train_step(model, plan, mesh, axes,
-                                            args.global_batch, tcfg)[0]
+        return model, tcfg, wrap_timed(make_train_step(
+            model, plan, mesh, axes, args.global_batch, tcfg)[0])
 
+    replanner = None
     model, tcfg, step_fn = build_step(plan)
     state = init_state(model, plan, jax.random.PRNGKey(args.seed), mesh=mesh, axes=axes)
     if args.pin_l2:
-        warn_pin_l2_limits()  # one-time: specs carry no memory kinds yet
+        warn_pin_l2_limits()  # one-time: unsupported-backend no-op notice
         state = pin_l2_to_host(state, mesh)
 
-    replanner = None
     if args.replan_iters:
         replanner = Replanner(
             plan, mesh, axes, strategy=args.strategy,
             hot_bytes=args.replan_hot_bytes, l2_bytes=args.replan_l2_bytes,
             use_cache=not args.no_cache, cache_update=tcfg.cache_update,
+            cost_model=cost_model, pin_l2=args.pin_l2,
             log=lambda s: print(f"[train] replan {s}", flush=True))
 
     print(f"[train] {cfg.name}: {len(plan.groups)} packed groups, "

@@ -48,7 +48,7 @@ import numpy as np
 
 from repro.core.assign import apply_assignment, compile_assignment, resolve_assignment
 from repro.core.packing import PicassoPlan, revise_plan
-from repro.dist.sharding import emb_specs, to_named
+from repro.dist.sharding import emb_shardings
 from repro.embedding.state import migrate_state, tier_gates
 from repro.engine.engine import export_stats
 
@@ -153,6 +153,13 @@ class ReplanEvent:
     new_rev: int                  # == old_rev when the recompile was a no-op
     changed: Dict[int, str]       # gid -> delta description (empty = no-op)
     window: Dict[str, int]        # metric sums observed since the last replan
+    # cost-model feedback for this window (calibrated runs only): the
+    # measured-vs-predicted sparse-path ratio and the correction factor the
+    # NEXT recompile's scores were blended with (None = no cost model or no
+    # timings observed this window)
+    measured_us: Optional[float] = None
+    predicted_us: Optional[float] = None
+    correction: Optional[float] = None
 
     @property
     def migrated(self) -> bool:
@@ -160,6 +167,10 @@ class ReplanEvent:
 
     def describe(self) -> str:
         w = " ".join(f"{k}={v}" for k, v in sorted(self.window.items()))
+        if self.correction is not None:
+            w = (f"measured={self.measured_us:.0f}us "
+                 f"predicted={self.predicted_us:.0f}us "
+                 f"corr={self.correction:.3f}" + (" " + w if w else ""))
         if not self.changed:
             return (f"step {self.step}: plan rev {self.old_rev} unchanged "
                     f"(recompile is a no-op){'  [' + w + ']' if w else ''}")
@@ -192,6 +203,15 @@ class Replanner:
     use_cache/use_l2/cache_update: MUST mirror the TrainConfig flags the
         train engine runs with (same contract as ``make_flush_fn``).
     per_device_batch/overrides: forwarded to ``compile_assignment``.
+    cost_model: optional calibrated ``repro.perf.CostModel``. When set, every
+        recompile prices candidates from its curves, and the online feedback
+        loop engages: per-step wall times fed through ``observe_timing`` are
+        compared against ``cost_model.predict_step_us`` at each replan and
+        the measured/predicted ratio is blended into ``cost_model.correction``
+        (geometric EMA) so the *next* window's scores self-correct.
+    pin_l2: mirrors the trainer's ``--pin-l2``: migrated state is re-placed
+        with memory-kind-aware shardings so the L2 tier / narrow masters stay
+        in pinned host memory across replans (no-op on backends without one).
     """
 
     def __init__(self, plan: PicassoPlan, mesh, axes, *,
@@ -203,6 +223,8 @@ class Replanner:
                  cache_update: str = "psum",
                  per_device_batch: Optional[int] = None,
                  overrides: Optional[Mapping[Union[int, str], str]] = None,
+                 cost_model=None,
+                 pin_l2: bool = False,
                  log: Optional[Callable[[str], None]] = None):
         self.plan = plan
         self.mesh = mesh
@@ -216,9 +238,12 @@ class Replanner:
         self.cache_update = cache_update
         self.per_device_batch = per_device_batch
         self.overrides = overrides
+        self.cost_model = cost_model
+        self.pin_l2 = pin_l2
         self.log = log or (lambda s: None)
         self.events: List[ReplanEvent] = []
         self._window: Dict[str, Any] = {}  # device-scalar running sums
+        self._timings_us: List[float] = []  # measured step wall times (host)
         self._auto = isinstance(strategy, str) and strategy in ("mixed", "auto")
         if not plan.strategy:
             # record the run's assignment so tier gating (migration + the
@@ -240,10 +265,35 @@ class Replanner:
             if k.startswith("overflow") or k.startswith("cache_hits"):
                 self._window[k] = self._window.get(k, 0) + v
 
+    def observe_timing(self, step_us: float) -> None:
+        """Record one measured step wall time (host float, us) for the cost
+        model's feedback loop. Cheap and safe to call every step; ignored
+        when no calibrated cost model is attached."""
+        if self.cost_model is not None and step_us > 0.0:
+            self._timings_us.append(float(step_us))
+
     def _close_window(self) -> Dict[str, int]:
         window = {k: int(v) for k, v in self._window.items()}
         self._window = {}
         return window
+
+    def _feedback(self, stats: Dict[int, np.ndarray]
+                  ) -> Tuple[Optional[float], Optional[float], Optional[float]]:
+        """Blend this window's measured-vs-predicted ratio into the cost
+        model's correction. The prediction is made with the correction the
+        window's scores actually used (pre-update), so the EMA converges to
+        the fixed point where corrected prediction == measurement. The first
+        steps of a window include compile time — the median is robust to
+        that outlier."""
+        if self.cost_model is None or not self._timings_us:
+            self._timings_us = []
+            return None, None, None
+        measured = float(np.median(self._timings_us))
+        self._timings_us = []
+        predicted = self.cost_model.predict_step_us(
+            self.plan, stats, per_device_batch=self.per_device_batch)
+        corr = self.cost_model.observe_measured(measured, predicted)
+        return measured, predicted, corr
 
     # -------------------------------------------------------------- replan
     def _recompile(self, stats: Dict[int, np.ndarray]) -> PicassoPlan:
@@ -261,7 +311,8 @@ class Replanner:
             asg = compile_assignment(
                 new_plan, stats=stats,
                 per_device_batch=self.per_device_batch,
-                overrides=self.overrides, enable_cache=self.use_cache)
+                overrides=self.overrides, enable_cache=self.use_cache,
+                cost_model=self.cost_model)
             apply_assignment(new_plan, asg)
         else:
             apply_assignment(new_plan, resolve_assignment(
@@ -279,23 +330,31 @@ class Replanner:
         jitted step/flush against ``new_plan`` and adopt both.
         """
         stats = export_stats(self.plan, state["emb"])
+        # feedback first: the correction lands in the cost model BEFORE the
+        # recompile below prices this revision's candidates
+        measured, predicted, corr = self._feedback(stats)
         new_plan = self._recompile(stats)
         changed = plan_delta(self.plan, new_plan)
         window = self._close_window()
         if not changed:
             ev = ReplanEvent(step=step, old_rev=self.plan.rev,
-                             new_rev=self.plan.rev, changed={}, window=window)
+                             new_rev=self.plan.rev, changed={}, window=window,
+                             measured_us=measured, predicted_us=predicted,
+                             correction=corr)
             self.events.append(ev)
             self.log(ev.describe())
             return None
         migrated = migrate_state(self.plan, new_plan, state,
                                  use_cache=self.use_cache, use_l2=self.use_l2,
                                  cache_update=self.cache_update)
-        shardings = to_named(self.mesh, emb_specs(new_plan, self.axes))
+        shardings = emb_shardings(new_plan, self.mesh, self.axes,
+                                  pin_l2=self.pin_l2)
         new_state = {**migrated,
                      "emb": jax.device_put(migrated["emb"], shardings)}
         ev = ReplanEvent(step=step, old_rev=self.plan.rev,
-                         new_rev=new_plan.rev, changed=changed, window=window)
+                         new_rev=new_plan.rev, changed=changed, window=window,
+                         measured_us=measured, predicted_us=predicted,
+                         correction=corr)
         self.events.append(ev)
         self.log(ev.describe())
         self.plan = new_plan

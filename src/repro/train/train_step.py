@@ -94,6 +94,11 @@ class TrainConfig:
     # 'fp16' | 'topk'; repro.optim.grad_compression.ROUTED_MODES) — applied
     # inside every strategy's backward collective
     grad_compress: str = "none"
+    # mirror of the launcher's --pin-l2: the jitted step's out_shardings pin
+    # the L2 tier (and narrow masters) to pinned_host memory so the initial
+    # pin_l2_to_host placement survives across steps. Inert on backends
+    # without a host memory kind (the CPU rig) — the step is byte-identical.
+    pin_l2: bool = False
     eps: float = 1e-8
 
 
@@ -223,7 +228,17 @@ def make_train_step(model: WDLModel, plan: PicassoPlan, mesh, axes: Tuple[str, .
                       check_vma=False)
         return f(state, batch)
 
-    step_fn = jax.jit(wrapped, donate_argnums=(0,))
+    jit_kw = {}
+    if tcfg.pin_l2:
+        from repro.dist.sharding import host_memory_kind, state_shardings
+        if host_memory_kind() is not None:
+            # memory-kind-aware out shardings: without these the first step
+            # would return the L2 tier / narrow masters in device memory and
+            # the --pin-l2 placement would silently evaporate
+            jit_kw["out_shardings"] = (
+                state_shardings(plan, mesh, axes, dense0, opt0, pin_l2=True),
+                to_named(mesh, mspecs))
+    step_fn = jax.jit(wrapped, donate_argnums=(0,), **jit_kw)
     return step_fn, sspecs
 
 

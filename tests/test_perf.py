@@ -1,0 +1,334 @@
+"""Measured cost model (repro.perf): curve fits, calibration-file lifecycle,
+constants-parity when off, calibrated decision flips, and the Replanner's
+online measured-vs-predicted correction loop."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.configs.base import FeatureField, InteractionSpec, WDLConfig
+from repro.core import assign
+from repro.core.assign import compile_assignment, estimate_l2_gain, estimate_skew
+from repro.core.packing import make_plan
+from repro.perf import (CORRECTION_BOUNDS, PRICED_OPS, CostCurve, CostModel,
+                        backend_stamp, fit_cost_model, get_cost_model,
+                        load_calibration, load_samples, run_calibration,
+                        save_calibration, synthetic_cost_model)
+
+
+def _cfg(fields):
+    return WDLConfig(name="t", fields=tuple(fields), n_dense=0,
+                     interactions=(InteractionSpec("fm"),), mlp_dims=(8,))
+
+
+def _mixed_plan(world=1, per_device_batch=16, **kw):
+    """Same fixture shape as tests/test_assign.py: one tiny replicable group
+    (dim 8) + one large budgeted group (dim 16)."""
+    fields = [FeatureField("tiny", 64, 8, max_len=1, pooling="sum"),
+              FeatureField("big", 50_000, 16, max_len=1, pooling="sum")]
+    kw.setdefault("hot_bytes", 1 << 14)
+    return make_plan(_cfg(fields), world=world,
+                     per_device_batch=per_device_batch, **kw)
+
+
+def _synth_samples(per_elem=1e-3, fixed=1.0):
+    return {op: [(1.0, fixed + per_elem), (1e6, fixed + per_elem * 1e6)]
+            for op in PRICED_OPS}
+
+
+# ----------------------------------------------------------------- curves
+
+
+def test_curve_fit_is_monotone_even_on_noisy_samples():
+    # measured: bigger work came out CHEAPER at one grid point (jit noise)
+    c = CostCurve.fit([(100, 50.0), (200, 30.0), (400, 80.0)])
+    xs = np.linspace(0, 1000, 200)
+    ys = np.array([c(x) for x in xs])
+    assert np.all(np.diff(ys) >= -1e-12)          # monotone everywhere
+    assert c(200) >= c(100)                        # the noisy dip is repaired
+    # duplicate work sizes collapse to their median
+    d = CostCurve.fit([(10, 1.0), (10, 100.0), (10, 3.0)])
+    assert d(10) == pytest.approx(3.0)
+
+
+def test_curve_clamps_left_and_extrapolates_right():
+    c = CostCurve.fit([(100, 10.0), (200, 30.0)])
+    assert c(1) == pytest.approx(10.0)             # launch-overhead floor
+    assert c(0) == pytest.approx(10.0)
+    assert c(300) == pytest.approx(50.0)           # last-segment slope
+    one = CostCurve.fit([(100, 10.0)])             # degenerate single point
+    assert one(5) == one(100) == one(1e9) == pytest.approx(10.0)
+
+
+def test_curve_json_round_trip():
+    c = CostCurve.fit([(100, 10.0), (200, 30.0), (400, 31.0)])
+    c2 = CostCurve.from_json(json.loads(json.dumps(c.to_json())))
+    for x in (0, 50, 150, 350, 1e4):
+        assert c2(x) == pytest.approx(c(x))
+
+
+def test_scores_monotone_in_rows_and_dim():
+    m = synthetic_cost_model()
+    base = m.score_candidates(world=4, n=256, d=16, skew=0.3,
+                              l2_rows=100, l2_gain=0.2,
+                              narrow_dim=4, narrow_gain=0.5)
+    more_n = m.score_candidates(world=4, n=512, d=16, skew=0.3,
+                                l2_rows=100, l2_gain=0.2,
+                                narrow_dim=4, narrow_gain=0.5)
+    more_d = m.score_candidates(world=4, n=256, d=32, skew=0.3,
+                                l2_rows=100, l2_gain=0.2,
+                                narrow_dim=4, narrow_gain=0.5)
+    assert set(base) == {"ps", "hybrid", "picasso", "picasso_l2",
+                         "picasso_narrow"}
+    for k in base:
+        assert more_n[k] >= base[k], k            # more ids never cheaper
+        assert more_d[k] >= base[k], k            # wider rows never cheaper
+
+
+def test_model_requires_every_priced_op():
+    curves = {op: CostCurve.fit([(1, 1.0)]) for op in PRICED_OPS[:-1]}
+    with pytest.raises(ValueError, match="missing curves"):
+        CostModel(curves=curves)
+
+
+# ---------------------------------------------------------- file lifecycle
+
+
+def test_calibration_file_round_trip(tmp_path):
+    samples = _synth_samples()
+    model = fit_cost_model(samples, hit_prior=0.31)
+    p = tmp_path / "calib.json"
+    save_calibration(p, samples, model)
+    loaded = load_calibration(p)
+    assert loaded is not None
+    assert loaded.backend == backend_stamp()["backend"]
+    assert loaded.hit_prior == pytest.approx(0.31)
+    for op in PRICED_OPS:
+        for x in (1.0, 123.0, 5e5, 2e6):
+            assert loaded.op_us(op, x) == pytest.approx(model.op_us(op, x))
+    # raw samples persist next to the fit (residual reporting)
+    assert load_samples(p) == {op: [(x, y) for x, y in pts]
+                               for op, pts in samples.items()}
+
+
+def test_backend_stamp_mismatch_forces_refit(tmp_path, monkeypatch):
+    samples = _synth_samples()
+    p = tmp_path / "calib.json"
+    save_calibration(p, samples, fit_cost_model(samples))
+    data = json.loads(p.read_text())
+    data["backend"] = "tpu-v99"                   # calibrated elsewhere
+    p.write_text(json.dumps(data))
+    assert load_calibration(p) is None            # stale stamp -> no reuse
+
+    # get_cost_model('auto') must therefore re-bench and overwrite the file
+    calls = {"n": 0}
+
+    def fake_run(grid="small", log=None):
+        calls["n"] += 1
+        return _synth_samples()
+    monkeypatch.setattr("repro.perf.calibration.run_calibration", fake_run)
+    m = get_cost_model("auto", p, grid="tiny")
+    assert calls["n"] == 1 and m is not None
+    assert load_calibration(p) is not None        # re-stamped for us
+    # ... and with a valid file, 'auto' loads without re-benching
+    m2 = get_cost_model("auto", p, grid="tiny")
+    assert calls["n"] == 1 and m2 is not None
+    # 'force' always re-benches
+    get_cost_model("force", p, grid="tiny")
+    assert calls["n"] == 2
+    assert get_cost_model("off", p) is None
+
+
+def test_corrupt_calibration_file_is_ignored(tmp_path):
+    p = tmp_path / "calib.json"
+    p.write_text("{not json")
+    assert load_calibration(p) is None
+    assert load_samples(p) is None
+
+
+def test_real_calibration_tiny_grid_fits_all_ops(tmp_path):
+    """One real microbench pass on the tiny grid: every priced op gets a
+    positive, finite, monotone curve and the file round-trips."""
+    samples = run_calibration("tiny")
+    assert set(samples) == set(PRICED_OPS)
+    model = fit_cost_model(samples)
+    p = tmp_path / "calib.json"
+    save_calibration(p, samples, model)
+    loaded = load_calibration(p)
+    for op in PRICED_OPS:
+        lo, hi = loaded.op_us(op, 1.0), loaded.op_us(op, 1e8)
+        assert 0.0 < lo <= hi < 1e12
+
+
+# ------------------------------------------------- assignment integration
+
+
+def test_cost_model_off_is_bitwise_constants_assignment():
+    """cost_model=None must be byte-for-byte today's constant model: same
+    picks, same scores, same formulas."""
+    plan = _mixed_plan()
+    asg = compile_assignment(plan, cost_model=None)
+    base = compile_assignment(plan)
+    assert asg.strategy == base.strategy
+    for gid, s in asg.scores.items():
+        b = base.scores[gid]
+        assert s.units == b.units == "elems"
+        assert s.costs == b.costs
+        g = plan.group(gid)
+        n, d = float(max(s.ids_per_shard, 1)), float(g.dim)
+        # the constants formulas, verbatim
+        assert s.costs["ps"] == pytest.approx(1 * n * (d + 1.0))
+        assert s.costs["hybrid"] == pytest.approx(
+            2.0 * n * (1.0 + d) + assign.ROUTE_OVERHEAD_ELEMS)
+        assert s.costs["picasso"] == pytest.approx(
+            2.0 * n * (1.0 - s.skew) * (1.0 + d)
+            + assign.ROUTE_OVERHEAD_ELEMS)
+
+
+def test_synthetic_calibration_flips_a_known_groups_strategy():
+    """The fixture's tiny group is 'ps' under constants; a calibration where
+    the all_gather wire is measured catastrophically slow must flip it off
+    the PS path — decisions now come from the curves."""
+    plan = _mixed_plan()
+    tiny_gid = next(g.gid for g in plan.groups
+                    if g.tables[0].name == "tiny")
+    base = compile_assignment(plan)
+    assert base.strategy[tiny_gid] == "ps"
+    slow_ag = synthetic_cost_model({"wire_ag": 1e3})
+    asg = compile_assignment(plan, cost_model=slow_ag)
+    assert asg.scores[tiny_gid].units == "us"
+    assert asg.scores[tiny_gid].costs["ps"] > asg.scores[tiny_gid].costs["hybrid"]
+    assert asg.strategy[tiny_gid] != "ps"
+    # and a model where routing dispatch is the expensive part keeps ps
+    slow_route = synthetic_cost_model({"wire_a2a": 1e3})
+    asg2 = compile_assignment(plan, cost_model=slow_route)
+    assert asg2.strategy[tiny_gid] == "ps"
+
+
+def test_hit_prior_threads_through_estimators():
+    plan = _mixed_plan()
+    big = next(g for g in plan.groups if g.tables[0].name == "big")
+    cache_rows = plan.cache_rows[big.gid]
+    assert 0 < cache_rows < big.rows
+    m = synthetic_cost_model(hit_prior=0.37)
+    assert estimate_skew(big, cache_rows) == pytest.approx(
+        assign.DEFAULT_HIT_RATIO)
+    assert estimate_skew(big, cache_rows, cost_model=m) == pytest.approx(0.37)
+    # the L2 prior branch scales by the same measured prior
+    l2 = estimate_l2_gain(big, cache_rows, cache_rows, cost_model=m)
+    assert l2 == pytest.approx((1.0 - 0.37) * 0.37 * 1.0)
+
+
+def test_predict_step_prices_the_recorded_strategy():
+    plan = _mixed_plan(l2_bytes=1 << 15)
+    m = synthetic_cost_model()
+    asg = compile_assignment(plan, cost_model=m)
+    plan.strategy = dict(asg.strategy)
+    total = m.predict_step_us(plan)
+    assert total > 0.0
+    # doubling the correction doubles the (uniformly scaled) prediction
+    m.correction = 2.0
+    assert m.predict_step_us(plan) == pytest.approx(2.0 * total)
+
+
+# ------------------------------------------------------- online correction
+
+
+def test_correction_converges_on_synthetic_misprediction():
+    """The hardware is consistently 3x slower than calibration says: the
+    geometric EMA must converge to corr ~= 3 and the corrected prediction
+    to the measurement."""
+    m = synthetic_cost_model()
+    base = m.score_candidates(world=1, n=1024, d=16)["picasso"] / m.correction
+    measured = 3.0 * base
+    for _ in range(40):
+        predicted = base * m.correction
+        m.observe_measured(measured, predicted)
+    assert m.correction == pytest.approx(3.0, rel=0.02)
+    assert base * m.correction == pytest.approx(measured, rel=0.02)
+    # degenerate inputs are ignored, bounds are enforced
+    c = m.correction
+    assert m.observe_measured(0.0, 100.0) == c
+    assert m.observe_measured(100.0, 0.0) == c
+    for _ in range(300):
+        m.observe_measured(1e12, 1.0)
+    assert m.correction == CORRECTION_BOUNDS[1]
+
+
+def test_replanner_feedback_end_to_end(mesh1, axes):
+    """Replanner + calibrated model on a real (tiny) train loop: step
+    timings observed, prediction made from harvested stats, correction
+    blended and reported on the ReplanEvent."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.data.synthetic import batch_stream
+    from repro.dist.sharding import batch_specs, to_named
+    from repro.models.wdl import WDLModel
+    from repro.runtime import Replanner
+    from repro.train.train_step import TrainConfig, init_state, make_train_step
+
+    gb = 32
+    cfg = get_config("deepfm", smoke=True)
+    plan = make_plan(cfg, world=1, per_device_batch=gb, hot_bytes=1 << 14,
+                     flush_iters=5, warmup_iters=2)
+    model = WDLModel(cfg, plan)
+    state = init_state(model, plan, jax.random.PRNGKey(0), mesh=mesh1,
+                       axes=axes)
+    step, _ = make_train_step(model, plan, mesh1, axes, gb,
+                              TrainConfig(strategy="auto"))
+    cm = synthetic_cost_model()
+    rp = Replanner(plan, mesh1, axes, strategy="auto", cost_model=cm)
+    stream = batch_stream(cfg, gb, seed=1)
+    for _ in range(4):
+        raw = next(stream)
+        batch = jax.device_put(raw, to_named(mesh1, batch_specs(raw, axes)))
+        state, m = step(state, batch)
+        rp.observe(m)
+        rp.observe_timing(5_000.0)               # 5ms measured walls
+    out = rp.maybe_replan(state, step=4)
+    if out is not None:                           # migration may or may not fire
+        _, state = out
+    ev = rp.events[-1]
+    assert ev.measured_us == pytest.approx(5_000.0)
+    assert ev.predicted_us is not None and ev.predicted_us > 0.0
+    assert ev.correction is not None
+    assert cm.correction == ev.correction != 1.0
+    assert "corr=" in ev.describe()
+    # the blend moved toward the measurement: corrected prediction for the
+    # same window sits between the raw prediction and the measured wall
+    raw_pred = ev.predicted_us
+    corrected = raw_pred * ev.correction / 1.0    # corr started at 1.0
+    lo, hi = sorted((raw_pred, ev.measured_us))
+    assert lo <= corrected <= hi
+    # a window with no timings leaves the correction untouched (None fields)
+    rp.maybe_replan(state, step=8)
+    ev2 = rp.events[-1]
+    assert ev2.correction is None and cm.correction == ev.correction
+
+
+# --------------------------------------------------- memory-kind shardings
+
+
+def test_pin_l2_shardings_inert_without_host_memory():
+    """On backends without a pinned_host space (the CPU rig) the pin-aware
+    builders must be bit-identical to the plain ones, and the capability
+    probe must say so."""
+    from repro.dist.sharding import (emb_shardings, emb_specs,
+                                     host_memory_kind, to_named)
+    from repro.launch.mesh import make_test_mesh
+
+    mesh = make_test_mesh(1, 1)
+    plan = _mixed_plan(l2_bytes=1 << 15)
+    axes = ("data", "model")
+    if host_memory_kind() is None:
+        assert emb_shardings(plan, mesh, axes, pin_l2=True) == \
+            to_named(mesh, emb_specs(plan, axes))
+    else:  # a real host memory space: L2 leaves must carry it
+        pinned = emb_shardings(plan, mesh, axes, pin_l2=True)
+        for g in plan.groups:
+            st = pinned[str(g.gid)]
+            if st.l2 is not None:
+                assert st.l2.rows.memory_kind == host_memory_kind()
+    assert emb_shardings(plan, mesh, axes, pin_l2=False) == \
+        to_named(mesh, emb_specs(plan, axes))
