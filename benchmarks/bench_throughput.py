@@ -21,6 +21,12 @@ PR8 row: 'reshard_8to4' — the elastic-reshard stall (host-side world=8 state
 permuted onto world=4 row cuts and re-placed), reported as rows/sec migrated
 plus the stall walltime a live ``--reshard-to`` pays mid-run.
 
+PR10 rows: 'guard=on' (the anomaly guard in the loop: a non-donating step
+plus one host sync of loss/grad_norm per step) and 'guard_overhead' (the
+guarded/unguarded time ratio — the honest price of per-step numeric
+anomaly detection; the computed values are bitwise identical on clean
+data, pinned by tests/test_faults.py).
+
 ``--smoke`` runs one model at a reduced batch with fewer timing iters — the
 fast CI pass wired into scripts/ci.sh (and the only place the auto-assignment
 and two-tier cache paths are executed on every CI run)."""
@@ -32,8 +38,8 @@ from repro.core.packing import make_plan, plan_narrow
 from repro.kernels import ops
 from repro.train.train_step import TrainConfig
 
-from benchmarks.common import (bench_replan_ips, bench_reshard,
-                               bench_train_ips, emit)
+from benchmarks.common import (bench_guard_ips, bench_replan_ips,
+                               bench_reshard, bench_train_ips, emit)
 
 GB = 128
 
@@ -132,6 +138,10 @@ def run(smoke: bool = False):
                               TrainConfig(strategy="allgather_rows",
                                           use_cache=False),
                               iters=iters, enable_cache=False)
+        # the anomaly guard in the loop: non-donating step + one host sync
+        # of loss/grad_norm per step; the ratio vs the plain picasso row is
+        # the whole detection price (the numerics are bitwise identical)
+        grd = bench_guard_ips(cfg, gb, iters=iters)
         speedup = ps["us_per_call"] / pic["us_per_call"]
         emit(f"throughput/{name}/picasso", pic["us_per_call"], f"ips={pic['ips']:.0f}")
         emit(f"throughput/{name}/picasso+fused", fus["us_per_call"],
@@ -163,6 +173,10 @@ def run(smoke: bool = False):
              f"ips={cmp_fp16['ips']:.0f}")
         emit(f"throughput/{name}/grad_compress=topk", cmp_topk["us_per_call"],
              f"ips={cmp_topk['ips']:.0f}")
+        emit(f"throughput/{name}/guard=on", grd["us_per_call"],
+             f"ips={grd['ips']:.0f}")
+        emit(f"throughput/{name}/guard_overhead", 0.0,
+             "x{:.2f}".format(grd["us_per_call"] / pic["us_per_call"]))
         emit(f"throughput/{name}/mp_nodedup", nod["us_per_call"],
              f"ips={nod['ips']:.0f}")
         emit(f"throughput/{name}/allgather_rows", agr["us_per_call"],

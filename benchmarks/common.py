@@ -41,7 +41,7 @@ def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
 
 
 def train_setup(cfg: WDLConfig, gb: int, mesh=None, tcfg: Optional[TrainConfig] = None,
-                seed: int = 0, **plan_kw):
+                seed: int = 0, donate: bool = True, **plan_kw):
     mesh = mesh or mesh1()
     world = int(mesh.devices.size)
     plan_kw.setdefault("hot_bytes", 1 << 16)
@@ -57,7 +57,8 @@ def train_setup(cfg: WDLConfig, gb: int, mesh=None, tcfg: Optional[TrainConfig] 
                            use_cache=tcfg.use_cache)
     model = WDLModel(cfg, plan)
     state = init_state(model, plan, jax.random.PRNGKey(seed), mesh=mesh, axes=AXES)
-    step, _ = make_train_step(model, plan, mesh, AXES, gb, tcfg or TrainConfig())
+    step, _ = make_train_step(model, plan, mesh, AXES, gb, tcfg or TrainConfig(),
+                              donate=donate)
     batch = make_batch(cfg, gb, np.random.default_rng(seed))
     batch = jax.device_put(batch, to_named(mesh, batch_specs(batch, AXES)))
 
@@ -82,6 +83,31 @@ def bench_train_ips(cfg: WDLConfig, gb: int, tcfg: Optional[TrainConfig] = None,
     us = float(np.median(ts) * 1e6)
     return {"us_per_call": us, "ips": gb / (us / 1e6),
             "hits": int(m["cache_hits"]), "overflow": int(m["overflow"])}
+
+
+def bench_guard_ips(cfg: WDLConfig, gb: int, iters: int = 5,
+                    **plan_kw) -> Dict[str, float]:
+    """The guard-overhead row: ips with the anomaly guard in the loop
+    (non-donating step + per-step host sync of loss/grad_norm) vs the
+    default donating unguarded step. The overhead is the honest price of
+    per-step numeric detection; the computed values are bitwise identical
+    (tests/test_faults.py)."""
+    from repro.runtime.guard import AnomalyGuard
+
+    stepper, state, plan, _ = train_setup(cfg, gb, donate=False, **plan_kw)
+    # train_setup returns a stepper closed over its fixed batch; the guard
+    # only needs the (state, batch)->(state, metrics) shape, so wrap it
+    guard = AnomalyGuard(lambda s, _b: stepper(s))
+    state, m = guard(state, None)  # compile + warm
+    state, m = guard(state, None)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        state, m = guard(state, None)
+        ts.append(time.perf_counter() - t0)
+    us = float(np.median(ts) * 1e6)
+    return {"us_per_call": us, "ips": gb / (us / 1e6),
+            "accepted": guard.accepted, "rejected": guard.rejected}
 
 
 def bench_replan_ips(cfg: WDLConfig, gb: int, iters: int = 5,
@@ -165,7 +191,7 @@ def bench_reshard(cfg: WDLConfig, gb: int, world_from: int = 8,
 # every emit() lands here too, so drivers can persist the run as one JSON
 # artifact (the repo-root perf trajectory: BENCH_<pr>.json)
 _ROWS: List[Dict[str, Any]] = []
-BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_9.json"
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_10.json"
 
 
 def emit(name: str, us: float, derived: str, *,
@@ -204,10 +230,10 @@ def write_bench_json(path: Optional[pathlib.Path] = None) -> pathlib.Path:
     fresh = {r["name"] for r in _ROWS}
     rows = [r for r in rows if r["name"] not in fresh] + _ROWS
     payload = {
-        "bench": ("PR9: measured cost model (calibrated per-op curves "
-                  "driving strategy/tier/narrow decisions + online "
-                  "correction) with honest interpreter-flagged ratios, on "
-                  "top of the PR8 elastic substrate"),
+        "bench": ("PR10: fault-tolerant runtime (anomaly guard, verified "
+                  "checkpoints, chaos harness, degraded-mode serving) with "
+                  "the guard_overhead cost pinned, on top of the PR9 "
+                  "measured cost model"),
         "rows": rows,
     }
     path.write_text(json.dumps(payload, indent=1) + "\n")

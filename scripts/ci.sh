@@ -61,14 +61,23 @@ echo "$bench_out" | grep -q "/narrow_vs_full.*vparam_bytes x" \
 # world=8 -> world=4 permutation) must be timed on every CI run
 echo "$bench_out" | grep -q "/reshard_8to4.*rows_per_s=.*stall_ms=" \
     || { echo "ci.sh: bench smoke missing the 'reshard_8to4' row" >&2; exit 1; }
-test -f BENCH_9.json \
-    || { echo "ci.sh: bench smoke did not write BENCH_9.json" >&2; exit 1; }
-grep -q "picasso+fused" BENCH_9.json \
-    || { echo "ci.sh: BENCH_9.json has no fused-vs-reference rows" >&2; exit 1; }
-grep -q "overlap=on" BENCH_9.json \
-    || { echo "ci.sh: BENCH_9.json missing the overlap rows" >&2; exit 1; }
-grep -q "grad_compress" BENCH_9.json \
-    || { echo "ci.sh: BENCH_9.json missing the grad_compress rows" >&2; exit 1; }
+# the anomaly-guard cost rows: guarded ips (non-donating step + per-step
+# host sync) and the derived guarded/unguarded ratio must be pinned in the
+# trajectory on every CI run — the honest price of per-step detection
+echo "$bench_out" | grep -q "/guard=on" \
+    || { echo "ci.sh: bench smoke missing the 'guard=on' row" >&2; exit 1; }
+echo "$bench_out" | grep -q "/guard_overhead.*x" \
+    || { echo "ci.sh: bench smoke missing the 'guard_overhead' row" >&2; exit 1; }
+test -f BENCH_10.json \
+    || { echo "ci.sh: bench smoke did not write BENCH_10.json" >&2; exit 1; }
+grep -q "picasso+fused" BENCH_10.json \
+    || { echo "ci.sh: BENCH_10.json has no fused-vs-reference rows" >&2; exit 1; }
+grep -q "overlap=on" BENCH_10.json \
+    || { echo "ci.sh: BENCH_10.json missing the overlap rows" >&2; exit 1; }
+grep -q "grad_compress" BENCH_10.json \
+    || { echo "ci.sh: BENCH_10.json missing the grad_compress rows" >&2; exit 1; }
+grep -q "guard_overhead" BENCH_10.json \
+    || { echo "ci.sh: BENCH_10.json missing the guard_overhead row" >&2; exit 1; }
 # narrow rows land in the artifact, every row stamped with the backend and
 # the interpret flag (interpreter timings must never read as silicon), the
 # derived vparam-bytes reduction clears 2x, and derived *ratio* rows whose
@@ -77,22 +86,22 @@ grep -q "grad_compress" BENCH_9.json \
 # interpret stamp — true on this CPU rig, false on real silicon)
 python - <<'PY'
 import json
-rows = {r["name"]: r for r in json.load(open("BENCH_9.json"))["rows"]}
+rows = {r["name"]: r for r in json.load(open("BENCH_10.json"))["rows"]}
 nar = [r for n, r in rows.items() if "/picasso_narrow" in n]
-assert nar, "BENCH_9.json missing the picasso_narrow rows"
+assert nar, "BENCH_10.json missing the picasso_narrow rows"
 assert all("backend" in r and "interpret" in r for r in rows.values()), \
-    "BENCH_9.json rows missing backend/interpret stamps"
+    "BENCH_10.json rows missing backend/interpret stamps"
 nvf = [r for n, r in rows.items() if "/narrow_vs_full" in n]
-assert nvf, "BENCH_9.json missing the narrow_vs_full rows"
+assert nvf, "BENCH_10.json missing the narrow_vs_full rows"
 rsh = [r for n, r in rows.items() if "/reshard_8to4" in n]
-assert rsh, "BENCH_9.json missing the reshard_8to4 rows"
+assert rsh, "BENCH_10.json missing the reshard_8to4 rows"
 assert all("rows_per_s=" in r["derived"] and "stall_ms=" in r["derived"]
            for r in rsh), "reshard rows missing rows_per_s/stall_ms"
 for r in nvf:
     x = float(r["derived"].split("x")[1].split(",")[0])
     assert x >= 2.0, f"narrow master reduction below 2x: {r['derived']}"
 fvr = [r for n, r in rows.items() if "/fused_vs_ref" in n]
-assert fvr, "BENCH_9.json missing the fused_vs_ref rows"
+assert fvr, "BENCH_10.json missing the fused_vs_ref rows"
 for r in fvr:
     assert r.get("interpreted", False) == r["interpret"], \
         f"fused_vs_ref interpreted flag dishonest: {r}"
@@ -103,10 +112,10 @@ PY
 # isolated fused-vs-reference microbench rows (gather+pool / dedup+adagrad /
 # gather+project / tier probe) merge into the same artifact
 python -m benchmarks.bench_kernels --smoke
-grep -q "kernels/gather_pool" BENCH_9.json \
-    || { echo "ci.sh: BENCH_9.json missing the kernel microbench rows" >&2; exit 1; }
-grep -q "kernels/gather_project" BENCH_9.json \
-    || { echo "ci.sh: BENCH_9.json missing the gather_project rows" >&2; exit 1; }
+grep -q "kernels/gather_pool" BENCH_10.json \
+    || { echo "ci.sh: BENCH_10.json missing the kernel microbench rows" >&2; exit 1; }
+grep -q "kernels/gather_project" BENCH_10.json \
+    || { echo "ci.sh: BENCH_10.json missing the gather_project rows" >&2; exit 1; }
 # the calibration suite merges per-op curve-fit rows (+ the fitted model's
 # end-to-end step prediction) into the same artifact
 calib_bench=$(mktemp -u)
@@ -114,10 +123,10 @@ python -m benchmarks.bench_calibrate --smoke --calib-file "$calib_bench"
 test -f "$calib_bench" \
     || { echo "ci.sh: bench_calibrate wrote no calibration file" >&2; exit 1; }
 rm -f "$calib_bench"
-grep -q "calibrate/gather_pool" BENCH_9.json \
-    || { echo "ci.sh: BENCH_9.json missing the calibrate curve rows" >&2; exit 1; }
-grep -q "calibrate/predict_step" BENCH_9.json \
-    || { echo "ci.sh: BENCH_9.json missing the calibrate/predict_step row" >&2; exit 1; }
+grep -q "calibrate/gather_pool" BENCH_10.json \
+    || { echo "ci.sh: BENCH_10.json missing the calibrate curve rows" >&2; exit 1; }
+grep -q "calibrate/predict_step" BENCH_10.json \
+    || { echo "ci.sh: BENCH_10.json missing the calibrate/predict_step row" >&2; exit 1; }
 
 echo "== tier-1: fused-kernel interpret soak =="
 # every Pallas kernel (sparse + interaction) forced through the interpreter
@@ -270,7 +279,63 @@ serve_out=$(python -m repro.launch.serve --arch deepfm --smoke --batch 64 \
 echo "$serve_out" >&2
 echo "$serve_out" | grep -q "reloaded published step 45" \
     || { echo "ci.sh: serve never picked up the published delta" >&2; exit 1; }
+
+echo "== tier-1: degraded-mode serve smoke =="
+# tear the published delta on disk (chaos 'torn@0' truncates a leaf before
+# the first request): the poller must detect the checksum mismatch, keep
+# the last good state, back off, and the server must keep answering
+torn_out=$(python -m repro.launch.serve --arch deepfm --smoke --batch 64 \
+    --devices 2 --mesh 1x2 --n-requests 4 --reload-dir "$stream_dir/pub" \
+    --chaos "torn@0")
+echo "$torn_out" >&2
+echo "$torn_out" | grep -q "chaos: tearing published delta" \
+    || { echo "ci.sh: torn-delta smoke never tore the delta" >&2; exit 1; }
+echo "$torn_out" | grep -q "failed verification.*keeping last good state" \
+    || { echo "ci.sh: serve did not degrade on the torn delta" >&2; exit 1; }
+echo "$torn_out" | grep -q "p50=" \
+    || { echo "ci.sh: serve stopped answering through the torn delta" >&2; exit 1; }
 rm -rf "$stream_dir"
+
+echo "== tier-1: chaos recovery smoke =="
+# the full failure matrix in one guarded run: a NaN batch (guard rejects,
+# state kept, batch skipped), a corrupted checkpoint on disk (restore
+# quarantines + falls back), and an injected crash (Supervisor classifies
+# transient, restores the last verified checkpoint, rewinds the stream) —
+# and the run must still learn end to end. Recovery events log to stderr,
+# so capture both streams. Indices: saves land at 20/40/...; ckpt@41
+# corrupts step_40 right after it lands, crash@45 forces the restore to
+# quarantine step_40 and fall back to step_20.
+chaos_dir=$(mktemp -d)
+chaos_out=$(python -m repro.launch.train --arch deepfm --smoke --steps 120 \
+    --global-batch 64 --guard --chaos "nan@7,ckpt@41,crash@45" \
+    --ckpt-dir "$chaos_dir/ckpt" --ckpt-every 20 \
+    --learnable --lr-emb 0.1 --lr-dense 3e-3 --log-every 1 2>&1)
+echo "$chaos_out" | grep -v "^  step" >&2
+echo "$chaos_out" | grep -q "guard: rejected step (nonfinite" \
+    || { echo "ci.sh: chaos smoke — guard never rejected the NaN batch" >&2; exit 1; }
+echo "$chaos_out" | grep -q "quarantined corrupt checkpoint step 40" \
+    || { echo "ci.sh: chaos smoke — corrupt checkpoint was not quarantined" >&2; exit 1; }
+echo "$chaos_out" | grep -q "rolled back to step 20" \
+    || { echo "ci.sh: chaos smoke — Supervisor never rolled back to step 20" >&2; exit 1; }
+test -d "$chaos_dir"/ckpt/step_00000040.corrupt \
+    || { echo "ci.sh: chaos smoke — quarantined checkpoint dir missing" >&2; exit 1; }
+CHAOS_OUT="$chaos_out" python - <<'PY'
+import os, re, statistics as st
+losses = [float(m) for m in re.findall(r"loss=([0-9.]+)", os.environ["CHAOS_OUT"])]
+assert len(losses) >= 60, f"too few logged losses: {len(losses)}"
+first, last = st.median(losses[:10]), st.median(losses[-20:])
+assert last < first * 0.95, \
+    f"loss did not decrease through the chaos plan: {first:.4f} -> {last:.4f}"
+print(f"chaos smoke: loss {first:.4f} -> {last:.4f} through a NaN batch, "
+      "a corrupted checkpoint, and an injected crash")
+PY
+
+echo "== tier-1: guarded-vs-unguarded parity =="
+# the guard's contract on clean data: bitwise-identical training. The
+# pytest matrix pins it (tests/test_faults.py::test_guard_clean_parity);
+# run that single test here so the CI log states the contract explicitly.
+python -m pytest -q tests/test_faults.py::test_guard_clean_parity
+rm -rf "$chaos_dir"
 
 echo "== tier-1: docs sync =="
 # every registry strategy must be documented in README.md +

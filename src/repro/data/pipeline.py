@@ -75,6 +75,57 @@ class Prefetcher:
             self._thread.join(timeout=0.05)
 
 
+class ReplayableStream:
+    """Seekable wrapper over a positional stream factory.
+
+    ``make_iter(start)`` must return an iterator whose first item is the
+    batch at absolute position ``start`` (see ``synthetic.batch_stream``'s
+    per-index seeding). The wrapper tracks the current position so a
+    supervisor can ``seek(step)`` after a checkpoint rollback and replay the
+    exact batches the failed stretch consumed — without it, every batch
+    between the checkpoint step and the failure step is silently skipped.
+
+    ``rewrap(make_iter)`` swaps the factory at the current position (e.g.
+    re-binding device placement after an elastic reshard changes the mesh).
+    Underlying iterators with a ``close()`` (Prefetcher) are closed on
+    seek/rewrap/close so their worker threads are reaped.
+    """
+
+    def __init__(self, make_iter: Callable[[int], Iterator], start: int = 0):
+        self._make = make_iter
+        self.pos = start
+        self._it: Optional[Iterator] = None
+
+    def _open(self):
+        if self._it is None:
+            self._it = self._make(self.pos)
+        return self._it
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = next(self._open())
+        self.pos += 1
+        return item
+
+    def seek(self, step: int) -> "ReplayableStream":
+        if step != self.pos or self._it is None:
+            self.close()
+            self.pos = step
+        return self
+
+    def rewrap(self, make_iter: Callable[[int], Iterator]) -> "ReplayableStream":
+        self.close()
+        self._make = make_iter
+        return self
+
+    def close(self):
+        it, self._it = self._it, None
+        if it is not None and hasattr(it, "close"):
+            it.close()
+
+
 def device_put_stream(gen: Iterator, mesh, specs_fn: Callable, depth: int = 2
                       ) -> Iterator:
     """Prefetch + async device_put with the right shardings."""

@@ -56,10 +56,18 @@ def make_batch(cfg: WDLConfig, batch: int, rng: Optional[np.random.Generator] = 
 
 
 def batch_stream(cfg: WDLConfig, batch: int, seed: int = 0, zipf_a: float = 1.2,
-                 learnable: bool = False) -> Iterator[Dict]:
-    rng = np.random.default_rng(seed)
+                 learnable: bool = False, start: int = 0) -> Iterator[Dict]:
+    """Infinite batch stream, seekable in O(1): batch ``i`` is generated from
+    ``SeedSequence((seed, i))`` independent of every other batch, so a stream
+    opened at ``start=i`` yields exactly what the original stream yielded at
+    position ``i``. This is what makes Supervisor rollback-replay *exact* —
+    after a restore to step ``s`` the stream reopens at ``start=s`` instead
+    of silently continuing past the skipped batches."""
+    i = start
     while True:
+        rng = np.random.default_rng(np.random.SeedSequence((seed, i)))
         yield make_batch(cfg, batch, rng, zipf_a, learnable=learnable)
+        i += 1
 
 
 def batch_spec(cfg: WDLConfig, batch: int) -> Dict:

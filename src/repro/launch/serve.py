@@ -74,7 +74,15 @@ def main():
                          "the emb+dense state in place — no restart; deltas "
                          "published at a different world size are resharded "
                          "onto this server's mesh on load")
+    ap.add_argument("--chaos", default="", metavar="SPEC",
+                    help="fault injection for the serve reload path: "
+                         "'torn@i' tears the newest published delta on disk "
+                         "before request i (needs --reload-dir) — degraded-"
+                         "mode serving must keep answering from the last "
+                         "good state instead of crashing")
     args = ap.parse_args()
+    if args.chaos and not args.reload_dir:
+        ap.error("--chaos needs --reload-dir (faults target published deltas)")
 
     if args.devices:
         os.environ["XLA_FLAGS"] = (
@@ -177,27 +185,34 @@ def main():
     serve = make_serve_step(model, plan, mesh, axes, args.batch, scfg=scfg)
     rng = np.random.default_rng(0)
     lat = []
-    last_pub = -1
+    poller = None
+    if args.reload_dir:
+        # degraded-mode delta pickup: a torn/corrupt/pruned/mismatched delta
+        # is skipped with capped backoff and the server keeps answering from
+        # its last good state (PublishPoller only returns verified loads)
+        from repro.runtime import PublishPoller, place_state
+        poller = PublishPoller(args.reload_dir, plan=plan,
+                               log=lambda s: print(s, flush=True))
+    chaos_plan = None
+    if args.chaos:
+        from repro.runtime import parse_fault_plan
+        from repro.runtime.chaos import tear_published
+        chaos_plan = parse_fault_plan(args.chaos)
+        torn_fired = set()
     for i in range(args.n_requests):
-        if args.reload_dir:
-            from repro.runtime import place_state, poll_published, load_published
-            s_new = poll_published(args.reload_dir, last_pub)
-            if s_new is not None:
-                try:
-                    loaded, s_pub = load_published(
-                        args.reload_dir,
-                        {"emb": state["emb"], "dense": state["dense"]},
-                        plan=plan, step=s_new)
-                    state = {**state,
-                             **place_state(loaded, plan, mesh, axes)}
-                    last_pub = s_pub
-                    print(f"[serve] reloaded published step {s_pub} "
-                          f"from {args.reload_dir}", flush=True)
-                except (ValueError, KeyError, FileNotFoundError) as e:
-                    # a delta shaped by a NEWER plan revision than the one we
-                    # started under: keep serving the current model
-                    print(f"[serve] skipped published step {s_new}: {e}",
-                          flush=True)
+        if chaos_plan is not None and i in chaos_plan.torn_publish \
+                and i not in torn_fired:
+            torn_fired.add(i)
+            print(f"[serve] chaos: tearing published delta before request "
+                  f"{i}", flush=True)
+            tear_published(args.reload_dir)
+        if poller is not None:
+            out = poller.poll({"emb": state["emb"], "dense": state["dense"]})
+            if out is not None:
+                loaded, s_pub = out
+                state = {**state, **place_state(loaded, plan, mesh, axes)}
+                print(f"[serve] reloaded published step {s_pub} "
+                      f"from {args.reload_dir}", flush=True)
         b = make_batch(cfg, args.batch, rng)
         b = jax.device_put(b, to_named(mesh, batch_specs(b, axes)))
         t0 = time.perf_counter()

@@ -125,6 +125,20 @@ def main():
                          "an atomic LATEST pointer a running "
                          "repro.launch.serve --reload-dir process picks up "
                          "without restart")
+    ap.add_argument("--guard", action="store_true",
+                    help="numeric anomaly guard: wrap the jitted step with "
+                         "NaN/Inf-loss and grad-norm-spike detection (EMA "
+                         "threshold); an anomalous step is rejected in-jit "
+                         "(prior state kept bitwise, batch skipped, event "
+                         "logged), and K consecutive rejections roll back "
+                         "to the last verified checkpoint")
+    ap.add_argument("--chaos", default="", metavar="SPEC",
+                    help="deterministic fault injection for recovery-path "
+                         "testing: comma-separated kind@step tokens, kinds "
+                         "nan (poison batch), crash (raise at step), ckpt "
+                         "(corrupt newest checkpoint on disk), torn (tear "
+                         "the published delta); e.g. 'nan@7,crash@13,"
+                         "ckpt@20,torn@45'")
     ap.add_argument("--no-cache", action="store_true")
     ap.add_argument("--no-interleave", action="store_true")
     ap.add_argument("--no-packing", action="store_true")
@@ -150,20 +164,30 @@ def main():
             f"--xla_force_host_platform_device_count={args.devices} "
             + os.environ.get("XLA_FLAGS", ""))
 
+    import logging
+
     import jax
     import numpy as np
 
+    # recovery events (rollbacks, quarantines, counter resets) are the
+    # operator's window into the fault-tolerance subsystem: surface the
+    # repro loggers at INFO without turning every library chatty
+    logging.basicConfig(format="[%(name)s] %(levelname)s: %(message)s")
+    logging.getLogger("repro").setLevel(logging.INFO)
+
     from repro.configs import get_config
     from repro.core.packing import make_plan
-    from repro.data.pipeline import device_put_stream
+    from repro.data.pipeline import ReplayableStream, device_put_stream
     from repro.data.synthetic import batch_stream
-    from repro.dist.sharding import batch_specs
+    from repro.dist.sharding import batch_specs, to_named
     from repro.embedding.state import pin_l2_to_host, warn_pin_l2_limits
     from repro.launch.mesh import make_mesh
     from repro.models.wdl import WDLModel
-    from repro.runtime import (Replanner, apply_plan_meta, make_submesh,
-                               parse_mesh_shape, plan_meta, publish_state,
-                               reshard_live, restore_elastic, run_stream)
+    from repro.runtime import (AnomalyGuard, ChaosController, Replanner,
+                               apply_plan_meta, make_submesh,
+                               parse_fault_plan, parse_mesh_shape, plan_meta,
+                               publish_state, reshard_live, restore_elastic,
+                               run_stream)
     from repro.train.checkpoint import (AsyncCheckpointer, latest_step,
                                         load_checkpoint_meta)
     from repro.train.fault_tolerance import Supervisor
@@ -234,8 +258,22 @@ def main():
             return out
         return timed
 
+    guard = None
+    if args.guard:
+        guard = AnomalyGuard(log=lambda s: print(f"[train] {s}", flush=True))
+    chaos = None
+    if args.chaos:
+        chaos = ChaosController(parse_fault_plan(args.chaos))
+        print(f"[train] chaos plan armed: {args.chaos}", flush=True)
+
+    cur_shardings = None  # NamedShardings of the live step's state output
+
     def build_step(plan):
-        """(Re)build the jitted step against a plan revision."""
+        """(Re)build the jitted step against a plan revision. The guard (if
+        armed) re-wraps the fresh step, carrying its EMA/event history across
+        replan/reshard rebuilds; ``cur_shardings`` tracks the state placement
+        so the Supervisor restores onto the correct devices."""
+        nonlocal cur_shardings
         model = WDLModel(cfg, plan)
         spec = "mixed" if plan.strategy else strategy
         tcfg = TrainConfig(strategy=spec, use_cache=not args.no_cache,
@@ -245,8 +283,15 @@ def main():
                            grad_compress=args.grad_compress,
                            pin_l2=args.pin_l2,
                            lr_emb=args.lr_emb, lr_dense=args.lr_dense)
-        return model, tcfg, wrap_timed(make_train_step(
-            model, plan, mesh, axes, args.global_batch, tcfg)[0])
+        # the guard needs the prior state alive to reject a step, so a
+        # guarded step is built without buffer donation (bitwise-identical
+        # numerics, higher peak memory — see runtime/guard.py)
+        raw, sspecs = make_train_step(model, plan, mesh, axes,
+                                      args.global_batch, tcfg,
+                                      donate=guard is None)
+        cur_shardings = to_named(mesh, sspecs)
+        fn = guard.rebind(raw) if guard is not None else raw
+        return model, tcfg, wrap_timed(fn)
 
     replanner = None
     model, tcfg, step_fn = build_step(plan)
@@ -267,13 +312,23 @@ def main():
           f"micro={plan.microbatch}, ilv={len(plan.interleave)} waves, "
           f"world={world}, plan rev={plan.rev}")
 
-    # the raw generator is held separately from the device-side Prefetcher:
-    # an elastic reshard closes the old Prefetcher (its queued batches are
-    # committed to the OLD mesh) and re-wraps the same source over the new one
-    raw_stream = batch_stream(cfg, args.global_batch, seed=args.seed,
-                              learnable=args.learnable)
-    stream = device_put_stream(raw_stream, mesh,
-                               lambda b: batch_specs(b, axes))
+    # positional stream factory: ``make_source(i)`` opens the synthetic
+    # stream at absolute batch index ``i`` on the CURRENT mesh (read at call
+    # time, so a post-reshard rewrap targets the new device set). The
+    # ReplayableStream on top gives the Supervisor an exact rewind after a
+    # checkpoint rollback; prefetched-but-unconsumed batches lost when a
+    # reshard closes the Prefetcher are simply regenerated, not skipped.
+    def make_source(start):
+        return device_put_stream(
+            batch_stream(cfg, args.global_batch, seed=args.seed,
+                         learnable=args.learnable, start=start),
+            mesh, lambda b: batch_specs(b, axes))
+
+    stream = ReplayableStream(make_source)
+    if chaos is not None:
+        stream = chaos.wrap_stream(stream)
+
+    active_ckpt = None  # the live AsyncCheckpointer (chaos ckpt@ targets it)
 
     def on_metrics(step, m):
         if replanner is not None:
@@ -281,6 +336,14 @@ def main():
         if step % args.log_every == 0:
             print(f"  step {step:5d} loss={float(m['loss']):.4f} "
                   f"hits={int(m['cache_hits'])} ovf={int(m['overflow'])}", flush=True)
+        if chaos is not None:
+            if args.ckpt_dir:
+                chaos.after_checkpoint(step, args.ckpt_dir, active_ckpt)
+            # raised here (inside the Supervisor's try block / run_stream's
+            # step loop) a crash@ fault exercises the real recovery path in
+            # BOTH driver modes: in-process restore+rewind under the
+            # Supervisor, process-restart resume under --stream
+            chaos.injector(step)
 
     reshard_pending = bool(args.reshard_to)
 
@@ -288,8 +351,7 @@ def main():
         """In-place elastic reshard to --reshard-to: recut the plan, permute
         the state exactly, re-place it on the sub-mesh, rebuild the jitted
         step, and re-wrap the batch source. One-shot."""
-        nonlocal plan, model, tcfg, step_fn, mesh, world, stream, \
-            reshard_pending
+        nonlocal plan, model, tcfg, step_fn, mesh, world, reshard_pending
         new_shape = parse_mesh_shape(args.reshard_to, len(axes))
         new_world = int(np.prod(new_shape))
         reshard_pending = False  # applied (or a no-op) — never re-fires
@@ -309,9 +371,10 @@ def main():
             use_cache=not args.no_cache, cache_update=tcfg.cache_update)
         mesh, world = new_mesh, new_world
         model, tcfg, step_fn = build_step(plan)  # build_step reads `mesh`
-        stream.close()
-        stream = device_put_stream(raw_stream, mesh,
-                                   lambda b: batch_specs(b, axes))
+        # same factory, new mesh (make_source reads `mesh` at call time):
+        # the old Prefetcher is closed and the stream reopens at its current
+        # position on the new device set
+        stream.rewrap(make_source)
         if replanner is not None:
             replanner.plan, replanner.mesh = plan, mesh
         if args.pin_l2:
@@ -344,11 +407,13 @@ def main():
         # ignored); each segment boundary checkpoints, publishes, and may
         # apply the in-place reshard — no restart anywhere in the lifecycle
         ckpt = AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
+        active_ckpt = ckpt
         start = 0
         if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
             state, start = restore_elastic(
                 args.ckpt_dir, plan, state, mesh=mesh, axes=axes,
                 log=lambda s: print(f"[train] elastic {s}", flush=True))
+            stream.seek(start)  # resume replays from the exact batch index
             print(f"[train] stream resumed at step {start}", flush=True)
 
         publisher = None
@@ -358,6 +423,8 @@ def main():
                               meta=plan_meta(plan))
                 print(f"[stream] published step {step} -> {args.publish_dir}",
                       flush=True)
+                if chaos is not None:
+                    chaos.after_publish(step, args.publish_dir)
 
         def on_segment(seg, step, state):
             if reshard_pending and step >= args.reshard_at:
@@ -379,7 +446,9 @@ def main():
         return
 
     if args.ckpt_dir:
-        sup = Supervisor(args.ckpt_dir, ckpt_every=args.ckpt_every)
+        sup = Supervisor(args.ckpt_dir, ckpt_every=args.ckpt_every,
+                         shardings=cur_shardings)
+        active_ckpt = sup.ckpt
         # keep the plan sidecar on EVERY checkpoint: it records the world/
         # mesh the state was written under (elastic-restore detection) and —
         # for replanned runs — the plan revision; dropping it would make the
@@ -394,6 +463,7 @@ def main():
                 log=lambda s: print(f"[train] elastic {s}", flush=True))
         else:
             state, start = sup.maybe_restore(state)
+        stream.seek(start)  # resume replays from the exact batch index
         step = start
         # known limitation: a failure-restore *inside* a segment replays the
         # restored window without re-hitting an already-passed replan
@@ -404,7 +474,7 @@ def main():
         while step < args.steps:
             seg_end = next_boundary(step)
             state = sup.run(state, step_fn, stream, seg_end, start_step=step,
-                            on_metrics=on_metrics)
+                            on_metrics=on_metrics, shardings=cur_shardings)
             step = seg_end
             if reshard_pending and step >= args.reshard_at \
                     and step < args.steps:

@@ -24,7 +24,8 @@ from pathlib import Path
 from typing import Any, Callable, Dict, Iterable, Optional, Tuple
 
 from repro.embedding.state import reshard_state
-from repro.train.checkpoint import restore_checkpoint, save_checkpoint
+from repro.train.checkpoint import (CheckpointCorrupt, available_steps,
+                                    restore_checkpoint, save_checkpoint)
 
 
 def run_stream(state: Any, step_fn: Callable, batches: Iterable, *,
@@ -110,8 +111,19 @@ def poll_published(publish_dir: str, last_step: int = -1) -> Optional[int]:
     try:
         s = int(p.read_text().strip())
     except (ValueError, OSError):
-        return None
-    return s if s > last_step else None
+        s = None
+    if s is not None and s > last_step:
+        # LATEST may name a step whose directory was already pruned: the
+        # publisher GCs old deltas (keep=) *then* swings the pointer, so a
+        # poller racing a rapid double-publish can read a stale LATEST.
+        if (Path(publish_dir) / f"step_{s:08d}" / "manifest.json").exists():
+            return s
+        s = None
+    if s is None:
+        # torn/stale pointer: fall back to the newest delta actually on disk
+        fresh = [x for x in available_steps(publish_dir) if x > last_step]
+        return fresh[-1] if fresh else None
+    return None
 
 
 def load_published(publish_dir: str, template: Any,
@@ -128,3 +140,58 @@ def load_published(publish_dir: str, template: Any,
     if plan is not None:
         state = reshard_state(plan, state)
     return state, s
+
+
+class PublishPoller:
+    """Degraded-mode delta consumption for a serving process.
+
+    ``poll(template)`` returns ``(host_state, step)`` when a *verified* new
+    delta loaded cleanly, else ``None`` — and a serving loop that only swaps
+    on a non-None result keeps answering from its last good state through
+    every failure mode a publisher can throw at it: torn LATEST pointer,
+    pruned step directory, corrupt/truncated leaf files, deltas shaped by a
+    different world (when ``plan`` is None), or a publish stall.
+
+    Failed loads back off by *skipping polls* (capped exponential: after f
+    consecutive failures, ``min(2**f, max_backoff)`` calls return early
+    without touching the filesystem), so a wedged publisher can't turn the
+    request path into a disk-scan loop. A clean load resets the backoff. A
+    corrupt delta's step is remembered so the poller re-considers the same
+    LATEST only after the backoff window, not on every request.
+    """
+
+    def __init__(self, publish_dir: str, plan=None, *, max_backoff: int = 8,
+                 log: Optional[Callable[[str], None]] = None):
+        self.publish_dir = publish_dir
+        self.plan = plan
+        self.max_backoff = max_backoff
+        self.log = log or (lambda s: None)
+        self.last_step = -1      # newest step successfully swapped in
+        self.failures = 0        # consecutive failed load attempts
+        self.skips_left = 0      # polls to skip before retrying
+        self.loads = 0           # successful hot-swaps (observability)
+
+    def poll(self, template: Any) -> Optional[Tuple[Any, int]]:
+        if self.skips_left > 0:
+            self.skips_left -= 1
+            return None
+        step = poll_published(self.publish_dir, self.last_step)
+        if step is None:
+            return None
+        try:
+            state, s = load_published(self.publish_dir, template,
+                                      plan=self.plan, step=step)
+        except (CheckpointCorrupt, ValueError, KeyError,
+                FileNotFoundError) as e:
+            self.failures += 1
+            self.skips_left = min(2 ** self.failures, self.max_backoff)
+            self.log(f"[serve] delta step {step} failed verification "
+                     f"({type(e).__name__}: {e}); keeping last good state "
+                     f"(step {self.last_step}), backing off "
+                     f"{self.skips_left} polls")
+            return None
+        self.failures = 0
+        self.skips_left = 0
+        self.last_step = s
+        self.loads += 1
+        return state, s

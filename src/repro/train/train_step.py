@@ -111,8 +111,16 @@ def _slice_micro(x, i, micro):
 
 
 def make_train_step(model: WDLModel, plan: PicassoPlan, mesh, axes: Tuple[str, ...],
-                    global_batch: int, tcfg: TrainConfig = TrainConfig()):
-    """Returns (jitted_step, state_specs_pytree). step(state, batch) -> (state, metrics)."""
+                    global_batch: int, tcfg: TrainConfig = TrainConfig(),
+                    donate: bool = True):
+    """Returns (jitted_step, state_specs_pytree). step(state, batch) -> (state, metrics).
+
+    ``donate=False`` keeps the input state buffers alive across the call —
+    required by the anomaly guard, which must be able to *reject* a step by
+    returning the prior state (donation would have freed it). Donation only
+    affects buffer aliasing, never the computed values, so a non-donating
+    step is bitwise identical to the donating one at higher peak memory.
+    """
     world = _mesh_world(mesh, axes)
     assert global_batch % world == 0, (global_batch, world)
     b_local = global_batch // world
@@ -209,7 +217,11 @@ def make_train_step(model: WDLModel, plan: PicassoPlan, mesh, axes: Tuple[str, .
             emb = lax.cond(do_flush, engine.flush, lambda e: e, emb)
 
         new_state = {"emb": emb, "dense": dense2, "opt": opt2, "step": step2}
-        metrics = {"loss": loss_glob, "step": step2,
+        # global dense-gradient norm (g_dense_acc is already psum'd): the
+        # numeric health signal runtime.guard thresholds for spike rejection
+        grad_norm = jnp.sqrt(sum(jnp.vdot(g, g)
+                                 for g in jax.tree.leaves(g_dense_acc)))
+        metrics = {"loss": loss_glob, "step": step2, "grad_norm": grad_norm,
                    **{k: lax.psum(em_acc[k], axes) for k in engine.metric_keys}}
         return new_state, metrics
 
@@ -217,7 +229,7 @@ def make_train_step(model: WDLModel, plan: PicassoPlan, mesh, axes: Tuple[str, .
     dense0 = jax.eval_shape(lambda k: model.init_dense(k), jax.random.PRNGKey(0))
     opt0 = jax.eval_shape(adam_init, dense0)
     sspecs = state_specs(plan, axes, dense0, opt0)
-    mspecs = {"loss": P(), "step": P(),
+    mspecs = {"loss": P(), "step": P(), "grad_norm": P(),
               **{k: P() for k in engine.metric_keys}}
 
     def wrapped(state, batch):
@@ -238,7 +250,9 @@ def make_train_step(model: WDLModel, plan: PicassoPlan, mesh, axes: Tuple[str, .
             jit_kw["out_shardings"] = (
                 state_shardings(plan, mesh, axes, dense0, opt0, pin_l2=True),
                 to_named(mesh, mspecs))
-    step_fn = jax.jit(wrapped, donate_argnums=(0,), **jit_kw)
+    if donate:
+        jit_kw["donate_argnums"] = (0,)
+    step_fn = jax.jit(wrapped, **jit_kw)
     return step_fn, sspecs
 
 
